@@ -1,0 +1,228 @@
+"""Shared benchmark engine: train one (task x IOEmbedding) combination and
+report (score, train_time, eval_time) — the measurement behind every paper
+figure/table reproduction.
+
+Baseline (S_0) = identity encoding (m == d, k == 1 -> exact one-hot space),
+matching the paper's plain-network baseline.  All scores are reported as
+ratios S_i/S_0 like the paper.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_tasks import PAPER_TASKS, PaperTask
+from repro.core.alternatives import BloomIO, IOEmbedding
+from repro.data.pipeline import BatchIterator
+from repro.data import synthetic
+from repro.models import recommender as rec
+from repro.models import rnn
+from repro.optim import optimizers as opt_lib
+from repro.train import metrics as M
+
+
+@functools.lru_cache(maxsize=None)
+def task_data(name: str, scale: float = 1.0):
+    t = PAPER_TASKS[name]
+    n = max(int(t.n * scale), 300)
+    if t.kind == "recsys":
+        return synthetic.make_recsys(n=n, d=t.d, mean_items=t.mean_items,
+                                     seed=hash(name) % 2**31)
+    if t.kind == "classify":
+        return synthetic.make_classification(
+            n=n, d=t.d, n_classes=t.n_classes, mean_items=t.mean_items,
+            seed=hash(name) % 2**31)
+    return synthetic.make_sessions(n_sessions=n, d=t.d,
+                                   mean_len=t.mean_items,
+                                   seed=hash(name) % 2**31)
+
+
+def baseline_embedding(d: int) -> BloomIO:
+    """Identity encoding: the paper's no-embedding Baseline."""
+    return BloomIO.build(d=d, m=d, k=1, name="Baseline")
+
+
+# --------------------------------------------------------------------------
+# Feed-forward recommender tasks (ML / MSD / AMZ / BC)
+# --------------------------------------------------------------------------
+
+def run_recsys(task: PaperTask, emb: IOEmbedding, steps: int = 120,
+               seed: int = 0, scale: float = 1.0) -> Dict[str, float]:
+    data = task_data(task.name, scale)
+    key = jax.random.PRNGKey(seed)
+    params = rec.recommender_init(key, emb, list(task.arch_hidden))
+    tx = opt_lib.make_optimizer(task.optimizer, task.learning_rate,
+                                momentum=task.momentum,
+                                grad_clip_norm=task.grad_clip)
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, p, q):
+        def loss(pr):
+            return rec.recommender_loss(pr, emb, p, q)
+        g = jax.grad(loss)(params)
+        upd, opt_state2 = tx.update(g, opt_state, params)
+        return opt_lib.apply_updates(params, upd), opt_state2
+
+    it = BatchIterator(list(data.train()), task.batch, seed=seed)
+    p0, q0 = next(it)
+    params, opt_state = step(params, opt_state, jnp.asarray(p0),
+                             jnp.asarray(q0))  # compile warmup
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        p, q = next(it)
+        params, opt_state = step(params, opt_state, jnp.asarray(p),
+                                 jnp.asarray(q))
+    jax.block_until_ready(params)
+    train_time = time.perf_counter() - t0
+
+    p_te, q_te = data.test()
+    score_fn = jax.jit(lambda pr, p: rec.recommender_scores(pr, emb, p))
+    scores = np.asarray(score_fn(params, jnp.asarray(p_te)))  # warm
+    t0 = time.perf_counter()
+    scores = np.asarray(score_fn(params, jnp.asarray(p_te)))
+    eval_time = time.perf_counter() - t0
+    return {"score": M.mean_average_precision(scores, q_te, p_te),
+            "train_time": train_time, "eval_time": eval_time}
+
+
+# --------------------------------------------------------------------------
+# Classification task (CADE): input embedding only
+# --------------------------------------------------------------------------
+
+def run_classify(task: PaperTask, emb: IOEmbedding, steps: int = 120,
+                 seed: int = 0, scale: float = 1.0) -> Dict[str, float]:
+    p_all, labels, n_train, _ = task_data(task.name, scale)
+    key = jax.random.PRNGKey(seed)
+    params = rec.ff_init(key, emb.m_in, list(task.arch_hidden),
+                         task.n_classes)
+    tx = opt_lib.make_optimizer(task.optimizer, task.learning_rate)
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, p, y):
+        def loss(pr):
+            x = emb.encode_input(p)
+            logits = rec.ff_apply(pr, x)
+            from repro.core import losses
+            return losses.softmax_xent_label(logits, y).mean()
+        g = jax.grad(loss)(params)
+        upd, opt_state2 = tx.update(g, opt_state, params)
+        return opt_lib.apply_updates(params, upd), opt_state2
+
+    it = BatchIterator([p_all[:n_train], labels[:n_train]], task.batch,
+                       seed=seed)
+    p0, y0 = next(it)
+    params, opt_state = step(params, opt_state, jnp.asarray(p0),
+                             jnp.asarray(y0))
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        p, y = next(it)
+        params, opt_state = step(params, opt_state, jnp.asarray(p),
+                                 jnp.asarray(y))
+    jax.block_until_ready(params)
+    train_time = time.perf_counter() - t0
+
+    p_te, y_te = p_all[n_train:], labels[n_train:]
+    score_fn = jax.jit(
+        lambda pr, p: rec.ff_apply(pr, emb.encode_input(p)))
+    logits = np.asarray(score_fn(params, jnp.asarray(p_te)))
+    t0 = time.perf_counter()
+    logits = np.asarray(score_fn(params, jnp.asarray(p_te)))
+    eval_time = time.perf_counter() - t0
+    return {"score": M.accuracy(logits, y_te),
+            "train_time": train_time, "eval_time": eval_time}
+
+
+# --------------------------------------------------------------------------
+# Session tasks (YC GRU / PTB LSTM): next-item prediction
+# --------------------------------------------------------------------------
+
+def run_session(task: PaperTask, emb: IOEmbedding, steps: int = 120,
+                seed: int = 0, scale: float = 1.0) -> Dict[str, float]:
+    seqs, n_train = task_data(task.name, scale)
+    key = jax.random.PRNGKey(seed)
+    d_h = task.arch_hidden[0]
+    params = rnn.rnn_lm_init(key, task.cell, emb.m_in, d_h, emb.m_out)
+    tx = opt_lib.make_optimizer(task.optimizer, task.learning_rate,
+                                momentum=task.momentum,
+                                grad_clip_norm=task.grad_clip)
+    opt_state = tx.init(params)
+
+    def encode_seq(s):
+        # (B, T) item ids -> (B, T, m_in); -1 padded positions are zeros
+        return emb.encode_input(s[..., None])
+
+    @jax.jit
+    def step(params, opt_state, s):
+        x_in, tgt = s[:, :-1], s[:, 1:]
+        valid = (tgt >= 0) & (x_in >= 0)
+
+        def loss(pr):
+            x = encode_seq(x_in)
+            logits = rnn.rnn_lm_apply(pr, task.cell, x)
+            B, T, mo = logits.shape
+            per = emb.loss(logits.reshape(B * T, mo),
+                           tgt.reshape(B * T, 1))
+            return (per * valid.reshape(-1)).sum() / jnp.maximum(
+                valid.sum(), 1)
+
+        g = jax.grad(loss)(params)
+        upd, opt_state2 = tx.update(g, opt_state, params)
+        return opt_lib.apply_updates(params, upd), opt_state2
+
+    it = BatchIterator([seqs[:n_train]], task.batch, seed=seed)
+    (s0,) = next(it)
+    params, opt_state = step(params, opt_state, jnp.asarray(s0))
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        (s,) = next(it)
+        params, opt_state = step(params, opt_state, jnp.asarray(s))
+    jax.block_until_ready(params)
+    train_time = time.perf_counter() - t0
+
+    # eval: RR of the true next item after the penultimate position
+    test = seqs[n_train:]
+    lengths = (test >= 0).sum(1)
+    keep = lengths >= 2
+    test, lengths = test[keep], lengths[keep]
+    ctx = test.copy()
+    tgt = np.zeros(len(test), np.int64)
+    for i, L in enumerate(lengths):
+        tgt[i] = test[i, L - 1]
+        ctx[i, L - 1:] = -1
+
+    @jax.jit
+    def score_last(params, s, idx):
+        x = encode_seq(s)
+        hs = rnn.rnn_lm_apply(params, task.cell, x)
+        last = jnp.take_along_axis(
+            hs, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return emb.decode(last)
+
+    idx = jnp.asarray(lengths - 2)
+    scores = np.asarray(score_last(params, jnp.asarray(ctx), idx))
+    t0 = time.perf_counter()
+    scores = np.asarray(score_last(params, jnp.asarray(ctx), idx))
+    eval_time = time.perf_counter() - t0
+    return {"score": M.reciprocal_rank(scores, tgt),
+            "train_time": train_time, "eval_time": eval_time}
+
+
+RUNNERS: Dict[str, Callable] = {
+    "recsys": run_recsys,
+    "classify": run_classify,
+    "session": run_session,
+}
+
+
+def run_task(name: str, emb: IOEmbedding, steps: int = 120, seed: int = 0,
+             scale: float = 1.0) -> Dict[str, float]:
+    task = PAPER_TASKS[name]
+    return RUNNERS[task.kind](task, emb, steps=steps, seed=seed,
+                              scale=scale)

@@ -1,0 +1,72 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir: str = "experiments/dryrun", tag: str = "singlepod",
+               dense: bool = False):
+    rows = []
+    suffix = "__dense" if dense else ""
+    for path in sorted(glob.glob(os.path.join(
+            out_dir, f"*__{tag}{suffix}.json"))):
+        if not dense and path.endswith("__dense.json"):
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        rows.append(d)
+    return rows
+
+
+def fmt_table(rows, include_memory_analysis: bool = True):
+    header = ("| arch | shape | compute s | memory s | collective s | "
+              "dominant | step bound s | MODEL/HLO flops | temp GiB |")
+    sep = "|" + "---|" * 9
+    lines = [header, sep]
+    for d in rows:
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        temp = d.get("full", {}).get("memory", {}).get("temp_bytes", 0)
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s','')} | {r['step_time_s']:.4f} | "
+            f"{r['model_flops_ratio']:.3f} | {temp/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def fmt_multipod(rows):
+    header = "| arch | shape | mesh | temp GiB | args GiB | compile s |"
+    lines = [header, "|" + "---|" * 6]
+    for d in rows:
+        mem = d.get("full", {}).get("memory", {})
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{mem.get('temp_bytes', 0)/2**30:.2f} | "
+            f"{mem.get('argument_bytes', 0)/2**30:.2f} | "
+            f"{d.get('full', {}).get('compile_s', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    rows = load_cells()
+    out = []
+    for d in rows:
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        out.append({"bench": "roofline", "arch": d["arch"],
+                    "shape": d["shape"], "dominant": r["dominant"],
+                    "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                    "collective_s": r["collective_s"],
+                    "model_flops_ratio": r["model_flops_ratio"]})
+    return out
+
+
+if __name__ == "__main__":
+    print(fmt_table(load_cells()))
+    print()
+    print(fmt_multipod(load_cells(tag="multipod")))

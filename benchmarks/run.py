@@ -1,0 +1,95 @@
+"""Benchmark suite entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * paper-reproduction benches report score ratios (derived = S_i/S_0) and
+    train-time per step (us_per_call);
+  * kernel benches report the analytic TPU HBM-time model (us_per_call)
+    and max error vs the jnp oracle (derived);
+  * roofline rows report the dominant-term seconds (us_per_call) and
+    the MODEL_FLOPS/HLO_FLOPs ratio (derived).
+
+Full-budget run: PYTHONPATH=src python -m benchmarks.run
+Quick run:       PYTHONPATH=src python -m benchmarks.run --quick
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _csv(name, us, derived):
+    print(f"{name},{us:.2f},{derived:.4f}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig2,fig3,table3,"
+                         "table5,kernels,roofline")
+    args = ap.parse_args()
+    quick = args.quick
+    steps = 60 if quick else 150
+    scale = 0.35 if quick else 0.6
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("fig1"):
+        from benchmarks import bench_fig1_compression as f1
+        tasks = ("MSD",) if quick else ("MSD", "ML", "AMZ")
+        for row in f1.run(tasks=tasks, steps=steps, scale=scale):
+            _csv(f"fig1.{row['task']}.m{row['m_over_d']:.2f}",
+                 0.0, row["ratio"])
+
+    if want("fig2"):
+        from benchmarks import bench_fig2_hashes as f2
+        for row in f2.run(steps=steps, scale=scale):
+            _csv(f"fig2.{row['task']}.k{row['k']}", 0.0, row["ratio"])
+
+    if want("fig3"):
+        from benchmarks import bench_fig3_time as f3
+        for row in f3.run(steps=steps, scale=scale):
+            _csv(f"fig3.{row['task']}.m{row['m_over_d']:.2f}.train",
+                 1e6 * row["train_time"] / max(steps, 1),
+                 row["train_ratio"])
+            _csv(f"fig3.{row['task']}.m{row['m_over_d']:.2f}.eval",
+                 1e6 * row["eval_time"], row["eval_ratio"])
+
+    if want("table3"):
+        from benchmarks import bench_table3_alternatives as t3
+        points = ((("MSD", 0.1),) if quick
+                  else (("MSD", 0.1), ("MSD", 0.2), ("YC", 0.1)))
+        for row in t3.run(points=points, steps=steps, scale=scale):
+            _csv(f"table3.{row['task']}.m{row['m_over_d']:.2f}."
+                 f"{row['method'].replace(' ', '')}", 0.0, row["ratio"])
+
+    if want("table5"):
+        from benchmarks import bench_table5_cbe as t5
+        points = ((("MSD", 0.1),) if quick
+                  else (("MSD", 0.1), ("MSD", 0.3), ("AMZ", 0.2)))
+        for row in t5.run(points=points, steps=steps, scale=scale):
+            _csv(f"table5.{row['task']}.m{row['m_over_d']:.2f}.BE",
+                 0.0, row["be_ratio"])
+            _csv(f"table5.{row['task']}.m{row['m_over_d']:.2f}.CBE",
+                 0.0, row["cbe_ratio"])
+
+    if want("kernels"):
+        from benchmarks import bench_kernels as bk
+        for row in bk.run(quick=quick):
+            _csv(f"kernels.{row['name']}", row["tpu_us_model"],
+                 row["max_err"])
+
+    if want("roofline"):
+        from benchmarks import roofline_table as rt
+        for row in rt.run():
+            _csv(f"roofline.{row['arch']}.{row['shape']}",
+                 1e6 * max(row["compute_s"], row["memory_s"],
+                           row["collective_s"]),
+                 row["model_flops_ratio"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + autoregressive decode with the
+paper's Eq. 3 vocabulary recovery at every step.
+
+Any assigned architecture works (--arch mamba2-1.3b serves the SSM with
+O(1) decode state; --arch jamba-v0.1-52b the hybrid; reduced smoke configs
+by default so it runs on CPU).
+
+Run:  PYTHONPATH=src python examples/serve_bloom_lm.py --arch qwen3-4b
+"""
+import argparse
+
+from repro import configs
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b",
+                    choices=list(configs.ARCH_NAMES))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+        gen=args.gen)
+
+
+if __name__ == "__main__":
+    main()

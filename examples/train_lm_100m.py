@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter Bloom-IO LM for a few
+hundred steps on a synthetic Zipf token stream.
+
+The model is a qwen-style decoder (12L, d_model=768, GQA 12/4) with the
+paper's technique at the IO boundary: vocab 50,304 compressed to m=10,240
+(m/d ~= 0.2, k=4).  Checkpoint/resume, LR schedule, grad clipping — the
+full production train loop at laptop scale.
+
+Run:  PYTHONPATH=src python examples/train_lm_100m.py \
+          [--steps 300] [--ckpt /tmp/ckpt_100m]
+"""
+import argparse
+import dataclasses
+
+from repro import configs
+from repro.configs.base import BloomConfig, ModelConfig
+from repro.launch import train as train_driver
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="bloom-lm-100m",
+        family="dense",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab=50_304,
+        dtype="float32",          # CPU example; bf16 on TPU
+        attn_chunk_q=64,
+        attn_chunk_k=64,
+        remat="none",
+        bloom=BloomConfig(enabled=True, m_ratio=0.2, k=4),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/ckpt_bloom_lm_100m")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    print(f"model: {cfg.param_count()/1e6:.0f}M params "
+          f"(dense-IO equivalent: "
+          f"{dataclasses.replace(cfg, bloom=BloomConfig(enabled=False)).param_count()/1e6:.0f}M) "
+          f"m_vocab={cfg.m_vocab} of vocab={cfg.vocab}")
+
+    # monkey-patch the arch registry so the driver picks up our config
+    configs.ARCH_MODULES["bloom-lm-100m"] = type(
+        "M", (), {"ARCH": "bloom-lm-100m",
+                  "config": staticmethod(lambda bloom=True: cfg),
+                  "smoke": staticmethod(lambda: cfg)})
+    params, history = train_driver.run(
+        "bloom-lm-100m", steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt, log_every=10, learning_rate=6e-4)
+    if history:
+        print(f"loss: {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f} "
+              f"over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Paper headline at LM scale: Bloom IO vs dense IO for qwen3-4b train_4k
+on the optimized mesh — compression of the vocab boundary vs step cost."""
+from repro.launch.dryrun import run_cell
+
+for bloom in (True, False):
+    res = run_cell("qwen3-4b", "train_4k", bloom=bloom,
+                   overrides={"causal_skip": True}, mesh_shape=(32, 8),
+                   tag="cmp", out_dir="experiments/perf",
+                   optimizer="adafactor")
+    r = res["roofline"]
+    m = res["full"]["memory"]
+    print(f"bloom={bloom} params={res['param_count'] / 1e9:.2f}B "
+          f"bound={r['step_time_s']:.4f}s compute={r['compute_s']:.4f} "
+          f"memory={r['memory_s']:.4f} coll={r['collective_s']:.4f} "
+          f"args={m['argument_bytes'] / 2**30:.2f}GiB "
+          f"temp={m['temp_bytes'] / 2**30:.2f}GiB", flush=True)

@@ -1,0 +1,28 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Decode cells re-run at TP=16 (mesh 16x16): decode is weight-bandwidth
+bound, so it wants the THINNEST weight shards (max TP) — the opposite of
+training (§Perf finding: per-shape mesh selection).  Code-level wins
+(one-shot bf16 weight cast halves decode weight reads) still apply."""
+import time
+import traceback
+
+from repro import configs
+from repro.launch.dryrun import run_cell
+
+for arch, shape, ok, _ in configs.all_cells():
+    if not ok or "decode" not in shape and shape != "long_500k":
+        continue
+    t0 = time.perf_counter()
+    try:
+        res = run_cell(arch, shape, mesh_shape=(16, 16), tag="opt",
+                       out_dir="experiments/dryrun_opt_decode")
+        r = res.get("roofline", {})
+        print(f"OK  {arch:18s} {shape:12s} "
+              f"bound={r.get('step_time_s', 0):.4f}s "
+              f"[{time.perf_counter()-t0:.0f}s]", flush=True)
+    except Exception as e:  # noqa
+        print(f"FAIL {arch} {shape}: {e}", flush=True)
+        traceback.print_exc()
+print("done")

@@ -1,0 +1,153 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §6):
+  * atomic: write to a tmp dir, fsync, then os.rename — a crash mid-write
+    never corrupts the latest valid checkpoint;
+  * self-describing: pytree structure stored as a path->array npz plus a
+    JSON manifest (step, timestamp, aux state such as the data-iterator
+    cursor);
+  * keep-N garbage collection;
+  * async: an optional background thread does the serialization so the
+    train loop is not blocked (device->host copy happens synchronously,
+    which is the correctness boundary);
+  * elastic: arrays are saved unsharded (host RAM), so a restore may apply
+    ANY NamedSharding — resuming on a different mesh shape re-shards for
+    free (world-size changes after node failure).
+  * restore scans newest->oldest and skips corrupt/partial checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs template "
+                f"{leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_write: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None,
+             block: bool = True):
+        """Persist `state` (any pytree) + small JSON-able `extra` dict."""
+        state = jax.tree.map(lambda x: np.asarray(x), state)  # host copy
+        self.wait()  # never two concurrent writers (same-step race)
+        if self.async_write and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, state, extra), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, state, extra)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, state, extra):
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {"step": step, "time": time.time(),
+                    "extra": extra or {}, "n_arrays": len(flat)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore_latest(self, template, sharding=None):
+        """Restore the newest *valid* checkpoint into `template`'s
+        structure.  Returns (state, step, extra) or (None, -1, {}).
+
+        `sharding`: optional pytree (or single sharding) applied via
+        jax.device_put — this is the elastic re-shard path.
+        """
+        for step in reversed(self.all_steps()):
+            try:
+                return (*self._load(step, template, sharding), )
+            except Exception:
+                continue
+        return None, -1, {}
+
+    def _load(self, step: int, template, sharding):
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        if len(flat) != manifest["n_arrays"]:
+            raise IOError("truncated checkpoint")
+        state = _unflatten(template, flat)
+        if sharding is not None:
+            if jax.tree_util.treedef_is_leaf(
+                    jax.tree_util.tree_structure(sharding)):
+                state = jax.device_put(state, sharding)
+            else:
+                state = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), state, sharding)
+        return state, step, manifest.get("extra", {})

@@ -1,0 +1,131 @@
+"""Config registry: the 10 assigned architectures (+ reduced smoke
+variants), the 4 input-shape cells, the paper's 7 tasks, and the
+input_specs() stand-ins used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    deepseek_moe_16b,
+    granite_8b,
+    jamba_v0_1_52b,
+    mamba2_1_3b,
+    olmoe_1b_7b,
+    paper_tasks,
+    phi3_mini_3_8b,
+    pixtral_12b,
+    qwen1_5_0_5b,
+    qwen3_4b,
+    whisper_small,
+)
+from repro.configs.base import (  # noqa: F401
+    BloomConfig,
+    MambaConfig,
+    MeshConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPES,
+    SHAPE_BY_NAME,
+    ShapeConfig,
+    TrainConfig,
+)
+
+_MODULES = (
+    pixtral_12b,
+    phi3_mini_3_8b,
+    granite_8b,
+    qwen3_4b,
+    qwen1_5_0_5b,
+    whisper_small,
+    deepseek_moe_16b,
+    olmoe_1b_7b,
+    jamba_v0_1_52b,
+    mamba2_1_3b,
+)
+
+ARCH_MODULES: Dict[str, object] = {m.ARCH: m for m in _MODULES}
+ARCH_NAMES = tuple(ARCH_MODULES)
+PAPER_TASKS = paper_tasks.PAPER_TASKS
+
+
+def get_config(arch: str, bloom: bool = True, **overrides) -> ModelConfig:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_NAMES}")
+    cfg = ARCH_MODULES[arch].config(bloom=bloom)
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke_config(arch: str, **overrides) -> ModelConfig:
+    cfg = ARCH_MODULES[arch].smoke()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+# --------------------------------------------------------------------------
+# Cell grid: which (arch x shape) pairs run (DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig
+                     ) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic context cost; only ssm/hybrid run it."""
+    if shape.name == "long_500k" and cfg.has_full_attention:
+        return False, ("skip: full quadratic attention at 524k context "
+                       "(documented in DESIGN.md §5)")
+    return True, ""
+
+
+def all_cells():
+    """Yield (arch, shape, runnable, reason) for the 40-cell grid."""
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_is_runnable(cfg, shape)
+            yield arch, shape.name, ok, reason
+
+
+# --------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (no allocation) per cell
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, object]:
+    """Model inputs for one cell as ShapeDtypeStructs.
+
+    train/prefill: token (and stub-embedding) sequences.
+    decode: one new token; caches are produced by cache_specs() below.
+
+    Frontend conventions (DESIGN.md §5): vlm reserves frontend_frac of the
+    sequence for patch embeddings; audio uses seq_len encoder frames and
+    seq_len//4 decoder tokens.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.bfloat16
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), i32)}
+    if cfg.family == "vlm":
+        s_img = int(S * cfg.frontend_frac)
+        return {"tokens": _sds((B, S - s_img), i32),
+                "embeds": _sds((B, s_img, cfg.d_model), f32)}
+    if cfg.family == "audio":
+        return {"tokens": _sds((B, max(S // 4, 16)), i32),
+                "embeds": _sds((B, S, cfg.d_model), f32)}
+    return {"tokens": _sds((B, S), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models import encdec as encdec_lib
+    from repro.models import transformer as tf
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        enc_len = 1500  # whisper's 30 s of frames
+        return jax.eval_shape(
+            lambda: encdec_lib.init_encdec_cache(cfg, B, S, enc_len))
+    return jax.eval_shape(lambda: tf.init_lm_cache(cfg, B, S))

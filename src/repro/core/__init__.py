@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — Bloom embeddings for sparse binary IO.
+
+Public API:
+  hashing          — double hashing + precomputed hash matrices
+  BloomSpec        — static spec of one Bloom-compressed IO boundary
+  encode / decode_scores / decode_topk / recover_probabilities
+  losses           — bloom softmax-CE (label / multilabel), cosine
+  cbe              — co-occurrence-based hash matrices (Alg. 1)
+  alternatives     — HT / ECOC / PMI / CCA baselines + IOEmbedding interface
+"""
+from repro.core import hashing, cbe, losses, alternatives  # noqa: F401
+from repro.core.bloom import (  # noqa: F401
+    BloomSpec,
+    identity_spec,
+    encode,
+    encode_dense,
+    decode_scores,
+    decode_topk,
+    recover_probabilities,
+)

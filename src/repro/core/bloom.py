@@ -1,0 +1,198 @@
+"""Bloom embeddings (paper Sec. 3.2): encode, recover, and module helpers.
+
+Terminology follows the paper:
+  d  — original (vocab / item-catalogue) dimensionality,
+  m  — embedding dimensionality, m < d,
+  k  — number of hash projections,
+  p  — the set of active positions of a sparse instance x (padded, mask -1),
+  u  — the Bloom-encoded binary vector, u[H_j(p_i)] = 1        (Eq. 1),
+  v̂  — the model's m-dim softmax output,
+  L(q_i) = prod_j v̂[H_j(q_i)]   (Eq. 2)  /  -sum_j log v̂[..]   (Eq. 3).
+
+Everything here is pure jnp (the oracle path).  The Pallas fast path lives
+in repro.kernels and is numerically checked against these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomSpec:
+    """Static description of one Bloom-embedded IO boundary."""
+
+    d: int                    # original dimensionality (vocab size)
+    m: int                    # compressed dimensionality
+    k: int = 4                # number of hash projections (paper: 2..4 best)
+    seed: int = 0
+    on_the_fly: bool = True   # double-hash in-graph vs precomputed H matrix
+
+    def __post_init__(self):
+        if not (0 < self.m <= self.d):
+            raise ValueError(f"need 0 < m <= d, got m={self.m} d={self.d}")
+        if not (1 <= self.k <= self.m):
+            raise ValueError(f"need 1 <= k <= m, got k={self.k} m={self.m}")
+
+    @property
+    def compression(self) -> float:
+        return self.m / self.d
+
+    def hash_matrix(self) -> jnp.ndarray:
+        """(d, k) int32 hash matrix (paper's RAM-cached mode)."""
+        return hashing.make_hash_matrix(self.d, self.k, self.m, self.seed)
+
+    def indices_for(self, ids: jnp.ndarray,
+                    hash_matrix: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """ids (...,) -> (..., k) hash indices in [0, m)."""
+        if self.m == self.d and self.k == 1 and hash_matrix is None:
+            # no-compression spec: the identity map (the paper's Baseline)
+            return ids[..., None].astype(jnp.int32)
+        if hash_matrix is None and not self.on_the_fly:
+            hash_matrix = self.hash_matrix()
+        return hashing.hash_indices(ids, k=self.k, m=self.m, seed=self.seed,
+                                    hash_matrix=hash_matrix)
+
+
+def identity_spec(d: int) -> BloomSpec:
+    """No-compression spec (m == d, k == 1) — the paper's Baseline."""
+    return BloomSpec(d=d, m=d, k=1)
+
+
+# --------------------------------------------------------------------------
+# Encoding (Eq. 1)
+# --------------------------------------------------------------------------
+
+def encode(spec: BloomSpec, p: jnp.ndarray,
+           hash_matrix: Optional[jnp.ndarray] = None,
+           dtype=jnp.float32) -> jnp.ndarray:
+    """Bloom-encode padded index sets into multi-hot vectors.
+
+    p: (..., c_max) int32, padding = -1.  Returns (..., m) in `dtype` with
+    u[H_j(p_i)] = 1 for every valid p_i and projection j.  Binary (set, not
+    add) semantics, exactly Eq. 1.
+    """
+    valid = p >= 0
+    idx = spec.indices_for(jnp.where(valid, p, 0), hash_matrix)  # (..., c, k)
+    flat = idx.reshape(*p.shape[:-1], -1)
+    mask = jnp.repeat(valid, spec.k, axis=-1).reshape(flat.shape)
+    u = jnp.zeros((*p.shape[:-1], spec.m), dtype=dtype)
+    # scatter 1s; `max` keeps binary semantics under collisions.
+    return u.at[..., flat].max(mask.astype(dtype)) if p.ndim == 1 else \
+        _batched_scatter(u, flat, mask, dtype)
+
+
+def _batched_scatter(u, flat, mask, dtype):
+    def one(u_row, f_row, m_row):
+        return u_row.at[f_row].max(m_row.astype(dtype))
+    for _ in range(flat.ndim - 2):
+        one = jax.vmap(one)
+    return jax.vmap(one)(u, flat, mask)
+
+
+def encode_dense(spec: BloomSpec, x: jnp.ndarray,
+                 hash_matrix: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Encode dense binary instances (..., d) -> (..., m).
+
+    Oracle-only path (materializes d); production uses `encode` on index
+    sets.  u_i = max over original positions hashing to i.
+    """
+    if hash_matrix is None:
+        hash_matrix = spec.hash_matrix() if not spec.on_the_fly else \
+            spec.indices_for(jnp.arange(spec.d))
+    hm = hash_matrix  # (d, k)
+    onehot = jax.nn.one_hot(hm, spec.m, dtype=x.dtype)      # (d, k, m)
+    proj = jnp.einsum("...d,dkm->...m", x, onehot)
+    return jnp.minimum(proj, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Recovery (Eqs. 2 & 3)
+# --------------------------------------------------------------------------
+
+def decode_scores(spec: BloomSpec, log_v: jnp.ndarray,
+                  hash_matrix: Optional[jnp.ndarray] = None,
+                  item_ids: Optional[jnp.ndarray] = None,
+                  chunk: int = 8192) -> jnp.ndarray:
+    """Eq. 3 ranking scores over original items.
+
+    log_v: (..., m) log-probabilities (e.g. log_softmax of model logits).
+    Returns (..., d) scores where scores[i] = sum_j log_v[H_j(i)] — larger is
+    better; identical ranking to the Eq. 2 product likelihood.
+
+    Memory-safe: chunks the item axis so we never materialize (..., d, k)
+    for huge d.  `item_ids` restricts scoring to a subset (e.g. candidates).
+    """
+    if item_ids is not None:
+        idx = spec.indices_for(item_ids, hash_matrix)         # (n, k)
+        return jnp.take(log_v, idx, axis=-1).sum(-1)
+
+    d = spec.d
+    n_chunks = -(-d // chunk)
+    pad_d = n_chunks * chunk
+    ids = jnp.arange(pad_d, dtype=jnp.int32).reshape(n_chunks, chunk)
+
+    def body(carry, ids_c):
+        idx = spec.indices_for(jnp.minimum(ids_c, d - 1), hash_matrix)
+        return carry, jnp.take(log_v, idx, axis=-1).sum(-1)
+
+    _, out = jax.lax.scan(body, None, ids)                    # (nc, ..., chunk)
+    out = jnp.moveaxis(out, 0, -2).reshape(*log_v.shape[:-1], pad_d)
+    return out[..., :d]
+
+
+def decode_topk(spec: BloomSpec, log_v: jnp.ndarray, topk: int,
+                hash_matrix: Optional[jnp.ndarray] = None,
+                chunk: int = 8192, unroll: bool = False):
+    """Top-k item recovery without materializing all d scores at once.
+
+    Streaming top-k merge over vocab chunks; returns (values, indices) of
+    shape (..., topk).
+    """
+    d = spec.d
+    n_chunks = -(-d // chunk)
+    pad_d = n_chunks * chunk
+    ids = jnp.arange(pad_d, dtype=jnp.int32).reshape(n_chunks, chunk)
+    neg = jnp.asarray(-jnp.inf, log_v.dtype)
+
+    init_v = jnp.full((*log_v.shape[:-1], topk), neg, log_v.dtype)
+    init_i = jnp.full((*log_v.shape[:-1], topk), -1, jnp.int32)
+
+    def body(carry, ids_c):
+        best_v, best_i = carry
+        idx = spec.indices_for(jnp.minimum(ids_c, d - 1), hash_matrix)
+        s = jnp.take(log_v, idx, axis=-1).sum(-1)            # (..., chunk)
+        s = jnp.where(ids_c < d, s, neg)
+        cat_v = jnp.concatenate([best_v, s], axis=-1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids_c, s.shape).astype(jnp.int32)], -1)
+        v, sel = jax.lax.top_k(cat_v, topk)
+        i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        return (v, i), None
+
+    if unroll:
+        carry = (init_v, init_i)
+        for c in range(n_chunks):
+            carry, _ = body(carry, ids[c])
+        return carry
+    (v, i), _ = jax.lax.scan(body, (init_v, init_i), ids)
+    return v, i
+
+
+def recover_probabilities(spec: BloomSpec, v_hat: jnp.ndarray,
+                          hash_matrix: Optional[jnp.ndarray] = None,
+                          eps: float = 1e-30) -> jnp.ndarray:
+    """Eq. 2 likelihoods, renormalized to a distribution over d items.
+
+    The paper skips renormalization (ranking tasks); provided for users that
+    need calibrated probabilities.  Oracle path — materializes (..., d).
+    """
+    log_v = jnp.log(jnp.clip(v_hat, eps, 1.0))
+    scores = decode_scores(spec, log_v, hash_matrix)
+    return jax.nn.softmax(scores, axis=-1)

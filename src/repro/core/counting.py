@@ -1,0 +1,83 @@
+"""Counting Bloom embeddings — the paper's own 'future work' (Sec. 7):
+
+  "one could enhance the proposed approach by considering further
+   extensions of Bloom filters such as counting Bloom filters. In theory,
+   those extensions could provide a more compact representation by
+   breaking the binary nature of the embedding."
+
+Implementation (beyond-paper extension): the encoding counts how many
+(item, projection) pairs land on each bit instead of saturating at 1 —
+u[i] = #{(p, j) : H_j(p) = i} — and the training target becomes the
+normalized count distribution.  Recovery stays Eq. 3 (the count encoding
+only changes the *target*; the model's softmax output is unchanged), so
+serving code is identical — exactly the property the paper asks for.
+
+When does it help?  With binary encoding, two items colliding on a bit
+contribute the same mass as one item; the count target keeps the lost
+multiplicity, so the gradient 'knows' a bit is doubly loaded.  For the
+LM case (single-label), counts matter when k-hash self-collisions occur
+(rare) — counting is primarily a multi-label recommender feature.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.bloom import BloomSpec, decode_scores
+
+
+def encode_counting(spec: BloomSpec, p: jnp.ndarray,
+                    hash_matrix: Optional[jnp.ndarray] = None,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Count-valued Bloom encoding: u[i] = multiplicity of bit i.
+
+    p: (..., c_max) padded item ids (-1 = pad) -> (..., m) counts.
+    """
+    valid = p >= 0
+    idx = spec.indices_for(jnp.where(valid, p, 0), hash_matrix)
+    flat = idx.reshape(*p.shape[:-1], -1)
+    mask = jnp.repeat(valid, spec.k, axis=-1).reshape(flat.shape)
+
+    def one(f_row, m_row):
+        return jnp.zeros((spec.m,), dtype).at[f_row].add(
+            m_row.astype(dtype))
+
+    fn = one
+    for _ in range(flat.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(flat, mask)
+
+
+def counting_xent_multilabel(spec: BloomSpec, logits: jnp.ndarray,
+                             targets: jnp.ndarray,
+                             hash_matrix: Optional[jnp.ndarray] = None
+                             ) -> jnp.ndarray:
+    """CE against the normalized COUNT distribution (vs the paper's
+    binary multi-hot): collisions keep their multiplicity."""
+    u = encode_counting(spec, targets, hash_matrix)
+    mass = jnp.clip(u.sum(-1, keepdims=True), 1e-9, None)
+    return losses.softmax_xent_dense(logits, u / mass)
+
+
+class CountingBloomIO:
+    """IOEmbedding-compatible counting variant (drop-in for BloomIO)."""
+
+    def __init__(self, d: int, m: int, k: int = 4, seed: int = 0):
+        self.name = "CBE-count"
+        self.d, self.m_in, self.m_out = d, m, m
+        self.spec_in = BloomSpec(d=d, m=m, k=k, seed=seed)
+        self.spec_out = BloomSpec(d=d, m=m, k=k, seed=seed + 1)
+
+    def encode_input(self, p):
+        # counting inputs carry multiplicity into the first layer too
+        return encode_counting(self.spec_in, p)
+
+    def loss(self, pred, q):
+        return counting_xent_multilabel(self.spec_out, pred, q)
+
+    def decode(self, pred):
+        logp = jax.nn.log_softmax(pred, axis=-1)
+        return decode_scores(self.spec_out, logp)

@@ -1,0 +1,152 @@
+"""Hash-function substrate for Bloom embeddings.
+
+The paper (Sec. 3.1/3.2) requires k independent hash functions H = {H_j},
+each mapping item ids [0, d) -> [0, m).  Two interchangeable realizations:
+
+1. **On-the-fly enhanced double hashing** (Dillinger & Manolios 2004, cited
+   by the paper):  ``h_j(x) = (a(x) + j*b(x) + (j^3 - j)/6) mod m`` with
+   ``a, b`` derived from a strong integer mixer.  O(1) space, O(k) time,
+   jit-compatible — this is the paper's "no disk or memory space" mode.
+
+2. **Precomputed hash matrix** ``H`` of shape (d, k) — the paper's
+   "pre-generate all projections for all d items ... d x k matrix of
+   integers between 1 and m" mode.  We add a vectorized within-row
+   de-duplication pass (the paper draws without replacement); any residual
+   duplicate after the repair rounds is a benign Bloom collision.
+
+All arithmetic is uint32 with wraparound, so everything runs identically
+under jit on CPU/TPU without x64.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_MIX1 = np.uint32(0x85EBCA6B)
+_MIX2 = np.uint32(0xC2B2AE35)
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """SplitMix finalizer — a high-quality 32-bit integer mixer.
+
+    Accepts any integer dtype; returns uint32 uniformly mixed bits.
+    """
+    z = x.astype(jnp.uint32) + _GOLDEN
+    z = (z ^ (z >> 16)) * _MIX1
+    z = (z ^ (z >> 13)) * _MIX2
+    z = z ^ (z >> 16)
+    return z
+
+
+def _salted(ids: jnp.ndarray, salt: int | jnp.ndarray) -> jnp.ndarray:
+    """Mix item ids with a salt; different salts give independent streams."""
+    s = jnp.asarray(salt, dtype=jnp.uint32)
+    return splitmix32(ids.astype(jnp.uint32) ^ splitmix32(s))
+
+
+def double_hash(
+    ids: jnp.ndarray,
+    k: int,
+    m: int,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """Enhanced double hashing: k indices in [0, m) per id.
+
+    h_j = (h1 + j*h2 + (j^3 - j)/6) mod m, with h2 forced odd/nonzero so the
+    probe sequence cycles through residues.  Returns shape ids.shape + (k,)
+    int32.  Negative ids (padding) hash like their bit pattern — callers
+    mask them out themselves.
+    """
+    h1 = _salted(ids, 2 * seed) % np.uint32(m)
+    h2 = _salted(ids, 2 * seed + 1) % np.uint32(max(m - 1, 1)) + np.uint32(1)
+    j = jnp.arange(k, dtype=jnp.uint32)
+    # (j^3 - j)/6 is integral for all j; precompute host-side.
+    tri = jnp.asarray([(int(v) ** 3 - int(v)) // 6 % m for v in range(k)],
+                      dtype=jnp.uint32)
+    h = (h1[..., None] + j * h2[..., None] + tri) % np.uint32(m)
+    return h.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _hash_matrix_impl(d: int, k: int, m: int, seed: int, repair_rounds: int):
+    ids = jnp.arange(d, dtype=jnp.uint32)
+    h = double_hash(ids, k, m, seed)  # (d, k)
+
+    for r in range(repair_rounds):  # static unroll — repair_rounds is tiny
+        # dup[j] = True iff h[j] equals some h[i], i < j (within the row).
+        eq = h[:, :, None] == h[:, None, :]              # (d, k, k)
+        lower = jnp.tril(jnp.ones((k, k), bool), k=-1)   # i < j
+        dup = jnp.any(eq & lower[None, :, :].transpose(0, 2, 1), axis=-1)
+        fresh = double_hash(ids + np.uint32((r + 1) * 0x1000_0003), k, m,
+                            seed + 7919 * (r + 1))
+        h = jnp.where(dup, fresh, h)
+    return h.astype(jnp.int32)
+
+
+def make_hash_matrix(
+    d: int,
+    k: int,
+    m: int,
+    seed: int = 0,
+    repair_rounds: int = 4,
+) -> jnp.ndarray:
+    """Precompute the paper's (d, k) hash matrix H of indices in [0, m).
+
+    Rows are de-duplicated with `repair_rounds` vectorized redraw passes;
+    residual within-row duplicates have probability ~(k^2/2m)^rounds and are
+    benign (they only weaken one item's Bloom code slightly).
+    """
+    if m <= 0 or d <= 0 or k <= 0:
+        raise ValueError(f"d, k, m must be positive; got {d=} {k=} {m=}")
+    if k > m:
+        raise ValueError(f"k ({k}) cannot exceed m ({m})")
+    return _hash_matrix_impl(d, k, m, seed, repair_rounds)
+
+
+def make_hash_matrix_np(d: int, k: int, m: int, seed: int = 0,
+                        strict: bool = True) -> np.ndarray:
+    """NumPy hash matrix with *guaranteed* distinct entries per row.
+
+    Used by CBE (host-side preprocessing) and by tests as an oracle.  Loops
+    only over residual collisions, so it is fast for realistic (d, k, m).
+    """
+    if k > m:
+        raise ValueError(f"k ({k}) cannot exceed m ({m})")
+    rng = np.random.default_rng(seed)
+    h = rng.integers(0, m, size=(d, k), dtype=np.int64)
+    if strict:
+        for _ in range(64):
+            srt = np.sort(h, axis=1)
+            bad_rows = np.nonzero((srt[:, 1:] == srt[:, :-1]).any(axis=1))[0]
+            if bad_rows.size == 0:
+                break
+            h[bad_rows] = rng.integers(0, m, size=(bad_rows.size, k))
+        else:  # pragma: no cover - probabilistically unreachable
+            for r in np.nonzero(
+                (np.sort(h, 1)[:, 1:] == np.sort(h, 1)[:, :-1]).any(1))[0]:
+                h[r] = rng.choice(m, size=k, replace=False)
+    return h.astype(np.int32)
+
+
+def hash_indices(
+    ids: jnp.ndarray,
+    *,
+    k: int,
+    m: int,
+    seed: int = 0,
+    hash_matrix: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Unified lookup: per-id k hash indices, from H if given else on-the-fly.
+
+    ids: int array, any shape; returns ids.shape + (k,) int32 in [0, m).
+    Negative ids are clamped to 0 for the matrix path — callers must mask.
+    """
+    if hash_matrix is not None:
+        safe = jnp.clip(ids, 0, hash_matrix.shape[0] - 1)
+        return jnp.take(hash_matrix, safe, axis=0)
+    return double_hash(ids, k, m, seed)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's IO hot spots (+ ops/ref).
+
+  bloom_embed  — k-way gather-sum embedding lookup (HBM-bandwidth bound)
+  bloom_ce     — fused m-softmax CE against the k-hot Bloom target
+  bloom_decode — Eq. 3 vocabulary recovery gather-reduce
+
+Validated in interpret mode against ref.py oracles (tests/test_kernels*).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused Bloom softmax cross-entropy (paper's training
+loss in the compressed m-space).
+
+loss[t] = logsumexp(z[t, :]) - (1/k) * sum_{j<k} z[t, h[t, j]]
+
+Fusing the logsumexp with the k-gather means the m-dim logits row is read
+from HBM exactly once (the unfused path reads it three times: max, exp-sum,
+gather).  The row fits VMEM for every assigned config (m <= ~38k fp32).
+
+  grid = (nT,)
+  z    — block (Tt, m) at (t, 0)
+  h    — block (Tt, k) at (t, 0)
+  out  — block (Tt,)   at (t,)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(z_ref, h_ref, out_ref):
+    z = z_ref[...].astype(jnp.float32)             # (Tt, m)
+    h = h_ref[...]                                 # (Tt, k)
+    zmax = z.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z - zmax), axis=-1)) + zmax[:, 0]
+    picked = jnp.take_along_axis(z, h, axis=-1)    # (Tt, k)
+    out_ref[...] = lse - picked.mean(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
+def bloom_ce_pallas(logits: jnp.ndarray, h_idx: jnp.ndarray,
+                    t_tile: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """logits (T, m); h_idx (T, k) int32 -> per-token loss (T,) float32."""
+    T, m = logits.shape
+    k = h_idx.shape[1]
+    t_tile = min(t_tile, T)
+    pad_t = (-T) % t_tile
+    if pad_t:
+        logits = jnp.pad(logits, ((0, pad_t), (0, 0)))
+        h_idx = jnp.pad(h_idx, ((0, pad_t), (0, 0)))
+    Tp = T + pad_t
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Tp // t_tile,),
+        in_specs=[
+            pl.BlockSpec((t_tile, m), lambda t: (t, 0)),
+            pl.BlockSpec((t_tile, k), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_tile,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        interpret=interpret,
+    )(logits, h_idx)
+    return out[:T]

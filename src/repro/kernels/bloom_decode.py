@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: Bloom vocabulary recovery (paper Eq. 3).
+
+scores[b, i] = sum_{j<k} logp[b, H[i, j]]
+
+TPU mapping: the m-dim log-prob row is small (m = d/5 of a 152k vocab is
+~30k fp32 = 120 KB) and is kept WHOLE in VMEM per batch tile, so the
+per-item k-gather runs at VMEM bandwidth while the vocab axis streams
+through the grid.  This inverts the GPU formulation (random HBM access)
+into sequential-HBM + random-VMEM — the memory-hierarchy adaptation of
+DESIGN.md §4.
+
+  grid = (nB, nV)
+  logp — block (Bt, m)  at (b, 0)  (revisited across the vocab axis; Pallas
+         keeps it resident in VMEM between consecutive grid steps)
+  H    — block (Vt, k)  at (v, 0)
+  out  — block (Bt, Vt) at (b, v)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logp_ref, h_ref, out_ref):
+    logp = logp_ref[...].astype(jnp.float32)       # (Bt, m)
+    h = h_ref[...]                                 # (Vt, k)
+    k = h.shape[1]
+    acc = jnp.take(logp, h[:, 0], axis=1)          # (Bt, Vt)
+    for j in range(1, k):
+        acc = acc + jnp.take(logp, h[:, j], axis=1)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_tile", "v_tile", "interpret"))
+def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
+                        b_tile: int = 8, v_tile: int = 2048,
+                        interpret: bool = True) -> jnp.ndarray:
+    """logp (B, m) float; H (d, k) int32 -> scores (B, d) float32."""
+    B, m = logp.shape
+    d, k = H.shape
+    b_tile = min(b_tile, B)
+    v_tile = min(v_tile, d)
+    pad_b = (-B) % b_tile
+    pad_v = (-d) % v_tile
+    if pad_b:
+        logp = jnp.pad(logp, ((0, pad_b), (0, 0)))
+    if pad_v:
+        H = jnp.pad(H, ((0, pad_v), (0, 0)))
+    Bp, dp = B + pad_b, d + pad_v
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Bp // b_tile, dp // v_tile),
+        in_specs=[
+            pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
+            pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_tile, v_tile), lambda b, v: (b, v)),
+        out_shape=jax.ShapeDtypeStruct((Bp, dp), jnp.float32),
+        interpret=interpret,
+    )(logp, H)
+    return out[:B, :d]

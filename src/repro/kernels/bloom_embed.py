@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: Bloom k-way gather-sum embedding lookup.
+
+out[t, :] = sum_{j<k} table[idx[t, j], :]
+
+TPU mapping (DESIGN.md §4): the op is HBM-bandwidth-bound (k rows of D
+floats per token, no MXU work), so the kernel streams one token's k rows
+per grid step through VMEM, tiled over d_model lanes:
+
+  grid  = (T, nD)            — token-major so each row tile is copied
+                               HBM->VMEM exactly once per (token, j)
+  table — k BlockSpecs (one per hash projection, k is small and static),
+          each selecting row idx[t, j] via the scalar-prefetched index
+          array: block (1, Dt) at (idx_ref[t, j], dt).
+  out   — block (1, Dt) at (t, dt); the k VMEM blocks are summed in-register.
+
+The scalar prefetch (PrefetchScalarGridSpec) lets the DMA engine issue the
+k row fetches ahead of the compute step — this is the TPU analogue of the
+paper's 'pre-computed hash matrix in RAM' fast path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, *refs):
+    table_blks, out_ref = refs[:-1], refs[-1]
+    acc = table_blks[0][...].astype(jnp.float32)
+    for blk in table_blks[1:]:
+        acc = acc + blk[...].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def bloom_embed_pallas(table: jnp.ndarray, idx: jnp.ndarray,
+                       d_tile: int = 512, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """table (m, D), idx (T, k) int32 -> (T, D) = k-way gather-sum."""
+    m, D = table.shape
+    T, k = idx.shape
+    d_tile = min(d_tile, D)
+    pad_d = (-D) % d_tile
+    if pad_d:
+        table = jnp.pad(table, ((0, 0), (0, pad_d)))
+    Dp = D + pad_d
+    grid = (T, Dp // d_tile)
+
+    in_specs = [
+        pl.BlockSpec((1, d_tile),
+                     functools.partial(
+                         lambda t, dt, idx_ref, j: (idx_ref[t, j], dt), j=j))
+        for j in range(k)
+    ]
+    out_spec = pl.BlockSpec((1, d_tile), lambda t, dt, idx_ref: (t, dt))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, Dp), table.dtype),
+        interpret=interpret,
+    )(idx, *([table] * k))
+    return out[:, :D]

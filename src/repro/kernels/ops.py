@@ -1,0 +1,49 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These adapt model-layer shapes ((B, S, ...) activations, BloomSpec hash
+generation) to the flat kernel interfaces, and select interpret mode
+automatically off-TPU so the same call sites run everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bloom import BloomSpec
+from repro.kernels.bloom_embed import bloom_embed_pallas
+from repro.kernels.bloom_decode import bloom_decode_pallas
+from repro.kernels.bloom_ce import bloom_ce_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bloom_embed(table: jnp.ndarray, tokens: jnp.ndarray,
+                spec: BloomSpec) -> jnp.ndarray:
+    """table (m, D); tokens (B, S) -> (B, S, D)."""
+    B, S = tokens.shape
+    idx = spec.indices_for(tokens.reshape(-1))        # (T, k)
+    out = bloom_embed_pallas(table, idx, interpret=_interpret())
+    return out.reshape(B, S, -1)
+
+
+def bloom_ce(logits: jnp.ndarray, labels: jnp.ndarray,
+             spec: BloomSpec) -> jnp.ndarray:
+    """logits (..., m); labels (...,) -> per-position loss (...,)."""
+    shape = labels.shape
+    z = logits.reshape(-1, logits.shape[-1])
+    h = spec.indices_for(jnp.maximum(labels.reshape(-1), 0))
+    loss = bloom_ce_pallas(z, h, interpret=_interpret())
+    return loss.reshape(shape)
+
+
+def bloom_decode(logp: jnp.ndarray, spec: BloomSpec,
+                 hash_matrix: jnp.ndarray | None = None) -> jnp.ndarray:
+    """logp (..., m) -> Eq. 3 scores (..., d) over the original vocab."""
+    lead = logp.shape[:-1]
+    flat = logp.reshape(-1, logp.shape[-1])
+    H = hash_matrix if hash_matrix is not None else \
+        spec.indices_for(jnp.arange(spec.d))
+    scores = bloom_decode_pallas(flat, H, interpret=_interpret())
+    return scores.reshape(*lead, spec.d)

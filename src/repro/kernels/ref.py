@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the ground truth every kernel
+sweep in tests/test_kernels_*.py asserts against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bloom_embed_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """table (m, D); idx (T, k) hash indices -> (T, D) k-way gather-sum."""
+    rows = jnp.take(table, idx, axis=0)            # (T, k, D)
+    return rows.sum(axis=1)
+
+
+def bloom_decode_ref(logp: jnp.ndarray, H: jnp.ndarray) -> jnp.ndarray:
+    """logp (B, m); H (d, k) -> scores (B, d): scores[b,i]=sum_j logp[b,H[i,j]]."""
+    g = jnp.take(logp, H, axis=-1)                 # (B, d, k)
+    return g.sum(-1)
+
+
+def bloom_ce_ref(logits: jnp.ndarray, h_idx: jnp.ndarray) -> jnp.ndarray:
+    """logits (T, m); h_idx (T, k) hashed labels ->
+    loss (T,) = logsumexp(z) - mean_j z[h_j]."""
+    z = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(z, axis=-1)
+    picked = jnp.take_along_axis(z, h_idx, axis=-1)   # (T, k)
+    return lse - picked.mean(-1)

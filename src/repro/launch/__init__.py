@@ -1,0 +1,1 @@
+"""Launch: mesh, sharding, dry-run, train/serve drivers."""

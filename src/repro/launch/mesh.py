@@ -1,0 +1,33 @@
+"""Production meshes (DESIGN.md §6).
+
+A *function*, not a module-level constant, so importing this module never
+touches jax device state — critical because smoke tests must see 1 CPU
+device while the dry-run forces 512 placeholder devices via XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axes=("data", "model")):
+    """Whatever devices exist, as a (1, ..., n_devices) mesh — used by
+    tests and the CPU train/serve drivers."""
+    n = jax.device_count()
+    shape = (1,) * (len(axes) - 1) + (n,)
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int, axes=("data", "model"),
+                      model_parallel: int = 1):
+    """Rebuild a mesh after a world-size change (node failure / elastic
+    scale): keeps `model_parallel` fixed and gives the rest to data."""
+    assert n_devices % model_parallel == 0
+    shape = (n_devices // model_parallel, model_parallel)
+    return jax.make_mesh(shape, axes[-2:])

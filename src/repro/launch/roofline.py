@@ -1,0 +1,173 @@
+"""Roofline analysis (deliverable g).
+
+Per (arch x shape x mesh) we derive three terms from the compiled dry-run
+artifact (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / 197e12            [s]
+  memory     = HLO_bytes_per_device / 819e9             [s]
+  collective = collective_bytes_per_device / 50e9       [s]
+
+`cost_analysis()` of the SPMD-partitioned executable reports *per-device*
+FLOPs/bytes (local shapes).  Collective bytes are not in cost_analysis —
+we parse the post-optimization HLO text and apply ring-algorithm byte
+models per collective kind.
+
+IMPORTANT caveat handled upstream: XLA's cost analysis counts a while-loop
+body exactly ONCE (empirically verified), so the dry-run lowers statically
+unrolled reduced-depth variants (L, 2L layers) and extrapolates linearly —
+every super-block is identical, so per-layer cost is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s/link ICI
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^=]*?\)|\S+?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    """Bytes of the first shape literal in `text`."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dt = _DTYPE_BYTES.get(m.group("dt"), 4)
+    dims = m.group("dims")
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * dt
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> Dict[str, Dict]:
+    """Per-device collective byte model from post-SPMD HLO text.
+
+    Ring models (bytes crossing links per device):
+      all-reduce: 2 * size * (g-1)/g        (reduce-scatter + all-gather)
+      all-gather: out_size * (g-1)/g
+      reduce-scatter: in_size * (g-1)/g
+      all-to-all: size * (g-1)/g
+      collective-permute: size (one hop)
+    """
+    per_kind: Dict[str, Dict] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        result = m.group("result")
+        # operand shapes are inside the call parens
+        rest = line[m.end():]
+        res_bytes = _shape_bytes(result)
+        arg_bytes = _shape_bytes(rest)
+        g = _group_size(line, n_devices)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            moved = 2 * res_bytes * frac
+        elif op == "all-gather":
+            moved = res_bytes * frac
+        elif op == "reduce-scatter":
+            moved = max(arg_bytes, res_bytes) * frac
+        elif op == "all-to-all":
+            moved = max(arg_bytes, res_bytes) * frac
+        else:  # collective-permute
+            moved = res_bytes
+        k = per_kind.setdefault(op, {"count": 0, "bytes": 0.0})
+        k["count"] += 1
+        k["bytes"] += moved
+        total += moved
+    return {"per_kind": per_kind, "total_bytes": total}
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_bytes_dev: float) -> Dict[str, float]:
+    compute = flops_dev / PEAK_FLOPS
+    memory = bytes_dev / HBM_BW
+    collective = coll_bytes_dev / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["step_time_s"] = bound          # no-overlap upper bound
+    terms["roofline_fraction"] = (compute / bound) if bound > 0 else 0.0
+    return terms
+
+
+# --------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE)
+# --------------------------------------------------------------------------
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Matmul-active params per token: excludes the input embedding table
+    (gather, not matmul) and the non-selected experts."""
+    n = cfg.param_count()
+    # subtract embedding table (m_vocab x D); the LM head stays (matmul).
+    n -= cfg.m_vocab * cfg.d_model
+    if cfg.tie_embeddings:
+        n += cfg.m_vocab * cfg.d_model  # tied: the head matmul is real
+    if cfg.moe is not None:
+        mo = cfg.moe
+        n_moe_layers = sum(
+            1 for li in range(cfg.num_layers) if cfg._layer_is_moe(li))
+        per_expert = 3 * cfg.d_model * mo.d_ff_expert
+        inactive = (mo.num_experts - mo.top_k) * per_expert
+        n -= n_moe_layers * inactive
+    return int(n)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful-model FLOPs per step (global, all chips)."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "audio":
+            tokens = shape.global_batch * (shape.seq_len
+                                           + max(shape.seq_len // 4, 16))
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "audio":
+            tokens = shape.global_batch * (shape.seq_len
+                                           + max(shape.seq_len // 4, 16))
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention KV-cache reads (flops side
+    # of the cache dot-products)
+    flops = 2.0 * n_active * shape.global_batch
+    n_attn = sum(1 for li in range(cfg.num_layers)
+                 if cfg._layer_is_attention(li))
+    hd = cfg.resolved_head_dim
+    kv_dot = (4.0 * shape.global_batch * shape.seq_len
+              * cfg.num_heads * hd)
+    return flops + n_attn * kv_dot

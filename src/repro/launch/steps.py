@@ -1,0 +1,121 @@
+"""Step builders: train / prefill / decode step functions per architecture,
+shared by the real drivers (train.py, serve.py) and the dry-run.
+
+The lowered objects are exactly what runs on hardware: the train step
+includes the optimizer update (realistic memory picture), the decode step
+includes the paper's Eq. 3 top-k vocabulary recovery (the serving path the
+paper times in Fig. 3 right).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf
+from repro.train import trainer as trainer_lib
+
+
+def loss_fn_for(cfg: ModelConfig, dist=None):
+    base = (encdec_lib.encdec_loss_fn if cfg.family == "audio"
+            else tf.lm_loss_fn)
+    return lambda params, batch: base(params, cfg, batch, dist=dist)
+
+
+def init_fn_for(cfg: ModelConfig):
+    base = encdec_lib.encdec_init if cfg.family == "audio" else tf.lm_init
+    return lambda key: base(key, cfg)
+
+
+def apply_fn_for(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return encdec_lib.encdec_apply
+    return tf.lm_apply
+
+
+def cast_params_for_compute(params, cfg: ModelConfig):
+    """One-shot fp32 -> compute-dtype cast of all matrix params.
+
+    §Perf iteration (qwen3-4b train_4k): without this, every weight is
+    read as fp32 and converted at every use site — and remat re-executes
+    the converts in the backward pass.  Profiling the 1-layer unrolled HLO
+    showed `convert` = 202 GB of 230 GB/device accessed.  Casting once at
+    the step boundary (outside the remat scope) leaves exactly one
+    convert per param per step.  1-D params (norm scales, biases, A_log)
+    stay fp32 — their consumers want f32 math and they are tiny.
+    """
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(p):
+        if p.ndim >= 2 and jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(dt)
+        return p
+
+    return jax.tree.map(cast, params)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, dist=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = loss_fn_for(cfg, dist)
+    optimizer = trainer_lib.make_optimizer(tc)
+
+    def step(params, opt_state, batch):
+        def scalar_loss(p):
+            loss, metrics = loss_fn(cast_params_for_compute(p, cfg), batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            scalar_loss, has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        out_metrics = {"loss": loss, **metrics}
+        return params, opt_state, out_metrics
+
+    return step, optimizer
+
+
+def make_prefill_step(cfg: ModelConfig, dist=None):
+    """(params, batch) -> {last_logits, caches} — inference prefill."""
+    apply_fn = apply_fn_for(cfg)
+
+    def step(params, batch):
+        # serving params arrive already in compute dtype (bf16 serving
+        # checkpoint — no fp32 master at inference); no in-step cast.
+        out = apply_fn(params, cfg, batch, mode="prefill", dist=dist)
+        return {"last_logits": out["logits"][:, -1],
+                "caches": out["caches"]}
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):
+    """(params, token, caches, pos) -> {logits, caches, topk ids/scores}.
+
+    One new token against a seq_len KV cache; includes the Bloom Eq. 3
+    vocabulary recovery so serving cost is end-to-end.
+    """
+    apply_fn = apply_fn_for(cfg)
+
+    def step(params, token, caches, pos):
+        out = apply_fn(params, cfg, {"tokens": token}, mode="decode",
+                       caches=caches, pos=pos, dist=dist)
+        from repro.models import io as io_lib
+        scores, ids = io_lib.recover_topk(cfg, out["logits"][:, 0],
+                                          topk=topk)
+        return {"logits": out["logits"], "caches": out["caches"],
+                "topk_scores": scores, "topk_ids": ids}
+
+    return step
+
+
+def init_caches_for(cfg: ModelConfig, shape: ShapeConfig):
+    if cfg.family == "audio":
+        return functools.partial(encdec_lib.init_encdec_cache, cfg,
+                                 shape.global_batch, shape.seq_len, 1500)
+    return functools.partial(tf.init_lm_cache, cfg, shape.global_batch,
+                             shape.seq_len)

@@ -1,0 +1,23 @@
+"""Model zoo: pure-functional pytree models.
+
+  layers       — norms, RoPE, SwiGLU, dense
+  attention    — GQA chunked/naive/decode attention, KV caches
+  moe          — shared+routed top-k experts (dense & expert-parallel)
+  mamba2       — SSD chunked scan + O(1) decode
+  transformer  — decoder-only assembly (dense/moe/ssm/hybrid families)
+  encdec       — whisper-style encoder-decoder
+  rnn          — GRU/LSTM (paper session/LM tasks)
+  recommender  — paper's feed-forward recommenders over IOEmbeddings
+  io           — Bloom/dense token IO boundary (the paper's technique)
+"""
+from repro.models import (  # noqa: F401
+    attention,
+    encdec,
+    io,
+    layers,
+    mamba2,
+    moe,
+    recommender,
+    rnn,
+    transformer,
+)

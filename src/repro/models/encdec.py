@@ -1,0 +1,224 @@
+"""Encoder-decoder (whisper-style) transformer.
+
+The audio conv frontend is a STUB per the assignment: `input_specs()`
+supplies precomputed frame embeddings (B, S_enc, D); a linear projection
+stands in for the conv stack.  The decoder vocabulary IO uses the Bloom
+layer exactly like the decoder-only LMs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, io, layers
+from repro.models.transformer import _remat
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def _enc_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": layers.rms_norm_init(cfg.d_model),
+        "attn": attention.attention_init(k1, cfg),
+        "norm2": layers.rms_norm_init(cfg.d_model),
+        "ffn": layers.swiglu_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": layers.rms_norm_init(cfg.d_model),
+        "self_attn": attention.attention_init(k1, cfg),
+        "norm_x": layers.rms_norm_init(cfg.d_model),
+        "cross_attn": attention.attention_init(k2, cfg, cross=True),
+        "norm2": layers.rms_norm_init(cfg.d_model),
+        "ffn": layers.swiglu_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig):
+    k_io, k_enc, k_dec, k_front = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "io": io.io_init(k_io, cfg),
+        "frontend_proj": layers.dense_init(k_front, cfg.d_model,
+                                           cfg.d_model, bias=False),
+        "encoder": jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys),
+        "enc_norm": layers.rms_norm_init(cfg.d_model),
+        "decoder": jax.vmap(lambda k: _dec_block_init(k, cfg))(dec_keys),
+        "final_norm": layers.rms_norm_init(cfg.d_model),
+    }
+
+
+# --------------------------------------------------------------------------
+# Apply
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames, dist=None):
+    """frames (B, S_enc, D) stub embeddings -> encoder output (B, S_enc, D)."""
+    x = layers.dense(params["frontend_proj"],
+                     frames.astype(jnp.dtype(cfg.dtype)))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if dist is not None:
+        x = dist.constrain_tokens(x)
+
+    def block(bp, x):
+        h = layers.rms_norm(bp["norm1"], x, cfg.norm_eps)
+        x = x + attention.self_attention(bp["attn"], cfg, h, positions,
+                                         causal=False)
+        h = layers.rms_norm(bp["norm2"], x, cfg.norm_eps)
+        x = x + layers.swiglu(bp["ffn"], h)
+        if dist is not None:
+            x = dist.constrain_tokens(x)
+        return x
+
+    blk = _remat(lambda bp, x: (block(bp, x), None), cfg)
+
+    if cfg.scan_layers:
+        def body(x, bp):
+            x, _ = blk(bp, x)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    else:
+        for i in range(cfg.encoder_layers):
+            bp = jax.tree.map(lambda a: a[i], params["encoder"])
+            x, _ = blk(bp, x)
+    return layers.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(bp, cfg, x, positions, enc_out, mode, cache, pos, dist):
+    new_cache = {}
+    h = layers.rms_norm(bp["norm1"], x, cfg.norm_eps)
+    if mode == "train":
+        y = attention.self_attention(bp["self_attn"], cfg, h, positions)
+    elif mode == "prefill":
+        y, kv = attention.self_attention_with_cache(bp["self_attn"], cfg,
+                                                    h, positions,
+                                                    cache_dtype=h.dtype)
+        new_cache["attn"] = kv
+    else:
+        y, kv = attention.decode_self_attention(bp["self_attn"], cfg, h,
+                                                cache["attn"], pos,
+                                                dist=dist)
+        new_cache["attn"] = kv
+    x = x + y
+
+    h = layers.rms_norm(bp["norm_x"], x, cfg.norm_eps)
+    if mode == "decode":
+        # cross k/v were precomputed at prefill; reuse the cached ones.
+        ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+        q = attention._project_qkv(bp["cross_attn"], cfg, h, h,
+                                   None, None, rope=False)[0]
+        qg, ck, cv = attention._expand_heads(
+            q, ck.astype(h.dtype), cv.astype(h.dtype), cfg.num_heads)
+        o = attention.naive_attention(qg, ck, cv, causal=False)
+        B = h.shape[0]
+        o = o.reshape(B, 1, cfg.num_heads, cfg.resolved_head_dim)
+        y = jnp.einsum("bshk,hkd->bsd", o,
+                       bp["cross_attn"]["wo"].astype(h.dtype))
+        new_cache["cross"] = cache["cross"]
+    else:
+        y = attention.cross_attention(bp["cross_attn"], cfg, h, enc_out,
+                                      positions)
+        if mode == "prefill":
+            _, k_enc, v_enc = attention._project_qkv(
+                bp["cross_attn"], cfg, enc_out, enc_out, None, None,
+                rope=False)
+            new_cache["cross"] = {"k": k_enc.astype(h.dtype),
+                                  "v": v_enc.astype(h.dtype)}
+    x = x + y
+
+    h = layers.rms_norm(bp["norm2"], x, cfg.norm_eps)
+    x = x + layers.swiglu(bp["ffn"], h)
+    if dist is not None:
+        x = dist.constrain_tokens(x)
+    return x, new_cache
+
+
+def encdec_apply(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                 mode: str = "train", caches=None, pos=None, dist=None):
+    """batch: {"embeds": (B,S_enc,D) frames, "tokens": (B,S_dec)}.
+
+    decode mode runs only the decoder against caches (encoder output is
+    folded into the cached cross k/v).
+    """
+    tokens = batch["tokens"]
+    x = io.embed_tokens(params["io"], cfg, tokens)
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = None
+        enc_out = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc_out = encode(params, cfg, batch["embeds"], dist)
+    if dist is not None:
+        x = dist.constrain_tokens(x)
+
+    blk = (_remat(lambda bp, x, c: _dec_block(bp, cfg, x, positions,
+                                              enc_out, mode, c, pos, dist),
+                  cfg)
+           if mode == "train" else
+           lambda bp, x, c: _dec_block(bp, cfg, x, positions, enc_out,
+                                       mode, c, pos, dist))
+
+    if cfg.scan_layers:
+        def body(carry, inp):
+            bp, c = inp
+            x, nc = blk(bp, carry, c)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    else:
+        ncs = []
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda a: a[i], params["decoder"])
+            c = (None if caches is None
+                 else jax.tree.map(lambda a: a[i], caches))
+            x, nc = blk(bp, x, c)
+            ncs.append(nc)
+        new_caches = (jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                      if ncs and ncs[0] else None)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = io.lm_logits(params["io"], cfg, x)
+    if dist is not None:
+        logits = dist.constrain_logits(logits)
+    out = {"logits": logits, "aux": jnp.zeros((), jnp.float32)}
+    if mode in ("prefill", "decode"):
+        out["caches"] = new_caches
+    return out
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      enc_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    one = {
+        "attn": attention.init_kv_cache(cfg, batch, cache_len, dtype),
+        "cross": {
+            "k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, hd), dtype),
+        },
+    }
+    L = cfg.num_layers
+    return jax.tree.map(lambda a: jnp.zeros((L, *a.shape), a.dtype), one)
+
+
+def encdec_loss_fn(params, cfg: ModelConfig, batch, dist=None):
+    out = encdec_apply(params, cfg, batch, mode="train", dist=dist)
+    logits = out["logits"][:, :-1]
+    if dist is not None:
+        logits = dist.constrain_logits(logits)
+    labels = batch["tokens"][:, 1:]
+    loss_tok = io.lm_loss(params["io"], cfg, logits, labels,
+                          batch.get("loss_mask"))
+    loss = loss_tok.mean()
+    return loss, {"ce": loss, "aux": out["aux"]}

@@ -1,0 +1,100 @@
+"""Token IO boundary: embedding + LM head, dense or Bloom-compressed.
+
+This is where the paper's technique plugs into every architecture
+(DESIGN.md §5): with bloom.enabled the embedding table and LM head operate
+in the m-dim hashed space; the per-token loss and serving-time vocabulary
+recovery use the k-way likelihood of Eqs. 2/3.
+
+io_impl selects the execution path:
+  "xla"    — pure jnp (gather/take); the oracle, and the dry-run path.
+  "pallas" — fused TPU kernels from repro.kernels (validated vs this file).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import losses
+from repro.core.bloom import BloomSpec, decode_topk
+from repro.models import layers
+
+
+def vocab_spec(cfg: ModelConfig) -> Optional[BloomSpec]:
+    if not cfg.bloom.enabled:
+        return None
+    return BloomSpec(d=cfg.vocab, m=cfg.m_vocab, k=cfg.bloom.k,
+                     seed=cfg.bloom.seed, on_the_fly=cfg.bloom.on_the_fly)
+
+
+def io_init(key, cfg: ModelConfig):
+    V, D = cfg.m_vocab, cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {"embed": layers.embed_init(k1, (V, D))}
+    if not cfg.tie_embeddings:
+        p["head"] = layers.truncated_normal_init(k2, (D, V), 1.0)
+    return p
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 ) -> jnp.ndarray:
+    """tokens (B, S) int32 -> (B, S, D) activations.
+
+    Bloom path: x = sum_j Table[H_j(tok)] — the dense-matrix product with
+    the k-hot Bloom code of the paper, computed as a k-way gather-sum.
+    """
+    table = params["embed"]
+    dt = jnp.dtype(cfg.dtype)
+    spec = vocab_spec(cfg)
+    if spec is None:
+        return jnp.take(table, tokens, axis=0).astype(dt)
+    if cfg.io_impl == "pallas":
+        from repro.kernels import ops
+        return ops.bloom_embed(table.astype(dt), tokens, spec)
+    idx = spec.indices_for(tokens)                     # (B, S, k)
+    rows = jnp.take(table, idx, axis=0).astype(dt)     # (B, S, k, D)
+    return rows.sum(axis=2)
+
+
+def lm_logits(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, D) -> logits (B, S, m_vocab) (m-dim when bloom enabled)."""
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ head.astype(x.dtype)
+
+
+def lm_loss(params, cfg: ModelConfig, logits: jnp.ndarray,
+            labels: jnp.ndarray, valid: Optional[jnp.ndarray] = None
+            ) -> jnp.ndarray:
+    """Per-token CE. Bloom: logsumexp(z) - (1/k) sum_j z[H_j(y)] (Eq. 3)."""
+    spec = vocab_spec(cfg)
+    logits = logits.astype(jnp.float32)
+    if spec is None:
+        return losses.softmax_xent_label(logits, labels, valid)
+    if cfg.io_impl == "pallas":
+        from repro.kernels import ops
+        loss = ops.bloom_ce(logits, labels, spec)
+        return loss if valid is None else loss * valid.astype(loss.dtype)
+    return losses.bloom_xent_label(spec, logits, labels, valid=valid)
+
+
+def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
+                 chunk: int = 8192):
+    """Serving-time vocabulary recovery (paper Sec. 3.2).
+
+    logits (..., m_vocab) -> (scores, token_ids) (..., topk) over the
+    original vocab.  Dense path: plain top-k.  Bloom path: Eq. 3 scores
+    via the streaming k-gather reduction.
+    """
+    spec = vocab_spec(cfg)
+    if spec is None:
+        return jax.lax.top_k(logits, topk)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if cfg.io_impl == "pallas":
+        from repro.kernels import ops
+        scores = ops.bloom_decode(logp, spec)
+        return jax.lax.top_k(scores, topk)
+    return decode_topk(spec, logp, topk, chunk=chunk,
+                       unroll=cfg.unroll_for_analysis)

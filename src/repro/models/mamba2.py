@@ -1,0 +1,249 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+TPU adaptation (DESIGN.md §4): the CUDA SSD kernel is re-expressed as the
+chunked matmul decomposition the paper derives — intra-chunk quadratic
+(attention-like, MXU-friendly (Q x Q) tiles) plus an inter-chunk linear
+recurrence carried by lax.scan.  Chunk length is a config knob
+(MambaConfig.chunk).
+
+Tensor-parallel layout: unlike the reference CUDA impl's single fused
+in_proj, projections are kept separate (z/x/B/C/dt) so the d_inner and
+n_heads dimensions shard over the `model` mesh axis without splitting a
+sharded dim (head_dim * heads_per_shard stays contiguous).  B/C (d_state
+per group, G=1) are small and stay replicated.
+
+Decode is the O(1)-state recurrence: h' = exp(dt*A) h + dt * B ⊗ x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    n_heads = d_in // mc.head_dim
+    gn = mc.n_groups * mc.d_state
+    return mc, d_in, n_heads, gn
+
+
+def mamba_init(key, cfg: ModelConfig):
+    mc, d_in, n_heads, gn = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "z_proj": layers.truncated_normal_init(ks[0], (D, d_in), 1.0),
+        "x_proj": layers.truncated_normal_init(ks[1], (D, d_in), 1.0),
+        "b_proj": layers.truncated_normal_init(ks[2], (D, gn), 1.0),
+        "c_proj": layers.truncated_normal_init(ks[3], (D, gn), 1.0),
+        "dt_proj": layers.truncated_normal_init(ks[4], (D, n_heads), 1.0),
+        "conv_x": {"w": layers.truncated_normal_init(
+            ks[5], (mc.d_conv, d_in), 1.0),
+            "b": jnp.zeros((d_in,), jnp.float32)},
+        "conv_b": {"w": layers.truncated_normal_init(
+            ks[6], (mc.d_conv, gn), 1.0),
+            "b": jnp.zeros((gn,), jnp.float32)},
+        "conv_c": {"w": layers.truncated_normal_init(
+            jax.random.fold_in(ks[6], 1), (mc.d_conv, gn), 1.0),
+            "b": jnp.zeros((gn,), jnp.float32)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            jax.random.fold_in(ks[5], 1), (n_heads,),
+            minval=np.log(1e-3), maxval=np.log(1e-1))))),
+        "norm": layers.rms_norm_init(d_in),
+        "out_proj": layers.truncated_normal_init(
+            jax.random.fold_in(key, 99), (d_in, D), 1.0),
+    }
+
+
+def _causal_conv(conv, x, dtype):
+    """Depthwise causal conv via shifted adds (d_conv is tiny)."""
+    w, b = conv["w"], conv["b"]
+    d_conv = w.shape[0]
+    out = x * w[-1].astype(dtype)
+    for i in range(1, d_conv):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i].astype(dtype)
+    return jax.nn.silu(out + b.astype(dtype))
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)    head inputs
+    dt: (B, S, H)       positive step sizes (softplus applied)
+    A:  (H,)            negative decay rates
+    Bm: (B, S, G, N)    input projections  (broadcast over H//G heads)
+    Cm: (B, S, G, N)    output projections
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    assert nc * Q == S, f"seq {S} must be divisible by chunk {Q}"
+
+    xc = x.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3)
+
+    dA = dtc * A                                  # (B,nc,Q,H), negative
+    cs = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative
+    total = cs[:, :, -1]                          # (B,nc,H)
+
+    # intra-chunk quadratic: y_i += sum_{j<=i} (C_i.B_j) e^{cs_i-cs_j} dt_j x_j
+    decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(decay), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * L.astype(x.dtype)
+    y = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores,
+                   dtc.astype(x.dtype), xc)
+
+    # chunk summary state: S_c = sum_j e^{total - cs_j} dt_j B_j ⊗ x_j
+    w = jnp.exp(total[:, :, None] - cs) * dtc                  # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp",
+                              w.astype(x.dtype), Bc, xc)
+
+    # inter-chunk recurrence over nc
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, Pd), x.dtype)
+
+    def step(h, inp):
+        st, tot = inp                                    # (B,H,N,P), (B,H)
+        h_prev = h
+        h = h * jnp.exp(tot)[:, :, None, None].astype(x.dtype) + st
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (chunk_states.transpose(1, 0, 2, 3, 4),
+                   total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    # contribution of the carried state to each position in its chunk
+    y_state = jnp.einsum("bcihn,bchnp->bcihp",
+                         Cc * jnp.exp(cs)[..., None].astype(x.dtype),
+                         h_prevs)
+    y = (y + y_state).reshape(Bsz, S, H, Pd)
+    return y, h_final
+
+
+def _project(params, cfg: ModelConfig, x):
+    """x (..., D) -> z, xs, Bm, Cm, dt_raw (pre-softplus)."""
+    dt_ = x.dtype
+    z = x @ params["z_proj"].astype(dt_)
+    xs = x @ params["x_proj"].astype(dt_)
+    Bm = x @ params["b_proj"].astype(dt_)
+    Cm = x @ params["c_proj"].astype(dt_)
+    dt_raw = x @ params["dt_proj"].astype(dt_)
+    return z, xs, Bm, Cm, dt_raw
+
+
+def mamba_apply(params, cfg: ModelConfig, x, return_cache: bool = False):
+    """Full-sequence Mamba-2 mixer. x: (B, S, D) -> (B, S, D)."""
+    mc, d_in, n_heads, gn = _dims(cfg)
+    dt_ = x.dtype
+    B, S, D = x.shape
+    z, xs_raw, Bm_raw, Cm_raw, dt_raw = _project(params, cfg, x)
+    xs = _causal_conv(params["conv_x"], xs_raw, dt_)
+    Bm = _causal_conv(params["conv_b"], Bm_raw, dt_)
+    Cm = _causal_conv(params["conv_c"], Cm_raw, dt_)
+    xs_h = xs.reshape(B, S, n_heads, mc.head_dim)
+    Bm = Bm.reshape(B, S, mc.n_groups, mc.d_state)
+    Cm = Cm.reshape(B, S, mc.n_groups, mc.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    # pad S to a chunk multiple: zero dt/x/B/C => exp(0)=1 decay, zero
+    # state contribution — padded tail is a mathematical no-op.
+    Q = min(mc.chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zpad = lambda a: jnp.pad(  # noqa: E731
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xs_h, Bm, Cm, dt = zpad(xs_h), zpad(Bm), zpad(Cm), zpad(dt)
+    y, h_final = _ssd_chunked(xs_h, dt, A, Bm, Cm, mc.chunk)
+    if pad:
+        y = y[:, :S]
+    y = y + xs_h[:, :S] * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = layers.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    if not return_cache:
+        return out
+    nc = mc.d_conv - 1
+    cache = {"ssm": h_final.astype(dt_),
+             "conv_x": xs_raw[:, S - nc:, :].astype(dt_),
+             "conv_b": Bm_raw[:, S - nc:, :].astype(dt_),
+             "conv_c": Cm_raw[:, S - nc:, :].astype(dt_)}
+    return out, cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    mc, d_in, n_heads, gn = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, mc.d_state, mc.head_dim), dtype),
+        "conv_x": jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        "conv_b": jnp.zeros((batch, mc.d_conv - 1, gn), dtype),
+        "conv_c": jnp.zeros((batch, mc.d_conv - 1, gn), dtype),
+    }
+
+
+def _conv_step(conv, hist_new, dtype):
+    """hist_new: (B, d_conv, ch) — last d_conv raw inputs incl current."""
+    w = conv["w"].astype(dtype)
+    return jax.nn.silu((hist_new * w[None]).sum(1)
+                       + conv["b"].astype(dtype))
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x, cache):
+    """Single-token decode. x: (B, 1, D); O(1) state update."""
+    mc, d_in, n_heads, gn = _dims(cfg)
+    dt_ = x.dtype
+    B = x.shape[0]
+    z, xs_raw, Bm_raw, Cm_raw, dt_raw = _project(params, cfg, x[:, 0])
+    hx = jnp.concatenate([cache["conv_x"].astype(dt_), xs_raw[:, None]], 1)
+    hb = jnp.concatenate([cache["conv_b"].astype(dt_), Bm_raw[:, None]], 1)
+    hc = jnp.concatenate([cache["conv_c"].astype(dt_), Cm_raw[:, None]], 1)
+    xs = _conv_step(params["conv_x"], hx, dt_)
+    Bm = _conv_step(params["conv_b"], hb, dt_)
+    Cm = _conv_step(params["conv_c"], hc, dt_)
+    xs = xs.reshape(B, n_heads, mc.head_dim)
+    rep = n_heads // mc.n_groups
+    Bm = jnp.repeat(Bm.reshape(B, mc.n_groups, mc.d_state), rep, axis=1)
+    Cm = jnp.repeat(Cm.reshape(B, mc.n_groups, mc.d_state), rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A).astype(dt_)                   # (B,H)
+    h = cache["ssm"].astype(dt_)                          # (B,H,N,P)
+    dBx = (dt.astype(dt_)[..., None, None]
+           * Bm[..., :, None] * xs[..., None, :])         # (B,H,N,P)
+    h = h * decay[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, h)                # (B,H,P)
+    y = y + xs * params["D"].astype(dt_)[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = layers.rms_norm(params["norm"], y * jax.nn.silu(z[:, None]),
+                        cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    new_cache = {"ssm": h.astype(cache["ssm"].dtype),
+                 "conv_x": hx[:, 1:].astype(cache["conv_x"].dtype),
+                 "conv_b": hb[:, 1:].astype(cache["conv_b"].dtype),
+                 "conv_c": hc[:, 1:].astype(cache["conv_c"].dtype)}
+    return out, new_cache
+
+
+def mamba_reference(params, cfg: ModelConfig, x):
+    """Sequential-scan oracle for testing the chunked SSD path."""
+    B, S, D = x.shape
+    cache = init_mamba_cache(cfg, B, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = mamba_decode_step(params, cfg, x[:, t:t + 1], cache)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,53 @@
+"""Feed-forward recommenders (paper Sec. 4.2 architectures).
+
+A thin MLP over an IOEmbedding (Bloom / HT / ECOC / PMI / CCA / identity
+baseline): encode(p) -> hidden ReLU layers -> m_out logits, trained with
+the embedding's own loss and evaluated after decode() back to item space.
+This is the exact shape of the paper's ML/MSD/AMZ/BC setups (3-4 layer
+feed-forward + softmax CE) and of CADE (classifier).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alternatives import IOEmbedding
+from repro.models import layers
+
+
+def ff_init(key, d_in: int, hidden: Sequence[int], d_out: int):
+    dims = [d_in, *hidden, d_out]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": layers.dense_init(ks[i], dims[i], dims[i + 1])
+            for i in range(len(dims) - 1)}
+
+
+def ff_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(params)
+    for i in range(n):
+        x = layers.dense(params[f"l{i}"], x)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def recommender_init(key, emb: IOEmbedding, hidden: Sequence[int]):
+    return ff_init(key, emb.m_in, hidden, emb.m_out)
+
+
+def recommender_loss(params, emb: IOEmbedding, p_in: jnp.ndarray,
+                     q_out: jnp.ndarray) -> jnp.ndarray:
+    """p_in/q_out: padded item-id sets (B, c_max). Mean loss over batch."""
+    x = emb.encode_input(p_in)
+    pred = ff_apply(params, x)
+    return emb.loss(pred, q_out).mean()
+
+
+def recommender_scores(params, emb: IOEmbedding,
+                       p_in: jnp.ndarray) -> jnp.ndarray:
+    """(B, c_max) -> (B, d) item ranking scores via the embedding's decode."""
+    x = emb.encode_input(p_in)
+    pred = ff_apply(params, x)
+    return emb.decode(pred)

@@ -1,0 +1,93 @@
+"""GRU / LSTM sequence models (paper tasks: YC session GRU, PTB LSTM).
+
+Mirrors Hidasi et al. (GRU4Rec) and Graves-style LSTM LMs: one-hot (or
+Bloom-encoded) input -> recurrent core -> softmax over the (possibly
+Bloom-compressed) output space.  lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def gru_init(key, d_in: int, d_hidden: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": layers.truncated_normal_init(k1, (d_in, 3 * d_hidden), 1.0),
+        "wh": layers.truncated_normal_init(k2, (d_hidden, 3 * d_hidden),
+                                           1.0),
+        "b": jnp.zeros((3 * d_hidden,), jnp.float32),
+    }
+
+
+def gru_cell(params, h, x):
+    xg = x @ params["wx"] + params["b"]
+    hg = h @ params["wh"]
+    xr, xz, xn = jnp.split(xg, 3, axis=-1)
+    hr, hz, hn = jnp.split(hg, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    z = jax.nn.sigmoid(xz + hz)
+    n = jnp.tanh(xn + r * hn)
+    return (1 - z) * n + z * h
+
+
+def lstm_init(key, d_in: int, d_hidden: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": layers.truncated_normal_init(k1, (d_in, 4 * d_hidden), 1.0),
+        "wh": layers.truncated_normal_init(k2, (d_hidden, 4 * d_hidden),
+                                           1.0),
+        "b": jnp.zeros((4 * d_hidden,), jnp.float32),
+    }
+
+
+def lstm_cell(params, carry, x):
+    h, c = carry
+    gates = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+    c = f * c + i * jnp.tanh(g)
+    h = o * jnp.tanh(c)
+    return (h, c)
+
+
+def rnn_lm_init(key, cell: str, d_in: int, d_hidden: int, d_out: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    init = gru_init if cell == "gru" else lstm_init
+    return {
+        "in_proj": layers.dense_init(k1, d_in, d_hidden, bias=True),
+        "cell": init(k2, d_hidden, d_hidden),
+        "out": layers.dense_init(k3, d_hidden, d_out, bias=True),
+    }
+
+
+def rnn_lm_apply(params, cell: str, x_seq: jnp.ndarray) -> jnp.ndarray:
+    """x_seq: (B, T, d_in) encoded inputs -> logits (B, T, d_out)."""
+    B, T, _ = x_seq.shape
+    x_seq = layers.dense(params["in_proj"], x_seq)
+    d_h = x_seq.shape[-1]
+    if cell == "gru":
+        carry0 = jnp.zeros((B, d_h), x_seq.dtype)
+
+        def step(h, x):
+            h = gru_cell(params["cell"], h, x)
+            return h, h
+    else:
+        carry0 = (jnp.zeros((B, d_h), x_seq.dtype),
+                  jnp.zeros((B, d_h), x_seq.dtype))
+
+        def step(c, x):
+            c = lstm_cell(params["cell"], c, x)
+            return c, c[0]
+
+    _, hs = jax.lax.scan(step, carry0, x_seq.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                       # (B, T, d_h)
+    return layers.dense(params["out"], hs)
+
+
+def rnn_lm_last_logits(params, cell: str, x_seq: jnp.ndarray) -> jnp.ndarray:
+    return rnn_lm_apply(params, cell, x_seq)[:, -1]

@@ -1,0 +1,58 @@
+"""Evaluation measures used by the paper (Sec. 4.1): MAP, RR, Accuracy."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def average_precision(scores: np.ndarray, relevant: np.ndarray,
+                      exclude: np.ndarray | None = None) -> float:
+    """AP of `relevant` item ids under `scores` (d,), optionally excluding
+    `exclude` ids (e.g. the user's input items) from the ranking."""
+    s = np.asarray(scores, np.float64).copy()
+    rel = set(int(i) for i in relevant if i >= 0)
+    if not rel:
+        return np.nan
+    if exclude is not None:
+        ex = [int(i) for i in exclude if i >= 0 and int(i) not in rel]
+        s[ex] = -np.inf
+    order = np.argsort(-s)
+    hits, ap = 0, 0.0
+    for rank, item in enumerate(order, start=1):
+        if int(item) in rel:
+            hits += 1
+            ap += hits / rank
+            if hits == len(rel):
+                break
+    return ap / len(rel)
+
+
+def mean_average_precision(scores: np.ndarray, relevants: np.ndarray,
+                           excludes: np.ndarray | None = None) -> float:
+    """MAP over a batch. scores (B, d); relevants (B, c) -1-padded."""
+    aps = []
+    for i in range(scores.shape[0]):
+        ex = None if excludes is None else excludes[i]
+        ap = average_precision(scores[i], relevants[i], ex)
+        if not np.isnan(ap):
+            aps.append(ap)
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def reciprocal_rank(scores: np.ndarray, target: np.ndarray) -> float:
+    """Mean RR of the single correct item. scores (B, d), target (B,)."""
+    rrs = []
+    for i in range(scores.shape[0]):
+        t = int(target[i])
+        if t < 0:
+            continue
+        rank = int((scores[i] > scores[i, t]).sum()) + 1
+        rrs.append(1.0 / rank)
+    return float(np.mean(rrs)) if rrs else 0.0
+
+
+def accuracy(scores: np.ndarray, target: np.ndarray) -> float:
+    pred = scores.argmax(-1)
+    valid = target >= 0
+    if valid.sum() == 0:
+        return 0.0
+    return float((pred[valid] == target[valid]).mean() * 100.0)

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real device count (1 CPU); only launch/dryrun.py
+forces 512 placeholder devices (in its own process)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

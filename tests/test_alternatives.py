@@ -1,0 +1,74 @@
+"""HT / ECOC / PMI / CCA baselines behind the IOEmbedding interface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core.alternatives import (BloomIO, CCAIO, ECOCIO, PMIIO,
+                                     hashing_trick)
+
+
+def _X(n=300, d=50, seed=0):
+    X = sp.random(n, d, density=0.08, format="csr",
+                  random_state=np.random.default_rng(seed))
+    X.data[:] = 1.0
+    return X
+
+
+P_IN = jnp.array([[1, 5, 9, -1], [0, -1, -1, -1]])
+Q_OUT = jnp.array([[2, 3, -1, -1], [7, 8, -1, -1]])
+
+
+def _check_interface(emb, d=50):
+    x = emb.encode_input(P_IN)
+    assert x.shape == (2, emb.m_in)
+    pred = jax.random.normal(jax.random.PRNGKey(0), (2, emb.m_out))
+    loss = emb.loss(pred, Q_OUT)
+    assert loss.shape == (2,) and np.isfinite(np.asarray(loss)).all()
+    scores = emb.decode(pred)
+    assert scores.shape == (2, d)
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+def test_bloom_io_interface():
+    _check_interface(BloomIO.build(d=50, m=20, k=3))
+
+
+def test_hashing_trick_is_k1_bloom():
+    ht = hashing_trick(50, 20)
+    assert ht.spec_in.k == 1 and ht.name == "HT"
+    _check_interface(ht)
+
+
+def test_ecoc_interface_and_code_quality():
+    emb = ECOCIO.build(50, 24, iters=50)
+    _check_interface(emb)
+    C = np.asarray(emb.code)
+    assert set(np.unique(C)) <= {0.0, 1.0}
+    # random-ish codes: pairwise Hamming distance concentrated near m/2
+    dist = (C[:20, None, :] != C[None, :20, :]).sum(-1)
+    np.fill_diagonal(dist, 12)
+    assert dist.min() >= 2
+
+
+def test_pmi_interface():
+    emb = PMIIO.build(_X(), m=16)
+    _check_interface(emb)
+
+
+def test_cca_interface():
+    X = _X()
+    emb = CCAIO.build(X, X, m=16)
+    _check_interface(emb)
+
+
+def test_bloom_io_with_cbe_matrices():
+    from repro.core import hashing
+    from repro.core.cbe import cbe_hash_matrix
+    X = _X()
+    H_in = hashing.make_hash_matrix_np(50, 3, 20, seed=0)
+    H_cbe = cbe_hash_matrix(X, H_in, 20, seed=0)
+    emb = BloomIO.build(d=50, m=20, k=3, H_in=H_cbe, H_out=H_cbe,
+                        name="CBE")
+    _check_interface(emb)

@@ -1,0 +1,119 @@
+"""Bloom embedding core: Eq. 1 encoding, Eq. 2/3 recovery, and the
+no-false-negative property the paper inherits from Bloom filters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom, losses
+from repro.core.bloom import BloomSpec
+
+
+def _spec(d=500, m=120, k=4, seed=0):
+    return BloomSpec(d=d, m=m, k=k, seed=seed)
+
+
+def test_encode_binary_and_bounded():
+    spec = _spec()
+    p = jnp.array([[1, 2, 3, -1], [7, -1, -1, -1]])
+    u = np.asarray(bloom.encode(spec, p))
+    assert u.shape == (2, spec.m)
+    assert set(np.unique(u)) <= {0.0, 1.0}
+    # at most c*k bits, at least k bits (if any item)
+    assert u[0].sum() <= 3 * spec.k and u[0].sum() >= spec.k
+    assert u[1].sum() <= spec.k
+
+
+def test_encode_empty_set_is_zero():
+    spec = _spec()
+    u = np.asarray(bloom.encode(spec, jnp.full((1, 4), -1)))
+    assert u.sum() == 0
+
+
+@given(st.integers(2, 60), st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_no_false_negatives(c, k, seed):
+    """Bloom filters answer membership with 100% recall (paper Sec. 3.1):
+    every encoded item must receive the MAXIMUM possible recovery score."""
+    rng = np.random.default_rng(seed)
+    d, m = 400, 150
+    k = min(k, m)
+    spec = BloomSpec(d=d, m=m, k=k, seed=seed)
+    items = rng.choice(d, size=min(c, d), replace=False)
+    p = jnp.asarray(items)[None, :]
+    u = bloom.encode(spec, p)
+    # log(u + eps): bits set -> ~0, unset -> very negative
+    log_v = jnp.log(jnp.clip(u, 1e-12, 1.0))
+    scores = np.asarray(bloom.decode_scores(spec, log_v, chunk=64))[0]
+    top = scores.max()
+    for it in items:
+        assert scores[it] == pytest.approx(top)  # all-bits-set => max score
+
+
+def test_decode_topk_matches_full_argsort():
+    spec = _spec(d=300, m=100, k=3)
+    key = jax.random.PRNGKey(1)
+    logp = jax.nn.log_softmax(jax.random.normal(key, (4, spec.m)))
+    full = np.asarray(bloom.decode_scores(spec, logp, chunk=77))
+    v, i = bloom.decode_topk(spec, logp, topk=10, chunk=77)
+    v, i = np.asarray(v), np.asarray(i)
+    for b in range(4):
+        order = np.argsort(-full[b], kind="stable")[:10]
+        np.testing.assert_allclose(np.sort(v[b])[::-1], v[b], rtol=1e-6)
+        np.testing.assert_allclose(full[b][i[b]], v[b], rtol=1e-5)
+        assert set(np.round(full[b][order], 5)) == set(np.round(v[b], 5))
+
+
+def test_decode_topk_unroll_equals_scan():
+    spec = _spec(d=300, m=100, k=3)
+    logp = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(2), (2, spec.m)))
+    v1, i1 = bloom.decode_topk(spec, logp, topk=7, chunk=64, unroll=False)
+    v2, i2 = bloom.decode_topk(spec, logp, topk=7, chunk=64, unroll=True)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_encode_dense_matches_sparse_encode():
+    spec = _spec(d=80, m=40, k=3)
+    p = jnp.array([[3, 10, 50, -1]])
+    x = np.zeros((1, 80), np.float32)
+    x[0, [3, 10, 50]] = 1.0
+    u1 = np.asarray(bloom.encode(spec, p))
+    u2 = np.asarray(bloom.encode_dense(spec, jnp.asarray(x)))
+    np.testing.assert_allclose(u1, u2)
+
+
+def test_identity_spec_roundtrip():
+    spec = bloom.identity_spec(50)
+    p = jnp.array([[4, 7, -1]])
+    u = np.asarray(bloom.encode(spec, p))
+    assert u[0, 4] == 1 and u[0, 7] == 1 and u.sum() == 2
+
+
+def test_recover_probabilities_normalized():
+    spec = _spec(d=100, m=64, k=2)
+    v_hat = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (3, 64)))
+    probs = np.asarray(bloom.recover_probabilities(spec, v_hat))
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+    assert (probs >= 0).all()
+
+
+def test_ranking_preserved_under_monotone_eq2_eq3():
+    """Eq. 2 (product) and Eq. 3 (neg-log-sum) give identical rankings."""
+    spec = _spec(d=200, m=80, k=3)
+    v_hat = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(5), (80,)))
+    log_v = jnp.log(v_hat)
+    s3 = np.asarray(bloom.decode_scores(spec, log_v, chunk=64))
+    idx = spec.indices_for(jnp.arange(200))
+    s2 = np.asarray(jnp.prod(v_hat[idx], axis=-1))
+    # Eq. 3 == log(Eq. 2) pointwise => identical ranking (up to fp ties)
+    np.testing.assert_allclose(s3, np.log(s2), rtol=1e-4, atol=1e-5)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        BloomSpec(d=10, m=20, k=1)
+    with pytest.raises(ValueError):
+        BloomSpec(d=10, m=5, k=6)

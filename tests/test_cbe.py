@@ -1,0 +1,63 @@
+"""CBE (Algorithm 1): co-occurrence-aware collision redirection."""
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import hashing
+from repro.core.cbe import cbe_hash_matrix, cooccurrence_stats
+
+
+def _data(n=400, d=60, density=0.06, seed=0):
+    X = sp.random(n, d, density=density, format="csr",
+                  random_state=np.random.default_rng(seed))
+    X.data[:] = 1.0
+    return X
+
+
+def test_output_shape_and_range():
+    X = _data()
+    H = hashing.make_hash_matrix_np(60, 4, 20, seed=0)
+    H2 = cbe_hash_matrix(X, H, 20, seed=0)
+    assert H2.shape == H.shape
+    assert H2.min() >= 0 and H2.max() < 20
+    assert H2.dtype == np.int32
+
+
+def test_top_cooccurring_pair_shares_a_bit():
+    # construct data where items 0 and 1 co-occur massively
+    n, d, m = 500, 30, 12
+    rows = []
+    for i in range(n):
+        r = np.zeros(d)
+        if i % 2 == 0:
+            r[[0, 1]] = 1.0
+        r[2 + (i % (d - 2))] = 1.0
+        rows.append(r)
+    X = sp.csr_matrix(np.stack(rows))
+    H = hashing.make_hash_matrix_np(d, 3, m, seed=1)
+    H2 = cbe_hash_matrix(X, H, m, seed=1)
+    assert set(H2[0]) & set(H2[1]), \
+        "most co-occurring pair must collide on a shared bit"
+
+
+def test_untouched_rows_keep_original_hashes():
+    X = _data(seed=3)
+    H = hashing.make_hash_matrix_np(60, 4, 20, seed=3)
+    H2 = cbe_hash_matrix(X, H, 20, seed=3, max_pairs=5)
+    # with only 5 pairs processed, at most 10 rows may change
+    changed = (H2 != H).any(axis=1).sum()
+    assert changed <= 10
+
+
+def test_cooccurrence_stats_reasonable():
+    X = _data()
+    pct, rho = cooccurrence_stats(X)
+    assert 0 <= pct <= 100
+    assert 0 <= rho <= 1
+
+
+def test_deterministic_given_seed():
+    X = _data(seed=5)
+    H = hashing.make_hash_matrix_np(60, 4, 20, seed=5)
+    a = cbe_hash_matrix(X, H, 20, seed=9)
+    b = cbe_hash_matrix(X, H, 20, seed=9)
+    np.testing.assert_array_equal(a, b)

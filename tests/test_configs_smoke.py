@@ -1,0 +1,132 @@
+"""Per-arch reduced smoke tests (deliverable f): instantiate each assigned
+architecture's reduced config and run one forward + one train step on CPU,
+asserting output shapes and no NaNs.  Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPE_BY_NAME, TrainConfig
+from repro.launch import steps as steps_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_batch(cfg, B=2, S=16):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family in ("vlm", "audio"):
+        batch["embeds"] = jax.random.normal(
+            KEY, (B, 8, cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list(configs.ARCH_NAMES))
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    init = steps_lib.init_fn_for(cfg)
+    params = init(KEY)
+    batch = _smoke_batch(cfg)
+
+    # forward
+    loss_fn = steps_lib.loss_fn_for(cfg)
+    loss, metrics = loss_fn(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+
+    # one full train step (grads + optimizer update)
+    tc = TrainConfig(optimizer="adamw", learning_rate=1e-3,
+                     grad_clip_norm=1.0, warmup_steps=0)
+    step, optimizer = steps_lib.make_train_step(cfg, tc)
+    opt_state = optimizer.init(params)
+    new_params, _, m2 = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(m2["loss"]))
+    # params actually changed
+    delta = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, new_params)
+    assert max(jax.tree.leaves(delta)) > 0
+    # no NaNs anywhere in updated params
+    finite = jax.tree.map(lambda a: bool(jnp.isfinite(a).all()), new_params)
+    assert all(jax.tree.leaves(finite)), f"{arch}: NaN in updated params"
+
+
+@pytest.mark.parametrize("arch", list(configs.ARCH_NAMES))
+def test_full_config_matches_assignment(arch):
+    """Full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+    }[arch]
+    cfg = configs.get_config(arch)
+    L, D, H, KV, FF, V = spec
+    assert cfg.num_layers == L and cfg.d_model == D
+    assert cfg.d_ff == FF and cfg.vocab == V
+    if H is not None:
+        assert cfg.num_heads == H and cfg.num_kv_heads == KV
+
+
+def test_moe_configs():
+    ds = configs.get_config("deepseek-moe-16b")
+    assert ds.moe.num_experts == 64 and ds.moe.top_k == 6
+    assert ds.moe.num_shared == 2
+    ol = configs.get_config("olmoe-1b-7b")
+    assert ol.moe.num_experts == 64 and ol.moe.top_k == 8
+    jb = configs.get_config("jamba-v0.1-52b")
+    assert jb.moe.num_experts == 16 and jb.moe.top_k == 2
+    assert jb.attn_layer_period == 8
+    mb = configs.get_config("mamba2-1.3b")
+    assert mb.mamba.d_state == 128
+
+
+def test_param_counts_match_published_sizes():
+    """Analytic parameter counts near the published model sizes (dense IO)."""
+    expect = {"pixtral-12b": 12.2e9, "phi3-mini-3.8b": 3.8e9,
+              "granite-8b": 8.2e9, "qwen3-4b": 4.4e9,
+              "qwen1.5-0.5b": 0.46e9, "deepseek-moe-16b": 16.9e9,
+              "olmoe-1b-7b": 6.9e9, "jamba-v0.1-52b": 51.5e9,
+              "mamba2-1.3b": 1.4e9}
+    for arch, want in expect.items():
+        got = configs.get_config(arch, bloom=False).param_count()
+        assert abs(got - want) / want < 0.12, f"{arch}: {got/1e9:.2f}B"
+
+
+def test_cell_grid_has_32_runnable_and_8_documented_skips():
+    cells = list(configs.all_cells())
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    skipped = [c for c in cells if not c[2]]
+    assert len(runnable) == 32 and len(skipped) == 8
+    for arch, shape, _, reason in skipped:
+        assert shape == "long_500k" and "quadratic" in reason
+
+
+def test_input_specs_cover_all_runnable_cells():
+    for arch, shape_name, ok, _ in configs.all_cells():
+        if not ok:
+            continue
+        cfg = configs.get_config(arch)
+        shape = SHAPE_BY_NAME[shape_name]
+        spec = configs.input_specs(cfg, shape)
+        assert "tokens" in spec
+        if shape.kind == "decode":
+            assert spec["tokens"].shape == (shape.global_batch, 1)
+            caches = configs.cache_specs(cfg, shape)
+            assert len(jax.tree.leaves(caches)) > 0
+        if cfg.family in ("vlm", "audio") and shape.kind != "decode":
+            assert "embeds" in spec
+
+
+def test_bloom_m_alignment():
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get_config(arch)
+        assert cfg.m_vocab % 256 == 0, arch  # TPU-lane / TP alignment
+        assert cfg.m_vocab < cfg.vocab

@@ -1,0 +1,75 @@
+"""Counting Bloom embeddings (paper Sec. 7 future-work extension)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bloom import BloomSpec, encode
+from repro.core.counting import (CountingBloomIO, counting_xent_multilabel,
+                                 encode_counting)
+
+
+def test_counting_encode_sums_multiplicities():
+    spec = BloomSpec(d=50, m=20, k=3, seed=0)
+    p = jnp.array([[1, 2, 3, -1]])
+    u_bin = np.asarray(encode(spec, p))
+    u_cnt = np.asarray(encode_counting(spec, p))
+    # total mass = c * k exactly (no saturation)
+    assert u_cnt.sum() == 3 * 3
+    # counting >= binary everywhere; equal where no collisions
+    assert (u_cnt >= u_bin).all()
+    assert u_cnt.max() >= 1
+
+
+def test_binary_is_saturated_counting():
+    # the binary encoding is exactly min(counting, 1) — always
+    spec = BloomSpec(d=600, m=48, k=3, seed=1)
+    p = jnp.array([[4, 9, 100, 599, -1]])
+    u_bin = np.asarray(encode(spec, p))
+    u_cnt = np.asarray(encode_counting(spec, p))
+    np.testing.assert_allclose(u_bin, np.minimum(u_cnt, 1.0))
+
+
+def test_counting_io_interface_and_learning_signal():
+    emb = CountingBloomIO(d=80, m=24, k=3)
+    p = jnp.array([[1, 2, 5, -1], [7, -1, -1, -1]])
+    x = emb.encode_input(p)
+    assert x.shape == (2, 24)
+    pred = jax.random.normal(jax.random.PRNGKey(0), (2, 24))
+    loss = emb.loss(pred, p)
+    assert np.isfinite(np.asarray(loss)).all()
+    scores = emb.decode(pred)
+    assert scores.shape == (2, 80)
+    # gradient exists and is nonzero
+    g = jax.grad(lambda z: emb.loss(z, p).sum())(pred)
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_counting_recommender_learns():
+    from repro.data.synthetic import make_recsys
+    from repro.data.pipeline import BatchIterator
+    from repro.models import recommender as rec
+    from repro.optim import optimizers as opt
+    from repro.train import metrics as M
+
+    data = make_recsys(n=600, d=300, mean_items=8, seed=3)
+    emb = CountingBloomIO(d=300, m=100, k=3)
+    params = rec.recommender_init(jax.random.PRNGKey(0), emb, [64])
+    tx = opt.make_optimizer("adam", 2e-3)
+    state = tx.init(params)
+
+    @jax.jit
+    def step(params, state, p, q):
+        g = jax.grad(lambda pr: rec.recommender_loss(pr, emb, p, q))(params)
+        u, state = tx.update(g, state, params)
+        return opt.apply_updates(params, u), state
+
+    it = BatchIterator(list(data.train()), 64, seed=0)
+    for _ in range(80):
+        p, q = next(it)
+        params, state = step(params, state, jnp.asarray(p), jnp.asarray(q))
+    p_te, q_te = data.test()
+    scores = np.asarray(rec.recommender_scores(params, emb,
+                                               jnp.asarray(p_te)))
+    mapv = M.mean_average_precision(scores, q_te, p_te)
+    assert mapv > 0.02, mapv

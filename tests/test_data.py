@@ -1,0 +1,81 @@
+"""Data generators + resumable pipeline."""
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.data.pipeline import BatchIterator, lm_batches
+
+
+def test_recsys_statistics():
+    data = synthetic.make_recsys(n=500, d=400, mean_items=10, seed=0)
+    assert data.p_in.shape[0] == 500
+    # every instance has >= 1 input and >= 1 output item
+    assert (data.p_in[:, 0] >= 0).all()
+    assert (data.q_out[:, 0] >= 0).all()
+    # density in the sparse regime the paper studies
+    density = data.X_in.nnz / (500 * 400)
+    assert 1e-3 < density < 0.2
+    # input/output items within range
+    assert data.p_in.max() < 400 and data.q_out.max() < 400
+
+
+def test_recsys_cooccurrence_structure():
+    """Latent-factor data must have more co-occurrence than shuffled data."""
+    from repro.core.cbe import cooccurrence_stats
+    data = synthetic.make_recsys(n=800, d=300, mean_items=8, seed=1)
+    pct, rho = cooccurrence_stats(data.X_in)
+    assert pct > 0.5  # co-occurring pairs exist
+
+
+def test_classification_generator():
+    p, labels, n_train, X = synthetic.make_classification(
+        n=200, d=500, n_classes=5, seed=0)
+    assert p.shape[0] == 200 and labels.shape == (200,)
+    assert labels.min() >= 0 and labels.max() < 5
+    assert 0 < n_train < 200
+
+
+def test_sessions_generator():
+    seqs, n_train = synthetic.make_sessions(n_sessions=100, d=200, seed=0)
+    assert seqs.shape[0] == 100
+    assert (seqs[:, 0] >= 0).all()          # at least one item
+    assert (seqs[:, 1] >= 0).all()          # min length 2
+
+
+def test_token_stream_zipf():
+    s = synthetic.make_token_stream(50_000, vocab=1000, seed=0)
+    counts = np.bincount(s, minlength=1000)
+    # zipf: top token much more frequent than median
+    assert counts.max() > 20 * max(np.median(counts), 1)
+
+
+def test_iterator_determinism_and_resume():
+    X = np.arange(100)[:, None]
+    it1 = BatchIterator([X], 10, seed=3)
+    seq1 = [it1.__next__()[0].copy() for _ in range(15)]
+
+    it2 = BatchIterator([X], 10, seed=3)
+    for _ in range(7):
+        next(it2)
+    state = it2.state()
+    it3 = BatchIterator([X], 10, seed=0)
+    it3.restore(state)
+    for i in range(7, 15):
+        np.testing.assert_array_equal(next(it3)[0], seq1[i])
+
+
+def test_iterator_host_sharding_partitions_data():
+    X = np.arange(100)[:, None]
+    a = BatchIterator([X], 5, host_id=0, host_count=2)
+    b = BatchIterator([X], 5, host_id=1, host_count=2)
+    assert a.n == 50 and b.n == 50
+    assert set(a.arrays[0].ravel()) | set(b.arrays[0].ravel()) == set(
+        range(100))
+    assert not (set(a.arrays[0].ravel()) & set(b.arrays[0].ravel()))
+
+
+def test_lm_batches_windows():
+    s = np.arange(100, dtype=np.int32)
+    w = lm_batches(s, batch=4, seq_len=9)
+    assert w.shape == (10, 10)
+    np.testing.assert_array_equal(w[0], np.arange(10))

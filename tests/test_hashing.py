@@ -1,0 +1,72 @@
+"""Hash substrate: ranges, determinism, independence, de-duplication."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+@given(st.integers(1, 10_000), st.integers(1, 8), st.integers(16, 4096),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_double_hash_range_and_determinism(n_ids, k, m, seed):
+    k = min(k, m)
+    ids = jnp.arange(min(n_ids, 256))
+    h1 = np.asarray(hashing.double_hash(ids, k, m, seed))
+    h2 = np.asarray(hashing.double_hash(ids, k, m, seed))
+    assert h1.shape == (ids.shape[0], k)
+    assert (h1 >= 0).all() and (h1 < m).all()
+    np.testing.assert_array_equal(h1, h2)
+
+
+def test_double_hash_seeds_differ():
+    ids = jnp.arange(512)
+    a = np.asarray(hashing.double_hash(ids, 4, 1024, seed=0))
+    b = np.asarray(hashing.double_hash(ids, 4, 1024, seed=1))
+    assert (a != b).mean() > 0.9
+
+
+def test_double_hash_uniformity():
+    """Projected ids should spread ~uniformly over [0, m)."""
+    m = 64
+    h = np.asarray(hashing.double_hash(jnp.arange(20_000), 2, m, seed=3))
+    counts = np.bincount(h.reshape(-1), minlength=m)
+    expected = h.size / m
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # dof=63; 3x dof is a very loose bound that catches gross bias
+    assert chi2 < 3 * m
+
+
+def test_hash_matrix_no_row_duplicates():
+    H = np.asarray(hashing.make_hash_matrix(5000, 6, 300, seed=1))
+    dups = sum(len(r) - len(set(r)) for r in H)
+    assert dups == 0
+    assert H.min() >= 0 and H.max() < 300
+
+
+def test_hash_matrix_np_strict():
+    H = hashing.make_hash_matrix_np(2000, 8, 64, seed=2)
+    for r in H:
+        assert len(set(r)) == 8
+
+
+def test_hash_matrix_np_matches_range():
+    H = hashing.make_hash_matrix_np(100, 3, 10, seed=0)
+    assert H.shape == (100, 3) and H.min() >= 0 and H.max() < 10
+
+
+def test_k_greater_than_m_rejected():
+    with pytest.raises(ValueError):
+        hashing.make_hash_matrix(10, 5, 3)
+    with pytest.raises(ValueError):
+        hashing.make_hash_matrix_np(10, 5, 3)
+
+
+def test_hash_indices_matrix_vs_onthefly_paths():
+    ids = jnp.array([0, 5, 99])
+    H = hashing.make_hash_matrix(100, 4, 32, seed=7)
+    via_matrix = hashing.hash_indices(ids, k=4, m=32, seed=7,
+                                      hash_matrix=H)
+    np.testing.assert_array_equal(np.asarray(via_matrix),
+                                  np.asarray(H)[np.asarray(ids)])

@@ -1,0 +1,75 @@
+"""Loss functions, incl. the shard-friendly iota-compare gather."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses
+from repro.core.bloom import BloomSpec, encode
+
+
+@given(st.integers(2, 64), st.integers(1, 6), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_gather_last_axis_matches_take_along_axis(m, k, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (3, m))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (3, k), 0, m)
+    got = np.asarray(losses.gather_last_axis(logits, idx))
+    want = np.asarray(jnp.take_along_axis(logits, idx, axis=-1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_bloom_xent_equals_dense_ce_with_khot_target():
+    spec = BloomSpec(d=100, m=32, k=4, seed=0)
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (5, 32))
+    labels = jnp.array([3, 50, 99, 0, 42])
+    got = np.asarray(losses.bloom_xent_label(spec, logits, labels))
+    # manual: CE against 1/k mass on each hash position
+    idx = np.asarray(spec.indices_for(labels))
+    logp = np.asarray(jax.nn.log_softmax(logits))
+    want = -np.stack([logp[i, idx[i]].mean() for i in range(5)])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_bloom_xent_identity_spec_equals_standard_ce():
+    spec = BloomSpec(d=32, m=32, k=1, seed=0, on_the_fly=False)
+    H = jnp.arange(32)[:, None]  # identity hash
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    labels = jnp.array([0, 5, 31, 7])
+    got = np.asarray(losses.bloom_xent_label(spec, logits, labels,
+                                             hash_matrix=H))
+    want = np.asarray(losses.softmax_xent_label(logits, labels))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_multilabel_bloom_xent_finite_and_masked():
+    spec = BloomSpec(d=64, m=24, k=3, seed=1)
+    logits = jax.random.normal(jax.random.PRNGKey(2), (3, 24))
+    targets = jnp.array([[1, 2, -1], [5, -1, -1], [-1, -1, -1]])
+    loss = np.asarray(losses.bloom_xent_multilabel(spec, logits, targets))
+    assert np.isfinite(loss[:2]).all()
+    assert loss[2] == 0.0  # empty target set -> masked out
+
+
+def test_valid_mask_zeroes_loss():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    labels = jnp.array([1, 2, 3, 4])
+    valid = jnp.array([1.0, 0.0, 1.0, 0.0])
+    loss = np.asarray(losses.softmax_xent_label(logits, labels, valid))
+    assert loss[1] == 0.0 and loss[3] == 0.0 and (loss[[0, 2]] > 0).all()
+
+
+def test_cosine_loss_bounds():
+    a = jax.random.normal(jax.random.PRNGKey(4), (10, 8))
+    same = np.asarray(losses.cosine_proximity_loss(a, a))
+    np.testing.assert_allclose(same, 0.0, atol=1e-5)
+    opp = np.asarray(losses.cosine_proximity_loss(a, -a))
+    np.testing.assert_allclose(opp, 2.0, atol=1e-5)
+
+
+def test_softmax_xent_dense_masks_zero_rows():
+    logits = jax.random.normal(jax.random.PRNGKey(5), (2, 8))
+    target = jnp.stack([jnp.zeros(8), jax.nn.one_hot(3, 8)])
+    loss = np.asarray(losses.softmax_xent_dense(logits, target))
+    assert loss[0] == 0.0 and loss[1] > 0

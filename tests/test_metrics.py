@@ -1,0 +1,45 @@
+"""Evaluation measures (paper Sec. 4.1)."""
+import numpy as np
+import pytest
+
+from repro.train import metrics as M
+
+
+def test_average_precision_perfect_ranking():
+    scores = np.array([0.9, 0.8, 0.1, 0.05])
+    ap = M.average_precision(scores, np.array([0, 1]))
+    assert ap == pytest.approx(1.0)
+
+
+def test_average_precision_interleaved():
+    # relevant at ranks 1 and 3 -> AP = (1/1 + 2/3)/2
+    scores = np.array([0.9, 0.5, 0.4, 0.1])
+    ap = M.average_precision(scores, np.array([0, 2]))
+    assert ap == pytest.approx((1.0 + 2 / 3) / 2)
+
+
+def test_average_precision_excludes_inputs():
+    scores = np.array([0.9, 0.8, 0.7, 0.1])
+    # item 0 excluded (was an input) -> relevant item 1 ranks first
+    ap = M.average_precision(scores, np.array([1]), exclude=np.array([0]))
+    assert ap == pytest.approx(1.0)
+
+
+def test_map_ignores_empty_rows():
+    scores = np.random.default_rng(0).normal(size=(3, 5))
+    rel = np.array([[0, -1], [-1, -1], [1, -1]])
+    m = M.mean_average_precision(scores, rel)
+    assert 0.0 <= m <= 1.0
+
+
+def test_reciprocal_rank():
+    scores = np.array([[0.1, 0.9, 0.5], [0.9, 0.1, 0.5]])
+    target = np.array([1, 2])
+    rr = M.reciprocal_rank(scores, target)
+    assert rr == pytest.approx((1.0 + 0.5) / 2)
+
+
+def test_accuracy():
+    scores = np.array([[0.9, 0.1], [0.2, 0.8], [0.7, 0.3]])
+    target = np.array([0, 1, 1])
+    assert M.accuracy(scores, target) == pytest.approx(100 * 2 / 3)

@@ -1,0 +1,76 @@
+"""Mamba-2 SSD: chunked vs sequential oracle, decode continuation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.models import mamba2
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(chunk=4, d_state=8, head_dim=8, d_model=32):
+    return ModelConfig(name="m", family="ssm", num_layers=1,
+                       d_model=d_model, d_ff=0, vocab=64, dtype="float32",
+                       mamba=MambaConfig(d_state=d_state, head_dim=head_dim,
+                                         expand=2, chunk=chunk))
+
+
+@pytest.mark.parametrize("chunk,S", [(4, 12), (3, 12), (6, 12), (12, 12)])
+def test_chunked_matches_sequential(chunk, S):
+    cfg = _cfg(chunk=chunk)
+    params = mamba2.mamba_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, S, 32)) * 0.3
+    y1 = mamba2.mamba_apply(params, cfg, x)
+    y2 = mamba2.mamba_reference(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+
+def test_prefill_cache_then_decode_matches_full():
+    cfg = _cfg(chunk=4)
+    params = mamba2.mamba_init(KEY, cfg)
+    S = 8
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (2, S + 1, 32)) * 0.3
+    full = mamba2.mamba_apply(params, cfg, x)
+    _, cache = mamba2.mamba_apply(params, cfg, x[:, :S], return_cache=True)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32), cache)
+    y_dec, _ = mamba2.mamba_decode_step(params, cfg, x[:, S:S + 1], cache)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=5e-4)
+
+
+def test_decode_state_is_constant_size():
+    cfg = _cfg()
+    cache = mamba2.init_mamba_cache(cfg, batch=3)
+    sizes = {k: v.shape for k, v in cache.items()}
+    # no sequence-length dimension anywhere
+    assert sizes["ssm"] == (3, 8, 8, 8)  # (B, H, N, P)
+    assert sizes["conv_x"][1] == cfg.mamba.d_conv - 1
+
+
+def test_gradients_flow():
+    cfg = _cfg()
+    params = mamba2.mamba_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 8, 32)) * 0.3
+
+    def loss(p):
+        return (mamba2.mamba_apply(p, cfg, x) ** 2).sum()
+
+    g = jax.grad(loss)(params)
+    norms = jax.tree.map(lambda a: float(jnp.linalg.norm(a)), g)
+    flat = jax.tree.leaves(norms)
+    assert all(np.isfinite(v) for v in flat)
+    assert sum(flat) > 0
+
+
+def test_multi_group_broadcast():
+    cfg = ModelConfig(name="m", family="ssm", num_layers=1, d_model=32,
+                      d_ff=0, vocab=64, dtype="float32",
+                      mamba=MambaConfig(d_state=8, head_dim=8, expand=2,
+                                        n_groups=2, chunk=4))
+    params = mamba2.mamba_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, 32)) * 0.3
+    y1 = mamba2.mamba_apply(params, cfg, x)
+    y2 = mamba2.mamba_reference(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)

@@ -1,0 +1,95 @@
+"""MoE: capacity-buffer routing vs dense oracle, aux loss, shared experts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, ModelConfig
+from repro.models import moe
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(E=8, k=2, shared=0, cf=8.0):
+    return ModelConfig(
+        name="moe", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab=64, dtype="float32",
+        moe=MoEConfig(num_experts=E, top_k=k, num_shared=shared,
+                      d_ff_expert=24, capacity_factor=cf))
+
+
+def test_capacity_path_matches_dense_oracle_when_no_drops():
+    """With a huge capacity factor nothing is dropped -> exact match."""
+    cfg = _cfg(cf=16.0)
+    params = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 10, 16))
+    y1, aux = moe.moe_apply(params, x, cfg)
+    y2 = moe.moe_apply_reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_shared_experts_added():
+    cfg = _cfg(shared=2, cf=16.0)
+    params = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 6, 16))
+    y1, _ = moe.moe_apply(params, x, cfg)
+    y2 = moe.moe_apply_reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_capacity_dropping_bounds_work():
+    """Tiny capacity factor must not crash; output stays finite."""
+    cfg = _cfg(cf=0.25)
+    params = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, 16))
+    y, aux = moe.moe_apply(params, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Perfectly balanced routing gives aux ~= 1 (E * sum_e (1/E)*(1/E))."""
+    cfg = _cfg(E=4, k=1, cf=16.0)
+    params = moe.moe_init(KEY, cfg)
+    # zero router weights -> uniform probs; top-1 picks expert 0 always,
+    # so f is concentrated: aux = E * (1 * 1/E) = 1
+    params["router"] = jnp.zeros_like(params["router"])
+    x = jax.random.normal(KEY, (1, 8, 16))
+    _, aux = moe.moe_apply(params, x, cfg)
+    assert float(aux) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_grads_flow_through_routing():
+    cfg = _cfg(cf=16.0)
+    params = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 8, 16))
+
+    def loss(p):
+        y, aux = moe.moe_apply(p, x, cfg)
+        return (y ** 2).sum() + aux
+
+    g = jax.grad(loss)(params)
+    gn = float(jnp.linalg.norm(g["router"]))
+    assert np.isfinite(gn) and gn > 0
+    assert float(jnp.linalg.norm(g["w_down"])) > 0
+
+
+def test_top1_routes_to_argmax_expert():
+    cfg = _cfg(E=4, k=1, cf=16.0)
+    params = moe.moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 7), (1, 5, 16))
+    logits = x.reshape(-1, 16) @ params["router"]
+    sel = np.asarray(jnp.argmax(logits, -1))
+    # recompute through the public api: zero out all but selected expert's
+    # w_down and check output unchanged
+    y_full, _ = moe.moe_apply(params, x, cfg)
+    wd = np.asarray(params["w_down"])
+    mask = np.zeros_like(wd)
+    for e in np.unique(sel):
+        mask[e] = wd[e]
+    params2 = dict(params, w_down=jnp.asarray(mask))
+    y_masked, _ = moe.moe_apply(params2, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_masked),
+                               atol=1e-5)

@@ -1,0 +1,120 @@
+"""Tests for the §Perf hillclimb features: adafactor, bf16 score chains,
+causal_skip config path, one-shot param casting, optimized-mesh specs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.launch import steps as steps_lib
+from repro.models import attention as A
+from repro.models import transformer as tf
+from repro.optim import optimizers as opt
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adafactor_state_is_factored_and_small():
+    tx = opt.scale_by_adafactor()
+    params = {"big": jnp.zeros((64, 128)), "vec": jnp.zeros((32,))}
+    st = tx.init(params)
+    assert st["s"]["big"]["nu"]["vr"].shape == (64,)
+    assert st["s"]["big"]["nu"]["vc"].shape == (128,)
+    assert st["s"]["big"]["mu"].dtype == jnp.bfloat16
+    assert st["s"]["vec"]["nu"]["v"].shape == (32,)
+    # state bytes << adam's 2x fp32
+    n_state = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(st["s"]))
+    n_adam = 2 * sum(p.size * 4 for p in jax.tree.leaves(params))
+    assert n_state < 0.35 * n_adam
+
+
+def test_adafactor_trains_the_lm():
+    cfg = configs.get_smoke_config("qwen3-4b")
+    tc = TrainConfig(optimizer="adafactor", learning_rate=3e-3,
+                     grad_clip_norm=1.0, warmup_steps=0)
+    step, tx = steps_lib.make_train_step(cfg, tc)
+    params = tf.lm_init(KEY, cfg)
+    opt_state = tx.init(params)
+    toks = jax.random.randint(KEY, (4, 16), 0, cfg.vocab)
+    losses = []
+    jstep = jax.jit(step)
+    for _ in range(15):
+        params, opt_state, m = jstep(params, opt_state, {"tokens": toks})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_bf16_scores_close_to_f32():
+    B, S, KV, G, hd = 2, 16, 2, 2, 8
+    q = jax.random.normal(KEY, (B, S, KV, G, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd),
+                          jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_bf = A.chunked_attention(q, k, v, causal=True, chunk_k=4, q_pos=pos,
+                               kv_pos=pos, bf16_scores=True)
+    o_f32 = A.naive_attention(q.astype(jnp.float32),
+                              k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=True,
+                              q_pos=pos, kv_pos=pos)
+    diff = float(jnp.abs(o_bf.astype(jnp.float32) - o_f32).max())
+    assert diff < 3e-2, diff
+
+
+def test_bf16_scores_model_loss_close():
+    cfg = configs.get_smoke_config("granite-8b", dtype="float32")
+    cfg_b = dataclasses.replace(cfg, attn_bf16_scores=True)
+    params = tf.lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    l1, _ = tf.lm_loss_fn(params, cfg, {"tokens": toks})
+    l2, _ = tf.lm_loss_fn(params, cfg_b, {"tokens": toks})
+    assert float(l1) == pytest.approx(float(l2), rel=3e-2)
+
+
+def test_causal_skip_model_equivalence():
+    cfg = configs.get_smoke_config("phi3-mini-3.8b", dtype="float32")
+    cfg_cs = dataclasses.replace(cfg, causal_skip=True, attn_chunk_q=8,
+                                 attn_chunk_k=8)
+    params = tf.lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    l1, _ = tf.lm_loss_fn(params, cfg, {"tokens": toks})
+    l2, _ = tf.lm_loss_fn(params, cfg_cs, {"tokens": toks})
+    assert float(l1) == pytest.approx(float(l2), rel=1e-5)
+
+
+def test_cast_params_for_compute_only_matrices():
+    cfg = configs.get_smoke_config("qwen3-4b", dtype="bfloat16")
+    params = {"w": jnp.zeros((4, 4), jnp.float32),
+              "scale": jnp.ones((4,), jnp.float32),
+              "idx": jnp.zeros((4, 4), jnp.int32)}
+    out = steps_lib.cast_params_for_compute(params, cfg)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["scale"].dtype == jnp.float32   # 1-D stays fp32
+    assert out["idx"].dtype == jnp.int32       # ints untouched
+
+
+def test_adafactor_opt_state_specs():
+    from repro.launch.sharding import opt_state_pspecs, param_pspecs
+    from jax.sharding import PartitionSpec as P
+
+    class _FakeDist:
+        n_model = 16
+        model_axis = "model"
+
+    cfg = configs.get_config("qwen3-4b")
+    init = steps_lib.init_fn_for(cfg)
+    params = jax.eval_shape(init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_pspecs(cfg, params, _FakeDist())
+    tx = opt.make_optimizer("adafactor", 1e-3)
+    opt_sds = jax.eval_shape(tx.init, params)
+    ospecs = opt_state_pspecs(opt_sds, pspecs)
+    # embed moment mu inherits the vocab-sharded spec
+    mu_spec = ospecs[0]["s"]["io"]["embed"]["mu"]
+    assert mu_spec == pspecs["io"]["embed"]
+    vr_spec = ospecs[0]["s"]["io"]["embed"]["nu"]["vr"]
+    assert len(vr_spec) == 1

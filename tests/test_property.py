@@ -1,0 +1,98 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+from repro.core.bloom import BloomSpec, encode, decode_scores
+from repro.data.pipeline import BatchIterator
+
+
+@given(
+    d=st.integers(20, 500),
+    ratio=st.floats(0.1, 1.0),
+    k=st.integers(1, 6),
+    n_items=st.integers(1, 10),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_bloom_recall_is_total(d, ratio, k, n_items, seed):
+    """Paper Sec 3.1: member checks have 100% recall for ANY (d, m, k)."""
+    m = max(k, int(d * ratio))
+    spec = BloomSpec(d=d, m=m, k=k, seed=seed)
+    rng = np.random.default_rng(seed)
+    items = rng.choice(d, size=min(n_items, d), replace=False)
+    u = encode(spec, jnp.asarray(items)[None, :])
+    idx = np.asarray(spec.indices_for(jnp.asarray(items)))
+    bits = np.asarray(u[0])
+    assert (bits[idx.reshape(-1)] == 1).all()
+
+
+@given(
+    seed=st.integers(0, 1000),
+    c1=st.integers(0, 30),
+    c2=st.integers(0, 30),
+)
+@settings(max_examples=20, deadline=None)
+def test_bloom_encoding_is_monotone_in_sets(seed, c1, c2):
+    """u(A ∪ B) >= u(A) elementwise — adding items never clears bits."""
+    d, m, k = 200, 64, 3
+    spec = BloomSpec(d=d, m=m, k=k, seed=seed)
+    rng = np.random.default_rng(seed)
+    A = rng.choice(d, size=max(c1, 1), replace=False)
+    B = rng.choice(d, size=max(c2, 1), replace=False)
+    AB = np.unique(np.concatenate([A, B]))
+    uA = np.asarray(encode(spec, jnp.asarray(A)[None]))
+    uAB = np.asarray(encode(spec, jnp.asarray(AB)[None]))
+    assert (uAB >= uA).all()
+
+
+@given(
+    n=st.integers(10, 200),
+    batch=st.integers(1, 16),
+    stop=st.integers(0, 30),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=20, deadline=None)
+def test_pipeline_resume_equivalence(n, batch, stop, seed):
+    """Restoring iterator state replays the exact remaining sequence."""
+    batch = min(batch, n)
+    X = np.arange(n)[:, None]
+    it1 = BatchIterator([X], batch, seed=seed)
+    ref = [it1.__next__()[0].copy() for _ in range(stop + 10)]
+
+    it2 = BatchIterator([X], batch, seed=seed)
+    for _ in range(stop):
+        next(it2)
+    st_ = it2.state()
+    it3 = BatchIterator([X], batch, seed=999)
+    it3.restore(st_)
+    for i in range(stop, stop + 10):
+        np.testing.assert_array_equal(next(it3)[0], ref[i])
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_hash_matrix_rows_are_valid_bloom_codes(d, k, seed):
+    m = max(k, 32)
+    H = np.asarray(hashing.make_hash_matrix(d, k, m, seed))
+    assert H.shape == (d, k)
+    assert ((H >= 0) & (H < m)).all()
+
+
+@given(
+    m=st.integers(8, 128),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=15, deadline=None)
+def test_decode_scores_permutation_invariance(m, k, seed):
+    """Scores depend only on (log_v, H) — batch order is irrelevant."""
+    d = 128
+    spec = BloomSpec(d=d, m=min(m, d), k=min(k, m), seed=seed)
+    key = jax.random.PRNGKey(seed)
+    logv = jax.nn.log_softmax(jax.random.normal(key, (4, m)))
+    s = np.asarray(decode_scores(spec, logv, chunk=16))
+    s_perm = np.asarray(decode_scores(spec, logv[::-1], chunk=16))
+    np.testing.assert_allclose(s, s_perm[::-1], rtol=1e-6)
