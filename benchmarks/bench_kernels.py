@@ -1,80 +1,267 @@
-"""Kernel microbenchmarks: the three Bloom Pallas kernels at production
-shapes, with analytic TPU-v5e time models (this box is CPU — wall time of
-interpret mode is meaningless; bytes-derived HBM time is the metric).
+"""Kernel microbenchmarks: the Bloom Pallas kernel suite (fwd, bwd and the
+fused decode-topk) at production shapes, with analytic TPU-v5e byte/time
+models (this box is CPU — wall time of interpret mode is meaningless;
+bytes-derived HBM time is the metric).
+
+Every row couples the analytic bytes model of the kernel's HBM traffic at
+the PRODUCTION shape with a numeric oracle check (kernel vs the pure-jnp
+XLA reference) at a shape small enough for interpret mode; `check_*` fields
+record the checked shape when it is scaled down.
+
+``python -m benchmarks.bench_kernels --quick`` regenerates the committed
+``BENCH_kernels.json``; ``--check`` instead compares fresh errors/ratios
+against the committed file and exits non-zero on regression (wired into
+CI).  The serving acceptance bar lives in the `decode_topk` rows:
+``hbm_ratio`` = decode-then-top_k bytes / fused bytes must stay >= 3 at the
+qwen3-4b shape.
 """
 from __future__ import annotations
 
-import time
+import argparse
+import json
+import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.bloom import BloomSpec
 from repro.kernels import ops, ref
+# M_TILE is single-sourced from the kernels so the bwd bytes models
+# cannot drift from the m-tile the backward grids actually run with
+from repro.kernels.common import BWD_M_TILE as M_TILE
+from repro.kernels.bloom_ce import bloom_ce_pallas
+from repro.kernels.bloom_decode import bloom_decode_pallas
+from repro.kernels.bloom_decode_topk import bloom_decode_topk_pallas
+from repro.kernels.bloom_embed import bloom_embed_pallas
 
 HBM_BW = 819e9
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_kernels.json"
+TOPK = 16
+B_DECODE = 8
 
 
 def _cases():
     # (name, d, m, k, D, tokens)
     return [
-        ("qwen3-4b.embed", 151_936, 30_464, 4, 2560, 4096),
-        ("qwen1.5-0.5b.embed", 151_936, 30_464, 4, 1024, 4096),
-        ("pixtral-12b.embed", 131_072, 26_112, 4, 5120, 2048),
+        ("qwen3-4b", 151_936, 30_464, 4, 2560, 4096),
+        ("qwen1.5-0.5b", 151_936, 30_464, 4, 1024, 4096),
+        ("pixtral-12b", 131_072, 26_112, 4, 5120, 2048),
     ]
+
+
+def _row(name, tokens, bytes_moved, err, **extra):
+    return {"bench": "kernels", "name": name, "tokens": tokens,
+            "bytes": bytes_moved, "max_err": err,
+            "tpu_us_model": 1e6 * bytes_moved / HBM_BW, **extra}
+
+
+def _max_err(a, b):
+    return float(jnp.abs(jnp.asarray(a, jnp.float32)
+                         - jnp.asarray(b, jnp.float32)).max())
 
 
 def run(quick: bool = True):
     rows = []
     key = jax.random.PRNGKey(0)
     for name, d, m, k, D, T in _cases():
-        # interpret-mode Pallas executes the grid in Python — keep the
-        # measured token block small; the bytes model scales analytically.
-        T = min(T, 64 if quick else 256)
+        # Bytes models are computed at the PRODUCTION shape (d, m, k, D, T
+        # from _cases()).  Interpret-mode Pallas executes the grid in
+        # Python, so the numeric oracle CHECK runs at a clamped token
+        # count, recorded in check_* fields — never in the bytes model.
+        Tc = min(T, 64 if quick else 256)
         spec = BloomSpec(d=d, m=m, k=k)
         table = jax.random.normal(key, (m, D), jnp.bfloat16)
-        tokens = jax.random.randint(key, (1, T), 0, d)
+        tokens = jax.random.randint(key, (1, Tc), 0, d)
         idx = spec.indices_for(tokens.reshape(-1))
+        n_mtiles = -(-m // M_TILE)   # outer m-tile sweeps of the bwd grids
 
-        # correctness vs oracle (always)
+        # ---- embed fwd: k rows of D bf16 per token + output write --------
         got = ops.bloom_embed(table, tokens, spec)[0]
         want = ref.bloom_embed_ref(table, idx)
-        err = float(jnp.abs(got.astype(jnp.float32)
-                            - want.astype(jnp.float32)).max())
+        bytes_fwd = T * (k * D * 2 + D * 2) + T * k * 4
+        rows.append(_row(f"{name}.embed.fwd", T, bytes_fwd,
+                         _max_err(got, want), check_tokens=Tc))
 
-        # analytic TPU time: k rows of D bf16 per token + output write
-        bytes_moved = T * (k * D * 2 + D * 2) + T * k * 4
-        rows.append({"bench": "kernels", "name": name, "tokens": T,
-                     "bytes": bytes_moved, "max_err": err,
-                     "tpu_us_model": 1e6 * bytes_moved / HBM_BW})
+        # ---- embed bwd: blocked one-hot contraction.  The kernel sweeps
+        # the m axis in M_TILE blocks and re-reads g/idx from HBM on every
+        # sweep; the f32 grad table is written exactly once (blocks are
+        # zero-initialized in VMEM).  `bytes_ideal` is the single-pass
+        # scatter-add floor for reference.  Numeric check runs jax.grad
+        # through the custom-VJP at a reduced (tokens, d_model) shape.
+        Tb = min(Tc, 16)
+        idx_b = idx[:Tb]
+        tbl32 = table[:, :min(D, 512)].astype(jnp.float32)
+        cot = jax.random.normal(key, (Tb, tbl32.shape[1]))
+        g_pal = jax.grad(lambda t: jnp.sum(
+            bloom_embed_pallas(t, idx_b, interpret=True) * cot))(tbl32)
+        g_ref = jax.grad(lambda t: jnp.sum(
+            ref.bloom_embed_ref(t, idx_b) * cot))(tbl32)
+        bytes_bwd = n_mtiles * (T * D * 4 + T * k * 4) + m * D * 4
+        bytes_bwd_ideal = T * D * 4 + 2 * m * D * 4 + T * k * 4
+        rows.append(_row(f"{name}.embed.bwd", T, bytes_bwd,
+                         _max_err(g_pal, g_ref),
+                         bytes_ideal=bytes_bwd_ideal,
+                         check_tokens=Tb, check_dmodel=tbl32.shape[1]))
 
-        # fused CE kernel: one read of the (T, m) logits row
-        logits = jax.random.normal(key, (T, m), jnp.float32)
-        labels = jax.random.randint(key, (T,), 0, d)
+        # ---- ce fwd: ONE read of the (T, m) f32 logits row + loss/lse ----
+        logits = jax.random.normal(key, (Tc, m), jnp.float32)
+        labels = jax.random.randint(key, (Tc,), 0, d)
         got = ops.bloom_ce(logits, labels, spec)
         from repro.core import losses
         want = losses.bloom_xent_label(spec, logits, labels)
-        err = float(jnp.abs(got - want).max())
-        bytes_moved = T * m * 4
-        rows.append({"bench": "kernels", "name": name.replace(
-            "embed", "ce"), "tokens": T, "bytes": bytes_moved,
-            "max_err": err, "tpu_us_model": 1e6 * bytes_moved / HBM_BW})
+        bytes_ce_fwd = T * m * 4 + T * k * 4 + 2 * T * 4
+        rows.append(_row(f"{name}.ce.fwd", T, bytes_ce_fwd,
+                         _max_err(got, want), check_tokens=Tc))
 
-        # decode kernel: read logp rows + d*k int32 hash matrix
-        B = 8
+        # ---- ce bwd: lse residual — read the row once, write dz once
+        # (token-blocked grid, no m-tiling: the model IS the actual
+        # kernel traffic here) ---------------------------------------------
+        h = spec.indices_for(labels)
+        cot = jax.random.normal(key, (Tc,))
+        g_pal = jax.grad(lambda z: jnp.sum(
+            bloom_ce_pallas(z, h, interpret=True) * cot))(logits)
+        g_ref = jax.grad(lambda z: jnp.sum(
+            ref.bloom_ce_ref(z, h) * cot))(logits)
+        bytes_ce_bwd = 2 * T * m * 4 + T * (k + 2) * 4
+        rows.append(_row(f"{name}.ce.bwd", T, bytes_ce_bwd,
+                         _max_err(g_pal, g_ref), check_tokens=Tc))
+
+        # ---- decode fwd: logp rows + (d, k) hash matrix + (B, d) scores --
+        B = B_DECODE
         logp = jax.nn.log_softmax(jax.random.normal(key, (B, m)))
-        got = ops.bloom_decode(logp, spec)
-        H = spec.indices_for(jnp.arange(d))
-        want = ref.bloom_decode_ref(logp, H)
-        err = float(jnp.abs(got - want).max())
-        bytes_moved = B * m * 4 + d * k * 4 + B * d * 4
-        rows.append({"bench": "kernels", "name": name.replace(
-            "embed", "decode"), "tokens": B, "bytes": bytes_moved,
-            "max_err": err, "tpu_us_model": 1e6 * bytes_moved / HBM_BW})
+        scores = ops.bloom_decode(logp, spec)
+        H = ops.cached_hash_matrix(spec)
+        want_scores = ref.bloom_decode_ref(logp, H)
+        bytes_dec = B * m * 4 + d * k * 4 + B * d * 4
+        rows.append(_row(f"{name}.decode", B, bytes_dec,
+                         _max_err(scores, want_scores)))
+
+        # ---- decode bwd: blocked scatter-add of the (B, d) cotangent;
+        # like embed.bwd, the m-tile sweep re-reads g/H per M_TILE block
+        # and writes dlogp once.  Full-shape MACs (B*d*m) are prohibitive
+        # in interpret mode, so the numeric check runs a scaled vocab
+        # slice; the bytes model is full-shape.
+        d_chk, m_chk = 4096, 1024
+        spec_chk = BloomSpec(d=d_chk, m=m_chk, k=k)
+        H_chk = ops.cached_hash_matrix(spec_chk)
+        logp_chk = jax.nn.log_softmax(jax.random.normal(key, (B, m_chk)))
+        cot = jax.random.normal(key, (B, d_chk))
+        g_pal = jax.grad(lambda lp: jnp.sum(
+            bloom_decode_pallas(lp, H_chk, interpret=True) * cot))(logp_chk)
+        g_ref = jax.grad(lambda lp: jnp.sum(
+            ref.bloom_decode_ref(lp, H_chk) * cot))(logp_chk)
+        bytes_dec_bwd = n_mtiles * (B * d * 4 + d * k * 4) + B * m * 4
+        bytes_dec_bwd_ideal = B * d * 4 + d * k * 4 + B * m * 4
+        rows.append(_row(f"{name}.decode.bwd", B, bytes_dec_bwd,
+                         _max_err(g_pal, g_ref),
+                         bytes_ideal=bytes_dec_bwd_ideal,
+                         check_d=d_chk, check_m=m_chk))
+
+        # ---- serving: decode-then-top_k vs fused decode_topk -------------
+        # baseline writes the (B, d) score matrix to HBM and reads it back
+        # for jax.lax.top_k
+        want_v, _ = jax.lax.top_k(want_scores, TOPK)
+        bytes_then = B * m * 4 + d * k * 4 + 2 * B * d * 4 + B * TOPK * 8
+        base_v, _ = jax.lax.top_k(scores, TOPK)
+        rows.append(_row(f"{name}.decode_then_topk", B, bytes_then,
+                         _max_err(base_v, want_v), topk=TOPK))
+
+        # fused kernel streams vocab tiles; running top-k stays in VMEM
+        vals, ids = bloom_decode_topk_pallas(logp, H, TOPK)
+        picked = jnp.take_along_axis(want_scores, ids, axis=-1)
+        err = max(_max_err(vals, want_v), _max_err(picked, want_v))
+        bytes_fused = B * m * 4 + d * k * 4 + B * TOPK * 8
+        rows.append(_row(f"{name}.decode_topk", B, bytes_fused, err,
+                         topk=TOPK, hbm_ratio=bytes_then / bytes_fused))
     return rows
 
 
-if __name__ == "__main__":
-    for row in run():
+def write_json(rows, path=JSON_PATH, quick=True):
+    """Write the committed bytes-model snapshot.
+
+    Only --quick rows are accepted as the CI baseline: bytes models are
+    production-shape either way, but check_* shapes (and thus max_err)
+    depend on quick, and CI runs --quick --check — a full-run baseline
+    would compare mismatched check shapes.
+    """
+    if not quick:
+        raise ValueError("the committed baseline is generated with --quick "
+                         "only; rerun with quick=True")
+    payload = {
+        "generated_by": "PYTHONPATH=src python -m benchmarks.bench_kernels"
+                        " --quick",
+        "hbm_bw_bytes_per_s": HBM_BW,
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def check_against(rows, path=JSON_PATH, err_slack=1e-3,
+                  min_topk_ratio=3.0) -> list[str]:
+    """Compare fresh rows to the committed JSON; return failure messages."""
+    committed = {r["name"]: r for r in
+                 json.loads(path.read_text())["rows"]}
+    failures = []
+    fresh_names = {r["name"] for r in rows}
+    for gone in sorted(set(committed) - fresh_names):
+        failures.append(f"{gone}: bench row disappeared from the fresh run "
+                        "— a kernel bench was dropped or renamed")
+    for r in rows:
+        old = committed.get(r["name"])
+        if old is None:
+            failures.append(f"{r['name']}: missing from {path.name} — "
+                            "regenerate with --quick")
+            continue
+        if r["max_err"] > old["max_err"] + err_slack:
+            failures.append(
+                f"{r['name']}: max_err regressed "
+                f"{old['max_err']:.2e} -> {r['max_err']:.2e}")
+        # the bytes model is deterministic given the production shapes —
+        # any drift means kernel tiling and model went out of sync and
+        # the baseline must be regenerated deliberately
+        if r["bytes"] != old["bytes"]:
+            failures.append(
+                f"{r['name']}: bytes model changed "
+                f"{old['bytes']} -> {r['bytes']}")
+        if r["name"].endswith(".decode_topk") \
+                and r.get("hbm_ratio", 0.0) < min_topk_ratio:
+            failures.append(
+                f"{r['name']}: fused top-k HBM ratio {r['hbm_ratio']:.2f} "
+                f"< {min_topk_ratio} — serving fusion no longer pays")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed BENCH_kernels.json and "
+                         "fail on max_err / hbm_ratio regressions")
+    args = ap.parse_args()
+    if args.check and not args.quick:
+        # the committed baseline records --quick check shapes; comparing
+        # full-run max_err against it would validate mismatched shapes
+        ap.error("--check requires --quick (the baseline is "
+                 "--quick-generated)")
+    rows = run(quick=args.quick)
+    for row in rows:
         print(row)
+    if args.check:
+        failures = check_against(rows)
+        for f in failures:
+            print("REGRESSION:", f, file=sys.stderr)
+        if failures:
+            sys.exit(1)
+        print(f"check ok: {len(rows)} rows vs {JSON_PATH.name}")
+    elif args.quick:
+        print("wrote", write_json(rows, quick=True))
+    else:
+        print(f"not writing {JSON_PATH.name}: the committed baseline is "
+              "--quick-generated; rerun with --quick")
+
+
+if __name__ == "__main__":
+    main()

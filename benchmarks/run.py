@@ -78,9 +78,26 @@ def main() -> None:
 
     if want("kernels"):
         from benchmarks import bench_kernels as bk
-        for row in bk.run(quick=quick):
+        rows = bk.run(quick=quick)
+        for row in rows:
             _csv(f"kernels.{row['name']}", row["tpu_us_model"],
                  row["max_err"])
+        if quick:
+            # Refresh the committed bytes-model snapshot — but never
+            # launder a regression into the CI baseline: refuse to
+            # overwrite when the fresh rows regress vs the committed file
+            # (regenerate deliberately via bench_kernels --quick after
+            # vetting the change).  No baseline yet => write the first one.
+            if not bk.JSON_PATH.exists():
+                bk.write_json(rows, quick=True)
+            else:
+                failures = bk.check_against(rows)
+                if failures:
+                    for f in failures:
+                        print(f"kernels: NOT refreshing "
+                              f"{bk.JSON_PATH.name}: {f}", file=sys.stderr)
+                else:
+                    bk.write_json(rows, quick=True)
 
     if want("roofline"):
         from benchmarks import roofline_table as rt

@@ -15,6 +15,7 @@ in repro.kernels and is numerically checked against these functions.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -63,6 +64,21 @@ class BloomSpec:
 def identity_spec(d: int) -> BloomSpec:
     """No-compression spec (m == d, k == 1) — the paper's Baseline."""
     return BloomSpec(d=d, m=d, k=1)
+
+
+@functools.lru_cache(maxsize=8)
+def cached_hash_matrix(spec: BloomSpec) -> jnp.ndarray:
+    """(d, k) int32 whole-vocab hash matrix for `spec`, cached per spec.
+
+    Serving decodes the same spec every step; recomputing
+    ``spec.indices_for(arange(d))`` per decode (or per retrace) rehashes the
+    entire vocab each time and embeds a fresh d x k constant into every
+    compiled step.  BloomSpec is frozen/hashable, so one device array per
+    spec is built on first use and shared by every caller (kernels.ops, the
+    serving loop, benchmarks).  Respects `on_the_fly`: the cached matrix is
+    exactly what indices_for would return for every id.
+    """
+    return spec.indices_for(jnp.arange(spec.d))
 
 
 # --------------------------------------------------------------------------

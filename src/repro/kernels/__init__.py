@@ -1,9 +1,16 @@
 """Pallas TPU kernels for the paper's IO hot spots (+ ops/ref).
 
-  bloom_embed  — k-way gather-sum embedding lookup (HBM-bandwidth bound)
-  bloom_ce     — fused m-softmax CE against the k-hot Bloom target
-  bloom_decode — Eq. 3 vocabulary recovery gather-reduce
+  bloom_embed       — k-way gather-sum embedding lookup (HBM-bandwidth
+                      bound); custom-VJP scatter-add backward
+  bloom_ce          — fused m-softmax CE against the k-hot Bloom target;
+                      lse-residual backward (one read of the logits row)
+  bloom_decode      — Eq. 3 vocabulary recovery gather-reduce; blocked
+                      scatter-add backward
+  bloom_decode_topk — fused Eq. 3 + streaming top-k (serving path; the
+                      (B, d) score matrix never reaches HBM)
 
-Validated in interpret mode against ref.py oracles (tests/test_kernels*).
+All four are differentiable where it makes sense (jax.custom_vjp with
+dedicated backward Pallas kernels) and validated in interpret mode against
+ref.py / core oracles (tests/test_kernels.py).
 """
 from repro.kernels import ops, ref  # noqa: F401

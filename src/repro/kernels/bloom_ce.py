@@ -1,16 +1,20 @@
-"""Pallas TPU kernel: fused Bloom softmax cross-entropy (paper's training
-loss in the compressed m-space).
+"""Pallas TPU kernels: fused Bloom softmax cross-entropy (paper's training
+loss in the compressed m-space), forward and backward.
 
-loss[t] = logsumexp(z[t, :]) - (1/k) * sum_{j<k} z[t, h[t, j]]
+Forward:   loss[t] = logsumexp(z[t, :]) - (1/k) * sum_{j<k} z[t, h[t, j]]
+Backward:  dz[t, :] = g[t] * (softmax(z[t, :]) - onehot_count(h[t, :]) / k)
 
 Fusing the logsumexp with the k-gather means the m-dim logits row is read
 from HBM exactly once (the unfused path reads it three times: max, exp-sum,
-gather).  The row fits VMEM for every assigned config (m <= ~38k fp32).
+gather).  The forward additionally emits the per-token ``lse`` as a VJP
+residual, so the backward rebuilds softmax(z) = exp(z - lse) from ONE read
+of the logits row instead of re-running the max/exp-sum reduction — the
+(T, m) row is touched once in each direction (DESIGN.md §4).
 
   grid = (nT,)
   z    — block (Tt, m) at (t, 0)
   h    — block (Tt, k) at (t, 0)
-  out  — block (Tt,)   at (t,)
+  loss/lse — blocks (Tt,) at (t,);  bwd adds g (Tt,) in, dz (Tt, m) out.
 """
 from __future__ import annotations
 
@@ -20,38 +24,131 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import onehot_count, pad_axis, resolve_interpret
 
-def _kernel(z_ref, h_ref, out_ref):
+
+# --------------------------------------------------------------------------
+# Forward (loss + lse residual)
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(z_ref, h_ref, loss_ref, lse_ref):
     z = z_ref[...].astype(jnp.float32)             # (Tt, m)
     h = h_ref[...]                                 # (Tt, k)
     zmax = z.max(axis=-1, keepdims=True)
     lse = jnp.log(jnp.sum(jnp.exp(z - zmax), axis=-1)) + zmax[:, 0]
     picked = jnp.take_along_axis(z, h, axis=-1)    # (Tt, k)
-    out_ref[...] = lse - picked.mean(-1)
+    loss_ref[...] = lse - picked.mean(-1)
+    lse_ref[...] = lse
 
 
-@functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
-def bloom_ce_pallas(logits: jnp.ndarray, h_idx: jnp.ndarray,
-                    t_tile: int = 8, interpret: bool = True) -> jnp.ndarray:
-    """logits (T, m); h_idx (T, k) int32 -> per-token loss (T,) float32."""
+def _ce_fwd(logits, h_idx, t_tile, interpret):
     T, m = logits.shape
     k = h_idx.shape[1]
     t_tile = min(t_tile, T)
-    pad_t = (-T) % t_tile
-    if pad_t:
-        logits = jnp.pad(logits, ((0, pad_t), (0, 0)))
-        h_idx = jnp.pad(h_idx, ((0, pad_t), (0, 0)))
-    Tp = T + pad_t
+    logits = pad_axis(logits, 0, t_tile)
+    h_idx = pad_axis(h_idx, 0, t_tile)
+    Tp = logits.shape[0]
 
-    out = pl.pallas_call(
-        _kernel,
+    loss, lse = pl.pallas_call(
+        _fwd_kernel,
         grid=(Tp // t_tile,),
         in_specs=[
             pl.BlockSpec((t_tile, m), lambda t: (t, 0)),
             pl.BlockSpec((t_tile, k), lambda t: (t, 0)),
         ],
-        out_specs=pl.BlockSpec((t_tile,), lambda t: (t,)),
-        out_shape=jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((t_tile,), lambda t: (t,)),
+            pl.BlockSpec((t_tile,), lambda t: (t,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        ],
         interpret=interpret,
     )(logits, h_idx)
-    return out[:T]
+    return loss[:T], lse[:T]
+
+
+# --------------------------------------------------------------------------
+# Backward (dz from the lse residual)
+# --------------------------------------------------------------------------
+
+def _bwd_kernel(z_ref, h_ref, lse_ref, g_ref, dz_ref, *, k):
+    z = z_ref[...].astype(jnp.float32)             # (Tt, m)
+    h = h_ref[...]                                 # (Tt, k)
+    lse = lse_ref[...]                             # (Tt,)
+    g = g_ref[...]                                 # (Tt,)
+    p = jnp.exp(z - lse[:, None])                  # softmax via residual
+    w = onehot_count(h, z.shape[1])                # (Tt, m)
+    dz_ref[...] = g[:, None] * (p - w / k)
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
+def bloom_ce_bwd_pallas(g: jnp.ndarray, logits: jnp.ndarray,
+                        h_idx: jnp.ndarray, lse: jnp.ndarray,
+                        t_tile: int = 8,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """g (T,) cotangent; logits (T, m); h_idx (T, k); lse (T,) residual
+    -> dlogits (T, m) float32, one pass over the m row."""
+    interpret = resolve_interpret(interpret)
+    T, m = logits.shape
+    k = h_idx.shape[1]
+    t_tile = min(t_tile, T)
+    logits = pad_axis(logits, 0, t_tile)
+    h_idx = pad_axis(h_idx, 0, t_tile)
+    lse = pad_axis(lse, 0, t_tile)
+    g = pad_axis(g, 0, t_tile)                  # 0-cotangent pad rows -> dz 0
+    Tp = logits.shape[0]
+
+    dz = pl.pallas_call(
+        functools.partial(_bwd_kernel, k=k),
+        grid=(Tp // t_tile,),
+        in_specs=[
+            pl.BlockSpec((t_tile, m), lambda t: (t, 0)),
+            pl.BlockSpec((t_tile, k), lambda t: (t, 0)),
+            pl.BlockSpec((t_tile,), lambda t: (t,)),
+            pl.BlockSpec((t_tile,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((t_tile, m), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, m), jnp.float32),
+        interpret=interpret,
+    )(logits, h_idx, lse, g)
+    return dz[:T]
+
+
+# --------------------------------------------------------------------------
+# custom_vjp glue + public entry point
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _bloom_ce(logits, h_idx, t_tile, interpret):
+    loss, _ = _ce_fwd(logits, h_idx, t_tile, interpret)
+    return loss
+
+
+def _bloom_ce_vjp_fwd(logits, h_idx, t_tile, interpret):
+    loss, lse = _ce_fwd(logits, h_idx, t_tile, interpret)
+    return loss, (logits, h_idx, lse)
+
+
+def _bloom_ce_vjp_bwd(t_tile, interpret, res, g):
+    logits, h_idx, lse = res
+    dz = bloom_ce_bwd_pallas(g, logits, h_idx, lse, t_tile=t_tile,
+                             interpret=interpret)
+    return dz.astype(logits.dtype), None
+
+
+_bloom_ce.defvjp(_bloom_ce_vjp_fwd, _bloom_ce_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
+def bloom_ce_pallas(logits: jnp.ndarray, h_idx: jnp.ndarray,
+                    t_tile: int = 8,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """logits (T, m); h_idx (T, k) int32 -> per-token loss (T,) float32.
+
+    Differentiable: jax.grad w.r.t. `logits` runs the fused lse-residual
+    backward kernel (one HBM read of the row, no re-softmax).
+    """
+    return _bloom_ce(logits, h_idx, min(t_tile, max(logits.shape[0], 1)),
+                     resolve_interpret(interpret))

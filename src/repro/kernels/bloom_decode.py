@@ -1,6 +1,8 @@
-"""Pallas TPU kernel: Bloom vocabulary recovery (paper Eq. 3).
+"""Pallas TPU kernels: Bloom vocabulary recovery (paper Eq. 3), forward and
+backward.
 
-scores[b, i] = sum_{j<k} logp[b, H[i, j]]
+Forward:   scores[b, i] = sum_{j<k} logp[b, H[i, j]]
+Backward:  dlogp[b, c]  = sum_{i, j : H[i, j] == c} g[b, i]   (scatter-add)
 
 TPU mapping: the m-dim log-prob row is small (m = d/5 of a 152k vocab is
 ~30k fp32 = 120 KB) and is kept WHOLE in VMEM per batch tile, so the
@@ -14,6 +16,12 @@ DESIGN.md §4.
          keeps it resident in VMEM between consecutive grid steps)
   H    — block (Vt, k)  at (v, 0)
   out  — block (Bt, Vt) at (b, v)
+
+The backward inverts the stream: grid (nM, nV) with the vocab axis
+innermost; each step builds the (v_tile, m_tile) one-hot count matrix
+w[i, c] = #{j : H[i, j] == c} from k iota-compares in VMEM and accumulates
+``g_tile @ w`` into the revisited (B, m_tile) output block on the MXU —
+race-free, and no (B, d, k) or (d, m) one-hot ever reaches HBM.
 """
 from __future__ import annotations
 
@@ -23,8 +31,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import (BWD_M_TILE, onehot_count, pad_axis,
+                                  resolve_interpret)
 
-def _kernel(logp_ref, h_ref, out_ref):
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(logp_ref, h_ref, out_ref):
     logp = logp_ref[...].astype(jnp.float32)       # (Bt, m)
     h = h_ref[...]                                 # (Vt, k)
     k = h.shape[1]
@@ -34,26 +49,15 @@ def _kernel(logp_ref, h_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("b_tile", "v_tile", "interpret"))
-def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
-                        b_tile: int = 8, v_tile: int = 2048,
-                        interpret: bool = True) -> jnp.ndarray:
-    """logp (B, m) float; H (d, k) int32 -> scores (B, d) float32."""
+def _decode_fwd(logp, H, b_tile, v_tile, interpret):
     B, m = logp.shape
     d, k = H.shape
-    b_tile = min(b_tile, B)
-    v_tile = min(v_tile, d)
-    pad_b = (-B) % b_tile
-    pad_v = (-d) % v_tile
-    if pad_b:
-        logp = jnp.pad(logp, ((0, pad_b), (0, 0)))
-    if pad_v:
-        H = jnp.pad(H, ((0, pad_v), (0, 0)))
-    Bp, dp = B + pad_b, d + pad_v
+    logp = pad_axis(logp, 0, b_tile)
+    H = pad_axis(H, 0, v_tile)
+    Bp, dp = logp.shape[0], H.shape[0]
 
     out = pl.pallas_call(
-        _kernel,
+        _fwd_kernel,
         grid=(Bp // b_tile, dp // v_tile),
         in_specs=[
             pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
@@ -64,3 +68,90 @@ def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
         interpret=interpret,
     )(logp, H)
     return out[:B, :d]
+
+
+# --------------------------------------------------------------------------
+# Backward (dlogp)
+# --------------------------------------------------------------------------
+
+def _bwd_kernel(h_ref, g_ref, out_ref, *, m_tile):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    base = pl.program_id(0) * m_tile
+    w = onehot_count(h_ref[...], m_tile, base)           # (v_tile, m_tile)
+    g = g_ref[...].astype(jnp.float32)                   # (B, v_tile)
+    out_ref[...] += jnp.dot(g, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "m_tile", "v_tile", "interpret"))
+def bloom_decode_bwd_pallas(g: jnp.ndarray, H: jnp.ndarray, m: int,
+                            m_tile: int = BWD_M_TILE, v_tile: int = 2048,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """g (B, d) cotangent; H (d, k) -> dlogp (B, m) float32 scatter-add."""
+    interpret = resolve_interpret(interpret)
+    B, d = g.shape
+    k = H.shape[1]
+    m_tile = min(m_tile, m)
+    v_tile = min(v_tile, d)
+    g = pad_axis(g, 1, v_tile)
+    H = pad_axis(H, 0, v_tile, value=-1)       # -1 never matches the iota
+    mp = m + ((-m) % m_tile)
+    dp = H.shape[0]
+    grid = (mp // m_tile, dp // v_tile)
+
+    out = pl.pallas_call(
+        functools.partial(_bwd_kernel, m_tile=m_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_tile, k), lambda im, iv: (iv, 0)),
+            pl.BlockSpec((B, v_tile), lambda im, iv: (0, iv)),
+        ],
+        out_specs=pl.BlockSpec((B, m_tile), lambda im, iv: (0, im)),
+        out_shape=jax.ShapeDtypeStruct((B, mp), jnp.float32),
+        interpret=interpret,
+    )(H, g)
+    return out[:, :m]
+
+
+# --------------------------------------------------------------------------
+# custom_vjp glue + public entry point
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _bloom_decode(logp, H, b_tile, v_tile, interpret):
+    return _decode_fwd(logp, H, b_tile, v_tile, interpret)
+
+
+def _bloom_decode_vjp_fwd(logp, H, b_tile, v_tile, interpret):
+    return _decode_fwd(logp, H, b_tile, v_tile, interpret), (logp, H)
+
+
+def _bloom_decode_vjp_bwd(b_tile, v_tile, interpret, res, g):
+    logp, H = res
+    dlogp = bloom_decode_bwd_pallas(g, H, logp.shape[1], v_tile=v_tile,
+                                    interpret=interpret)
+    return dlogp.astype(logp.dtype), None
+
+
+_bloom_decode.defvjp(_bloom_decode_vjp_fwd, _bloom_decode_vjp_bwd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_tile", "v_tile", "interpret"))
+def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
+                        b_tile: int = 8, v_tile: int = 2048,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """logp (B, m) float; H (d, k) int32 -> scores (B, d) float32.
+
+    Differentiable: jax.grad w.r.t. `logp` runs the blocked scatter-add
+    backward kernel.
+    """
+    b_tile = min(b_tile, logp.shape[0])
+    v_tile = min(v_tile, H.shape[0])
+    return _bloom_decode(logp, H, b_tile, v_tile,
+                         resolve_interpret(interpret))

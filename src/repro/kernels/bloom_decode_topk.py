@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused Bloom vocabulary recovery + streaming top-k
+(the serving hot path — paper Fig. 3 right, DESIGN.md §4/§5).
+
+The unfused serving decode writes the full (B, d) recovered-score matrix to
+HBM and reads it back for jax.lax.top_k — 2 * B * d * 4 bytes that dominate
+decode cost at LLM vocab scale (qwen3-4b: d = 151 936).  This kernel never
+materializes the score matrix: it streams (v_tile, k) hash-matrix tiles
+through the grid, recovers each (Bt, Vt) score tile in VMEM from the
+resident (Bt, m) log-prob row, and folds it into a running per-batch top-k
+held in VMEM scratch.  HBM traffic drops to
+
+    B*m*4 (logp) + d*k*4 (H) + B*topk*8 (out)        [>= 3.8x fewer bytes
+                                                      than decode-then-topk
+                                                      at qwen3-4b shapes]
+
+  grid = (nB, nV)          — vocab axis innermost
+  logp — block (Bt, m)  at (b, 0)   (VMEM-resident across the vocab sweep)
+  H    — block (Vt, k)  at (v, 0)
+  outs — values (Bt, topk) f32 and ids (Bt, topk) i32 at (b, 0), written
+         once at the last vocab step
+  scratch — running (Bt, topk) best values/ids, reset at v == 0
+
+The merge concatenates the running best with the fresh score tile and takes
+``jax.lax.top_k`` over topk + Vt lanes; each vocab id enters the stream
+exactly once, so no dedup pass is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import pad_axis, resolve_interpret
+
+
+def _kernel(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
+            topk, v_tile, d):
+    iv = pl.program_id(1)
+
+    logp = logp_ref[...].astype(jnp.float32)        # (Bt, m)
+    h = h_ref[...]                                  # (Vt, k)
+    k = h.shape[1]
+    scores = jnp.take(logp, h[:, 0], axis=1)        # (Bt, Vt)
+    for j in range(1, k):
+        scores = scores + jnp.take(logp, h[:, j], axis=1)
+
+    b_tile = scores.shape[0]
+    gid = jax.lax.broadcasted_iota(jnp.int32, (b_tile, v_tile), 1) \
+        + iv * v_tile
+    scores = jnp.where(gid < d, scores, -jnp.inf)   # mask vocab padding
+
+    # Seed the running best from the first tile (requires topk <= v_tile)
+    # rather than -inf/-1 sentinels: with fully -inf rows (masked vocabs)
+    # a sentinel would win the top_k tie-break and leak id -1.  Seeding
+    # also reproduces jax.lax.top_k's lowest-index tie ordering exactly —
+    # best entries (earlier vocab ids) sit first in the concat, and
+    # -inf-masked pad ids can never displace them.
+    @pl.when(iv == 0)
+    def _():
+        top_v, sel = jax.lax.top_k(scores, topk)
+        best_v[...] = top_v
+        best_i[...] = jnp.take_along_axis(gid, sel, axis=-1)
+
+    @pl.when(iv > 0)
+    def _():
+        cat_v = jnp.concatenate([best_v[...], scores], axis=-1)
+        cat_i = jnp.concatenate([best_i[...], gid], axis=-1)
+        top_v, sel = jax.lax.top_k(cat_v, topk)
+        best_v[...] = top_v
+        best_i[...] = jnp.take_along_axis(cat_i, sel, axis=-1)
+
+    @pl.when(iv == pl.num_programs(1) - 1)
+    def _():
+        vals_ref[...] = best_v[...]
+        ids_ref[...] = best_i[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("topk", "b_tile", "v_tile", "interpret"))
+def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
+                             b_tile: int = 8, v_tile: int = 2048,
+                             interpret: bool | None = None):
+    """logp (B, m) float; H (d, k) int32 -> (values, ids), each (B, topk).
+
+    values[b] are the topk largest Eq. 3 scores over the original vocab,
+    descending; ids[b] the corresponding item/token ids.  The (B, d) score
+    matrix is never written to HBM.
+    """
+    interpret = resolve_interpret(interpret)
+    B, m = logp.shape
+    d, k = H.shape
+    if not (0 < topk <= d):
+        raise ValueError(f"need 0 < topk <= d, got topk={topk} d={d}")
+    b_tile = min(b_tile, B)
+    v_tile = max(min(v_tile, d), topk)   # first tile seeds the running best
+    logp = pad_axis(logp, 0, b_tile)
+    H = pad_axis(H, 0, v_tile)                 # padded ids masked via d
+    Bp, dp = logp.shape[0], H.shape[0]
+    grid = (Bp // b_tile, dp // v_tile)
+
+    vals, ids = pl.pallas_call(
+        functools.partial(_kernel, topk=topk, v_tile=v_tile, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
+            pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
+            pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, topk), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, topk), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b_tile, topk), jnp.float32),
+            pltpu.VMEM((b_tile, topk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logp, H)
+    return vals[:B], ids[:B]

@@ -1,0 +1,51 @@
+"""Shared plumbing for the Bloom Pallas kernel suite (DESIGN.md §4).
+
+Every public ``*_pallas`` entry point takes ``interpret=None`` and resolves
+it here: interpret mode off-TPU (CPU CI, tests, this box), compiled Mosaic
+on TPU.  Passing an explicit bool still forces either mode — tests pin
+``interpret=True`` so sweeps stay deterministic regardless of backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default m-tile of the blocked backward kernels (bloom_embed_bwd_pallas,
+# bloom_decode_bwd_pallas).  benchmarks/bench_kernels.py imports this to
+# keep the committed *.bwd bytes models in lock-step with the kernels.
+BWD_M_TILE = 512
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> auto (interpret everywhere except real TPU)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def pad_axis(x: jnp.ndarray, axis: int, multiple: int,
+             value=0) -> jnp.ndarray:
+    """Right-pad `axis` of x to a multiple of `multiple` with `value`."""
+    pad = (-x.shape[axis]) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def onehot_count(ids: jnp.ndarray, n: int, base=0) -> jnp.ndarray:
+    """counts[r, c] = #{j : ids[r, j] == base + c} as float32.
+
+    The shared building block of every backward kernel's scatter-add:
+    built from k iota-compares over a (rows, n) tile in VMEM/registers —
+    the dense one-hot never exists in HBM.  Out-of-range ids (e.g. the -1
+    padding sentinel) simply never match.  `base` offsets the class axis
+    for m-tiled grids.
+    """
+    rows, k = ids.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows, n), 1) + base
+    w = (iota == ids[:, 0][:, None]).astype(jnp.float32)
+    for j in range(1, k):
+        w = w + (iota == ids[:, j][:, None]).astype(jnp.float32)
+    return w

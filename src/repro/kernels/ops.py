@@ -1,22 +1,25 @@
 """Jitted public wrappers around the Pallas kernels.
 
 These adapt model-layer shapes ((B, S, ...) activations, BloomSpec hash
-generation) to the flat kernel interfaces, and select interpret mode
-automatically off-TPU so the same call sites run everywhere.
+generation) to the flat kernel interfaces.  The kernels auto-select
+interpret mode off-TPU (kernels.common.resolve_interpret), so the same
+call sites run everywhere; all of them are differentiable via the
+custom-VJP backward kernels in their defining modules.
+
+Vocab-sized hash matrices come from ``core.bloom.cached_hash_matrix`` — one
+(d, k) device array per BloomSpec, shared across decode calls so the
+serving loop never rehashes the vocabulary per step.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bloom import BloomSpec
+from repro.core.bloom import BloomSpec, cached_hash_matrix
 from repro.kernels.bloom_embed import bloom_embed_pallas
 from repro.kernels.bloom_decode import bloom_decode_pallas
+from repro.kernels.bloom_decode_topk import bloom_decode_topk_pallas
 from repro.kernels.bloom_ce import bloom_ce_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def bloom_embed(table: jnp.ndarray, tokens: jnp.ndarray,
@@ -24,7 +27,7 @@ def bloom_embed(table: jnp.ndarray, tokens: jnp.ndarray,
     """table (m, D); tokens (B, S) -> (B, S, D)."""
     B, S = tokens.shape
     idx = spec.indices_for(tokens.reshape(-1))        # (T, k)
-    out = bloom_embed_pallas(table, idx, interpret=_interpret())
+    out = bloom_embed_pallas(table, idx)
     return out.reshape(B, S, -1)
 
 
@@ -34,7 +37,7 @@ def bloom_ce(logits: jnp.ndarray, labels: jnp.ndarray,
     shape = labels.shape
     z = logits.reshape(-1, logits.shape[-1])
     h = spec.indices_for(jnp.maximum(labels.reshape(-1), 0))
-    loss = bloom_ce_pallas(z, h, interpret=_interpret())
+    loss = bloom_ce_pallas(z, h)
     return loss.reshape(shape)
 
 
@@ -43,7 +46,20 @@ def bloom_decode(logp: jnp.ndarray, spec: BloomSpec,
     """logp (..., m) -> Eq. 3 scores (..., d) over the original vocab."""
     lead = logp.shape[:-1]
     flat = logp.reshape(-1, logp.shape[-1])
-    H = hash_matrix if hash_matrix is not None else \
-        spec.indices_for(jnp.arange(spec.d))
-    scores = bloom_decode_pallas(flat, H, interpret=_interpret())
+    H = hash_matrix if hash_matrix is not None else cached_hash_matrix(spec)
+    scores = bloom_decode_pallas(flat, H)
     return scores.reshape(*lead, spec.d)
+
+
+def bloom_decode_topk(logp: jnp.ndarray, spec: BloomSpec, topk: int,
+                      hash_matrix: jnp.ndarray | None = None):
+    """logp (..., m) -> fused Eq. 3 + top-k: (values, ids), each (..., topk).
+
+    Never materializes the (..., d) recovered-score matrix — the serving
+    fast path (see kernels.bloom_decode_topk for the bytes model).
+    """
+    lead = logp.shape[:-1]
+    flat = logp.reshape(-1, logp.shape[-1])
+    H = hash_matrix if hash_matrix is not None else cached_hash_matrix(spec)
+    vals, ids = bloom_decode_topk_pallas(flat, H, topk)
+    return vals.reshape(*lead, topk), ids.reshape(*lead, topk)

@@ -6,6 +6,12 @@ step runs the paper's Eq. 3 top-k recovery from the m-dim Bloom softmax
 back to real vocabulary ids — the path the paper benchmarks in Fig. 3
 (right).
 
+With io_impl="pallas" the recovery runs the fused decode-topk kernel
+(kernels.bloom_decode_topk): the (B, d) recovered-score matrix never
+touches HBM, and the whole-vocab (d, k) hash matrix is built once per
+BloomSpec (core.bloom.cached_hash_matrix) instead of being rehashed every
+decode step.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
       --batch 4 --prompt-len 32 --gen 16
@@ -24,6 +30,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
 from repro.launch.sharding import DistContext
 from repro.models import encdec as encdec_lib
+from repro.models import io as io_lib
 from repro.models import transformer as tf
 
 
@@ -41,9 +48,13 @@ def pad_caches_to(caches_small, caches_template):
 
 
 def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
-        topk: int = 8, seed: int = 0, full: bool = False):
+        topk: int = 8, seed: int = 0, full: bool = False,
+        io_impl: str | None = None):
     cfg = (configs.get_config(arch) if full
            else configs.get_smoke_config(arch))
+    if io_impl is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, io_impl=io_impl)
     mesh = make_local_mesh()
     dist = DistContext(mesh) if mesh.size > 1 else None
     max_len = prompt_len + gen
@@ -74,9 +85,9 @@ def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     caches = pad_caches_to(pre["caches"], template)
     t_prefill = time.perf_counter() - t0
 
-    # greedy decode in recovered-vocab space
+    # greedy decode in recovered-vocab space (hash matrix already cached by
+    # make_decode_step — no per-step vocab rehash)
     last = pre["last_logits"]
-    from repro.models import io as io_lib
     _, ids = io_lib.recover_topk(cfg, last, topk=topk)
     token = ids[:, :1].astype(jnp.int32)
 
@@ -107,9 +118,13 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--topk", type=int, default=8)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--io-impl", choices=("xla", "pallas"), default=None,
+                    help="override cfg.io_impl (pallas = fused Bloom "
+                         "kernels incl. streaming decode-topk)")
     args = ap.parse_args()
     run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-        gen=args.gen, topk=args.topk, full=args.full)
+        gen=args.gen, topk=args.topk, full=args.full,
+        io_impl=args.io_impl)
 
 
 if __name__ == "__main__":

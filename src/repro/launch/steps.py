@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import bloom as bloom_lib
 from repro.models import encdec as encdec_lib
+from repro.models import io as io_lib
 from repro.models import transformer as tf
 from repro.train import trainer as trainer_lib
 
@@ -101,10 +103,16 @@ def make_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):
     """
     apply_fn = apply_fn_for(cfg)
 
+    # Build the whole-vocab (d, k) hash matrix ONCE at step-construction
+    # time: recover_topk then picks up the cached device array at trace
+    # time instead of rehashing arange(d) inside every compiled step.
+    spec = io_lib.vocab_spec(cfg)
+    if spec is not None and cfg.io_impl == "pallas":
+        bloom_lib.cached_hash_matrix(spec)
+
     def step(params, token, caches, pos):
         out = apply_fn(params, cfg, {"tokens": token}, mode="decode",
                        caches=caches, pos=pos, dist=dist)
-        from repro.models import io as io_lib
         scores, ids = io_lib.recover_topk(cfg, out["logits"][:, 0],
                                           topk=topk)
         return {"logits": out["logits"], "caches": out["caches"],

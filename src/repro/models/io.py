@@ -86,7 +86,9 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
 
     logits (..., m_vocab) -> (scores, token_ids) (..., topk) over the
     original vocab.  Dense path: plain top-k.  Bloom path: Eq. 3 scores
-    via the streaming k-gather reduction.
+    via the streaming k-gather reduction; with io_impl="pallas" the fused
+    decode-topk kernel keeps the running top-k in VMEM and never writes
+    the (..., d) recovered-score matrix to HBM.
     """
     spec = vocab_spec(cfg)
     if spec is None:
@@ -94,7 +96,6 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     if cfg.io_impl == "pallas":
         from repro.kernels import ops
-        scores = ops.bloom_decode(logp, spec)
-        return jax.lax.top_k(scores, topk)
+        return ops.bloom_decode_topk(logp, spec, topk)
     return decode_topk(spec, logp, topk, chunk=chunk,
                        unroll=cfg.unroll_for_analysis)
