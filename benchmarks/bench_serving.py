@@ -1,0 +1,158 @@
+"""Serving-engine benchmark: continuous batching vs static batching on the
+seeded mixed-length workload (serving/loadgen.py), per architecture.
+
+Every row is a *deterministic simulation*: decode-step counts, slot
+utilization and mean latency are pure functions of (workload seed,
+n_slots, gen-length mix) — no float in the loop — so the committed
+``BENCH_serving.json`` is an exact CI baseline on any host.  Wall-clock
+throughput is recorded for humans but never checked.
+
+``python -m benchmarks.bench_serving`` regenerates the committed JSON;
+``--check`` compares a fresh run against it and exits non-zero on any
+drift of the deterministic fields or if the continuous/static decode-step
+speedup falls below MIN_SPEEDUP (the ISSUE-2 acceptance bar).  (No
+--quick mode: the whole sim IS the quick mode — one seeded workload per
+arch, ~15 s on CPU.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+from repro import configs
+from repro.launch import steps as steps_lib
+from repro.serving import Engine, mean_latency, mixed_length_workload
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
+MIN_SPEEDUP = 1.5
+
+# (arch, n_slots, n_requests, seed): one dense and one attention-free SSM
+# arch — the slot pool covers KV caches and conv/ssm state alike.
+CASES = [
+    ("qwen1.5-0.5b", 3, 10, 0),
+    ("mamba2-1.3b", 3, 10, 0),
+]
+TOPK = 4
+MAX_LEN = 40
+
+
+def _run_case(arch: str, n_slots: int, n_requests: int, seed: int):
+    cfg = configs.get_smoke_config(arch)
+    params = steps_lib.cast_params_for_compute(
+        steps_lib.init_fn_for(cfg)(jax.random.PRNGKey(seed)), cfg)
+    engine = Engine(cfg, params, n_slots=n_slots, max_len=MAX_LEN,
+                    topk=TOPK)
+
+    res_c, st_c = engine.run(
+        mixed_length_workload(cfg.vocab, n_requests, seed=seed))
+    res_s, st_s = engine.run_static(
+        mixed_length_workload(cfg.vocab, n_requests, seed=seed))
+    assert all(r.done for r in res_c.values())
+
+    rows = []
+    for mode, res, st in (("continuous", res_c, st_c),
+                          ("static", res_s, st_s)):
+        rows.append({
+            "bench": "serving", "name": f"{arch}.{mode}",
+            "n_slots": n_slots, "n_requests": n_requests, "seed": seed,
+            "decode_steps": st.decode_steps,
+            "slot_steps_total": st.slot_steps_total,
+            "slot_steps_active": st.slot_steps_active,
+            "utilization": round(st.utilization, 4),
+            "tokens_out": st.tokens_out,
+            "mean_latency_steps": round(mean_latency(res), 4),
+            # informational only (CPU wall time — never checked)
+            "wall_s": round(st.wall_s, 3),
+            "tok_per_s_wall": round(st.tokens_out / max(st.wall_s, 1e-9)),
+        })
+    rows.append({
+        "bench": "serving", "name": f"{arch}.speedup",
+        "n_slots": n_slots, "n_requests": n_requests, "seed": seed,
+        "decode_step_speedup": round(
+            st_s.decode_steps / max(st_c.decode_steps, 1), 4),
+        "utilization_gain": round(
+            st_c.utilization - st_s.utilization, 4),
+    })
+    return rows
+
+
+def run():
+    rows = []
+    for arch, n_slots, n_requests, seed in CASES:
+        rows.extend(_run_case(arch, n_slots, n_requests, seed))
+    return rows
+
+
+# deterministic simulation outputs; wall-clock fields are excluded
+CHECKED_FIELDS = ("decode_steps", "slot_steps_total", "slot_steps_active",
+                  "utilization", "tokens_out", "mean_latency_steps",
+                  "decode_step_speedup", "utilization_gain")
+
+
+def write_json(rows, path=JSON_PATH):
+    payload = {
+        "generated_by": "PYTHONPATH=src python -m benchmarks.bench_serving",
+        "min_speedup": MIN_SPEEDUP,
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def check_against(rows, path=JSON_PATH) -> list[str]:
+    """Compare fresh rows against the committed baseline."""
+    committed = {r["name"]: r for r in
+                 json.loads(path.read_text())["rows"]}
+    failures = []
+    fresh = {r["name"]: r for r in rows}
+    for gone in sorted(set(committed) - set(fresh)):
+        failures.append(f"{gone}: serving bench row disappeared")
+    for name, r in fresh.items():
+        old = committed.get(name)
+        if old is None:
+            failures.append(f"{name}: missing from {path.name} — "
+                            "regenerate with --quick")
+            continue
+        for f in CHECKED_FIELDS:
+            if f in old and old[f] != r.get(f):
+                failures.append(
+                    f"{name}.{f}: {old[f]} -> {r.get(f)} — the seeded "
+                    "simulation is no longer reproducing the baseline "
+                    "schedule")
+        if name.endswith(".speedup") \
+                and r.get("decode_step_speedup", 0.0) < MIN_SPEEDUP:
+            failures.append(
+                f"{name}: continuous/static decode-step speedup "
+                f"{r['decode_step_speedup']:.2f} < {MIN_SPEEDUP} — "
+                "continuous batching no longer pays on the mixed-length "
+                "workload")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="compare against committed BENCH_serving.json; "
+                         "fail on schedule drift or speedup regression")
+    args = ap.parse_args()
+    rows = run()
+    for row in rows:
+        print(row)
+    if args.check:
+        failures = check_against(rows)
+        for f in failures:
+            print("REGRESSION:", f, file=sys.stderr)
+        if failures:
+            sys.exit(1)
+        print(f"check ok: {len(rows)} rows vs {JSON_PATH.name}")
+    else:
+        print("wrote", write_json(rows))
+
+
+if __name__ == "__main__":
+    main()

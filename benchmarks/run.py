@@ -27,7 +27,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,fig3,table3,"
-                         "table5,kernels,roofline")
+                         "table5,kernels,serving,roofline")
     args = ap.parse_args()
     quick = args.quick
     steps = 60 if quick else 150
@@ -98,6 +98,29 @@ def main() -> None:
                               f"{bk.JSON_PATH.name}: {f}", file=sys.stderr)
                 else:
                     bk.write_json(rows, quick=True)
+
+    if want("serving"):
+        from benchmarks import bench_serving as bs
+        rows = bs.run()      # one seeded sim per arch — no quick/full split
+        for row in rows:
+            if row["name"].endswith(".speedup"):
+                _csv(f"serving.{row['name']}", 0.0,
+                     row["decode_step_speedup"])
+            else:
+                _csv(f"serving.{row['name']}", 1e6 * row["wall_s"],
+                     row["utilization"])
+        # same no-laundering policy as the kernel baseline: refresh only
+        # when the fresh deterministic schedule matches the committed one
+        if not bs.JSON_PATH.exists():
+            bs.write_json(rows)
+        else:
+            failures = bs.check_against(rows)
+            if failures:
+                for f in failures:
+                    print(f"serving: NOT refreshing {bs.JSON_PATH.name}: "
+                          f"{f}", file=sys.stderr)
+            else:
+                bs.write_json(rows)
 
     if want("roofline"):
         from benchmarks import roofline_table as rt

@@ -84,8 +84,13 @@ class Checkpointer:
         state = jax.tree.map(lambda x: np.asarray(x), state)  # host copy
         self.wait()  # never two concurrent writers (same-step race)
         if self.async_write and not block:
+            # non-daemon on purpose: if the train loop dies (induced fault,
+            # uncaught exception) the interpreter still joins this thread at
+            # shutdown, so an in-flight checkpoint finishes its atomic
+            # tmp->rename instead of being torn down mid-write — crash one
+            # step after a save kick-off must not lose the checkpoint.
             self._thread = threading.Thread(
-                target=self._write, args=(step, state, extra), daemon=True)
+                target=self._write, args=(step, state, extra), daemon=False)
             self._thread.start()
         else:
             self._write(step, state, extra)

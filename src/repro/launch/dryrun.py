@@ -110,6 +110,9 @@ def compile_variant(cfg, shape, dist, tc: TrainConfig, zero: bool = False):
 
 def _collect(compiled, n_devices):
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        # older jax (<=0.4.x) returns a one-element list of the cost dict
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     colls = roofline.parse_collectives(compiled.as_text(), n_devices)
     return {

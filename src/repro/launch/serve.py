@@ -1,19 +1,23 @@
-"""Batched serving driver: prefill + decode with Bloom vocab recovery.
+"""Serving driver: thin CLI over the continuous-batching engine.
 
-Serves a (smoke-config) model end to end: a batch of token prompts is
-prefilled into KV/SSM caches, then decoded autoregressively; every decode
-step runs the paper's Eq. 3 top-k recovery from the m-dim Bloom softmax
-back to real vocabulary ids — the path the paper benchmarks in Fig. 3
-(right).
+Default mode builds a seeded Poisson workload (serving/loadgen.py) and
+runs it through repro.serving.Engine — requests are admitted into freed
+cache slots every decode step and retired on per-slot stop conditions,
+so a drained slot never burns decode FLOPs while traffic waits.  Every
+decode step still runs the paper's Eq. 3 top-k recovery from the m-dim
+Bloom softmax back to real vocabulary ids (Fig. 3 right); with
+io_impl="pallas" that recovery is the fused decode-topk kernel.
 
-With io_impl="pallas" the recovery runs the fused decode-topk kernel
-(kernels.bloom_decode_topk): the (B, d) recovered-score matrix never
-touches HBM, and the whole-vocab (d, k) hash matrix is built once per
-BloomSpec (core.bloom.cached_hash_matrix) instead of being rehashed every
-decode step.
+``--static`` keeps the old whole-batch path for A/B: one batch of
+identical-length prompts, prefilled together, decoded until the longest
+request drains.  That path (run()) also remains the only one serving
+enc-dec / frontend-stub archs (whisper, pixtral), whose prefill carries
+non-token inputs the engine does not schedule.
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
+      --slots 4 --requests 16 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --static \
       --batch 4 --prompt-len 32 --gen 16
 """
 from __future__ import annotations
@@ -32,31 +36,41 @@ from repro.launch.sharding import DistContext
 from repro.models import encdec as encdec_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
+from repro.serving import Engine, LoadSpec, make_workload, mean_latency
 
 
 def pad_caches_to(caches_small, caches_template):
     """Place prefill caches (length S_p) into preallocated max-length
-    buffers (the serving cache pool)."""
-    def put(buf, small):
-        if buf.shape == small.shape:
-            return small.astype(buf.dtype)
-        idx = (slice(None),) * buf.ndim
-        slices = tuple(slice(0, s) for s in small.shape)
-        return buf.at[slices].set(small.astype(buf.dtype))
-
-    return jax.tree.map(put, caches_template, caches_small)
+    buffers — the whole-batch special case (slot 0, full batch) of the
+    engine's slot-indexed steps.insert_cache_slot."""
+    return steps_lib.insert_cache_slot(caches_template, caches_small, 0)
 
 
-def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
-        topk: int = 8, seed: int = 0, full: bool = False,
-        io_impl: str | None = None):
+def _config(arch: str, full: bool, io_impl):
     cfg = (configs.get_config(arch) if full
            else configs.get_smoke_config(arch))
     if io_impl is not None:
         import dataclasses
         cfg = dataclasses.replace(cfg, io_impl=io_impl)
+    return cfg
+
+
+def _setup(cfg, seed: int):
     mesh = make_local_mesh()
     dist = DistContext(mesh) if mesh.size > 1 else None
+    init = steps_lib.init_fn_for(cfg)
+    params = init(jax.random.PRNGKey(seed))
+    # one-time cast to the serving dtype (bf16 serving checkpoint)
+    params = steps_lib.cast_params_for_compute(params, cfg)
+    return params, dist
+
+
+def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
+        topk: int = 8, seed: int = 0, full: bool = False,
+        io_impl: str | None = None):
+    """Static whole-batch serving (the --static / A-B baseline path)."""
+    cfg = _config(arch, full, io_impl)
+    params, dist = _setup(cfg, seed)
     max_len = prompt_len + gen
 
     rng = np.random.default_rng(seed)
@@ -66,11 +80,6 @@ def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     if cfg.family in ("vlm", "audio"):
         batch_in["embeds"] = jnp.zeros((batch, max(4, prompt_len // 4),
                                         cfg.d_model), jnp.dtype(cfg.dtype))
-
-    init = steps_lib.init_fn_for(cfg)
-    params = init(jax.random.PRNGKey(seed))
-    # one-time cast to the serving dtype (bf16 serving checkpoint)
-    params = steps_lib.cast_params_for_compute(params, cfg)
 
     prefill = jax.jit(steps_lib.make_prefill_step(cfg, dist))
     decode = jax.jit(steps_lib.make_decode_step(cfg, topk=topk, dist=dist))
@@ -109,22 +118,77 @@ def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     return gen_tokens
 
 
+def run_continuous(arch: str, slots: int = 4, requests: int = 16,
+                   rate: float = 1.0, prompt_len: int = 32, gen: int = 16,
+                   topk: int = 8, seed: int = 0, full: bool = False,
+                   io_impl: str | None = None, eos_id: int | None = None):
+    """Continuous batching over a seeded Poisson workload."""
+    cfg = _config(arch, full, io_impl)
+    if not Engine.supports(cfg):       # before paying for param init
+        raise SystemExit(
+            f"{arch}: enc-dec / frontend-stub archs serve via --static")
+    params, dist = _setup(cfg, seed)
+    spec = LoadSpec(
+        n_requests=requests, vocab=cfg.vocab, rate=rate,
+        prompt_lens=(max(prompt_len // 2, 2), prompt_len),
+        gen_lens=(max(gen // 4, 1), gen // 2 or 1, gen), seed=seed)
+    workload = make_workload(spec)
+    max_len = max(r.prompt_len + r.max_gen for r in workload)
+
+    engine = Engine(cfg, params, n_slots=slots, max_len=max_len,
+                    topk=topk, eos_id=eos_id, dist=dist)
+    results, stats = engine.run(workload)
+
+    row = stats.as_row()
+    print(f"served {len(results)} requests on {slots} slots: "
+          f"{row['decode_steps']} decode steps, "
+          f"utilization {row['utilization']:.2f}, "
+          f"mean latency {mean_latency(results):.1f} steps")
+    print(f"wall {stats.wall_s*1e3:.0f} ms "
+          f"({stats.tokens_out/max(stats.wall_s, 1e-9):.0f} tok/s)")
+    for r in list(results.values())[:4]:
+        print(f"  req {r.rid}: arrive {r.arrival_step} admit "
+              f"{r.admitted_step} finish {r.finish_step} "
+              f"tokens {r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
+    return results, stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
                     choices=list(configs.ARCH_NAMES))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="old whole-batch path (A/B baseline; required "
+                         "for enc-dec / frontend archs)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size (--static path)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="cache-pool slots (continuous path)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="workload size (continuous path)")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrivals per decode step")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--topk", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a slot early on this token id")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--io-impl", choices=("xla", "pallas"), default=None,
                     help="override cfg.io_impl (pallas = fused Bloom "
                          "kernels incl. streaming decode-topk)")
     args = ap.parse_args()
-    run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-        gen=args.gen, topk=args.topk, full=args.full,
-        io_impl=args.io_impl)
+    if args.static:
+        run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+            gen=args.gen, topk=args.topk, seed=args.seed, full=args.full,
+            io_impl=args.io_impl)
+    else:
+        run_continuous(args.arch, slots=args.slots, requests=args.requests,
+                       rate=args.rate, prompt_len=args.prompt_len,
+                       gen=args.gen, topk=args.topk, seed=args.seed,
+                       full=args.full, io_impl=args.io_impl,
+                       eos_id=args.eos_id)
 
 
 if __name__ == "__main__":

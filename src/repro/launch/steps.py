@@ -121,6 +121,60 @@ def make_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):
     return step
 
 
+def insert_cache_slot(pool, caches_small, slot):
+    """Write one request's prefill caches into batch slot `slot` of a
+    preallocated cache pool.
+
+    Every cache leaf is stacked (n_layers, B, ...) — attention k/v carry a
+    sequence dim at axis 2 that may be SHORTER in the prefill caches than
+    in the pool (prompt_len < max_len); lax.dynamic_update_slice writes the
+    small block at (0, slot, 0, ...) and leaves the tail untouched.  Stale
+    tail entries from a previous occupant are never read: the kv validity
+    mask only admits positions <= the slot's current offset, and decode
+    overwrites each position before first attending to it.  SSM caches
+    (conv/ssm state) have no sequence dim and are replaced wholesale.
+
+    `slot` may be a traced int32 scalar, so one jitted insert per prompt
+    length serves every slot index.
+    """
+    def put(buf, small):
+        starts = (jnp.int32(0), jnp.asarray(slot, jnp.int32)) + \
+            (jnp.int32(0),) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, small.astype(buf.dtype),
+                                            starts)
+
+    return jax.tree.map(put, pool, caches_small)
+
+
+def make_slot_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):
+    """Continuous-batching decode step over a slot pool.
+
+    (params, token (B, 1), caches, pos (B,), active (B,)) ->
+        {caches, topk_scores, topk_ids}
+
+    Unlike make_decode_step's scalar `pos`, every slot decodes at its own
+    sequence offset — the per-slot position vector is what keeps ONE
+    compiled step serving a pool whose requests were admitted at different
+    times (no per-offset recompiles, no bucketing).  `active` masks the
+    Eq. 3 vocabulary recovery so retired slots can never leak tokens.
+    """
+    apply_fn = apply_fn_for(cfg)
+
+    spec = io_lib.vocab_spec(cfg)
+    if spec is not None and cfg.io_impl == "pallas":
+        bloom_lib.cached_hash_matrix(spec)
+
+    def step(params, token, caches, pos, active):
+        out = apply_fn(params, cfg, {"tokens": token}, mode="decode",
+                       caches=caches, pos=pos, dist=dist)
+        scores, ids = io_lib.recover_topk(cfg, out["logits"][:, 0],
+                                          topk=topk, active=active)
+        return {"caches": out["caches"], "topk_scores": scores,
+                "topk_ids": ids}
+
+    return step
+
+
 def init_caches_for(cfg: ModelConfig, shape: ShapeConfig):
     if cfg.family == "audio":
         return functools.partial(encdec_lib.init_encdec_cache, cfg,

@@ -396,13 +396,19 @@ def decode_self_attention(params, cfg: ModelConfig, x, cache, pos,
                           dist=None):
     """Single-token decode against a KV cache.
 
-    x: (B, 1, D); cache: {"k","v"} (B, T, KV, hd); pos: scalar int32 —
-    position of the new token (cache entries < pos are valid).
+    x: (B, 1, D); cache: {"k","v"} (B, T, KV, hd); pos: position of the
+    new token (cache entries < pos are valid) — either a scalar int32
+    (static batch: all rows at the same offset) or a (B,) int32 vector
+    (continuous-batching slot pool: every slot decodes at its own
+    sequence offset inside ONE compiled step).
     Returns (out (B, 1, D), new_cache).
     """
     B, _, D = x.shape
     T = cache["k"].shape[1]
-    posb = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    posb = (pos[:, None] if per_slot
+            else jnp.broadcast_to(pos[None, None], (B, 1)))
     q, k_new, v_new = _project_qkv(params, cfg, x, x, posb, posb, rope=True)
     seq_sharded = (dist is not None
                    and cfg.num_kv_heads % dist.n_model != 0
@@ -417,11 +423,16 @@ def decode_self_attention(params, cfg: ModelConfig, x, cache, pos,
         rep = lambda a: dist.constrain(  # noqa: E731
             a, P(bx, *([None] * (a.ndim - 1))))
         q, k_new, v_new = rep(q), rep(k_new), rep(v_new)
-    if seq_sharded:
-        # masked (iota == pos) write: fully elementwise, so the
-        # sequence-sharded cache keeps its sharding — a positional
-        # dynamic write makes GSPMD reshard the whole multi-GB cache.
-        sel = jnp.arange(T)[None, :, None, None] == pos
+    if seq_sharded or per_slot:
+        # masked (iota == pos) write: fully elementwise.  Needed when the
+        # cache is sequence-sharded (a positional dynamic write makes
+        # GSPMD reshard the whole multi-GB cache) and when pos is a (B,)
+        # slot vector (each row writes a different offset — there is no
+        # single dynamic_update_slice for that).  Writes the exact same
+        # values as the slice path, so slot decode stays bit-identical to
+        # static decode per row.
+        sel = (jnp.arange(T)[None, :, None, None]
+               == posb.reshape(B, 1, 1, 1))
         cache = {
             "k": jnp.where(sel, k_new.astype(cache["k"].dtype),
                            cache["k"]),
@@ -437,7 +448,7 @@ def decode_self_attention(params, cfg: ModelConfig, x, cache, pos,
                 cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1),
         }
     kv_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-    kv_valid = kv_pos <= pos
+    kv_valid = kv_pos <= posb
     qg, k_all, v_all = _expand_heads(q, cache["k"].astype(x.dtype),
                                      cache["v"].astype(x.dtype),
                                      cfg.num_heads)

@@ -150,7 +150,9 @@ def encdec_apply(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
     """batch: {"embeds": (B,S_enc,D) frames, "tokens": (B,S_dec)}.
 
     decode mode runs only the decoder against caches (encoder output is
-    folded into the cached cross k/v).
+    folded into the cached cross k/v); like the decoder-only path, `pos`
+    may be a scalar or a (B,) per-slot offset vector (the self-attention
+    cache update handles both; cross k/v are position-free).
     """
     tokens = batch["tokens"]
     x = io.embed_tokens(params["io"], cfg, tokens)

@@ -81,7 +81,7 @@ def lm_loss(params, cfg: ModelConfig, logits: jnp.ndarray,
 
 
 def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
-                 chunk: int = 8192):
+                 chunk: int = 8192, active: Optional[jnp.ndarray] = None):
     """Serving-time vocabulary recovery (paper Sec. 3.2).
 
     logits (..., m_vocab) -> (scores, token_ids) (..., topk) over the
@@ -89,13 +89,26 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
     via the streaming k-gather reduction; with io_impl="pallas" the fused
     decode-topk kernel keeps the running top-k in VMEM and never writes
     the (..., d) recovered-score matrix to HBM.
+
+    `active` (..., ) bool marks live slots in a continuous-batching pool:
+    retired/idle slots get ids=0 and scores=-inf so engine bookkeeping
+    can never mistake a stale row for output.  (The recovery itself still
+    runs on every row — masked rows cost the same HBM bytes today; a
+    row-skipping pallas grid is the follow-up noted in DESIGN.md §7.)
     """
     spec = vocab_spec(cfg)
     if spec is None:
-        return jax.lax.top_k(logits, topk)
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    if cfg.io_impl == "pallas":
-        from repro.kernels import ops
-        return ops.bloom_decode_topk(logp, spec, topk)
-    return decode_topk(spec, logp, topk, chunk=chunk,
-                       unroll=cfg.unroll_for_analysis)
+        scores, ids = jax.lax.top_k(logits, topk)
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        if cfg.io_impl == "pallas":
+            from repro.kernels import ops
+            scores, ids = ops.bloom_decode_topk(logp, spec, topk)
+        else:
+            scores, ids = decode_topk(spec, logp, topk, chunk=chunk,
+                                      unroll=cfg.unroll_for_analysis)
+    if active is not None:
+        live = active[..., None]
+        scores = jnp.where(live, scores, -jnp.inf)
+        ids = jnp.where(live, ids, 0)
+    return scores, ids

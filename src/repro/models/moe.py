@@ -30,6 +30,14 @@ try:  # jax>=0.6 stabilized shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
+# The "skip replication check" kwarg was renamed check_rep -> check_vma
+# across jax versions; resolve it from the actual signature so either
+# jaxlib works (the seed pinned check_vma and broke on jax 0.4.x).
+import inspect as _inspect
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in _inspect.signature(_shard_map).parameters else "check_rep")
+
 from jax.sharding import PartitionSpec as P
 
 
@@ -168,7 +176,7 @@ def moe_apply(params, x, cfg: ModelConfig, dist=None):
             fn, mesh=mesh,
             in_specs=(xs, P(None, None), wspec, wspec, wspec, sspec),
             out_specs=(xs, P()),
-            check_vma=False,
+            **{_CHECK_KW: False},
         )(x_flat, params["router"], params["w_gate"], params["w_up"],
           params["w_down"], shared)
         return out.reshape(B, S, D), aux

@@ -198,6 +198,11 @@ def lm_apply(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
       train   -> {logits (B, S_tot, m_vocab), aux}
       prefill -> {logits, aux, caches}
       decode  -> {logits (B, 1, m_vocab), aux, caches}   (needs caches+pos)
+
+    decode `pos` is a scalar (static batch) or a (B,) vector of per-slot
+    sequence offsets (continuous-batching slot pool — one compiled step
+    serves slots at different positions; SSM caches are offset-free so
+    only the attention cache write/mask depends on it).
     """
     tokens = batch["tokens"]
     x = io.embed_tokens(params["io"], cfg, tokens)

@@ -1,0 +1,14 @@
+"""Continuous-batching serving engine (DESIGN.md §7).
+
+scheduler.py — JAX-free RequestQueue/Scheduler (slot admission policy)
+loadgen.py   — deterministic Poisson arrival + length-mix workloads
+engine.py    — the slot-pool engine + static-batching A/B baseline
+"""
+from repro.serving.engine import Engine, ServeStats, mean_latency
+from repro.serving.loadgen import LoadSpec, make_workload, \
+    mixed_length_workload
+from repro.serving.scheduler import Request, RequestQueue, Scheduler
+
+__all__ = ["Engine", "ServeStats", "mean_latency", "LoadSpec",
+           "make_workload", "mixed_length_workload", "Request",
+           "RequestQueue", "Scheduler"]

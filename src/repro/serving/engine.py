@@ -1,0 +1,282 @@
+"""Slot-based continuous-batching serving engine.
+
+The PR-1 kernel work made one decode step cheap (fused Bloom decode-topk,
+no (B, d) score matrix in HBM); this module makes a *system* out of it:
+
+  * a preallocated per-slot cache pool (``init_lm_cache`` at ``n_slots`` x
+    ``max_len``), with prefill caches written into a freed slot via
+    ``steps.insert_cache_slot`` (lax.dynamic_update_slice — the
+    generalization of the old serve.py ``pad_caches_to``);
+  * ONE jitted decode step for the whole pool: a per-slot position vector
+    lets every slot sit at its own sequence offset, so admitting a request
+    mid-flight never recompiles (models/attention.decode_self_attention
+    handles scalar and (B,) pos);
+  * host-side admission/retirement per step (serving/scheduler.py): freed
+    slots are refilled from the queue every decode step, per-slot stop
+    conditions (max_gen / EOS id) retire them;
+  * per-row math is *bit-identical* to the static path — a request served
+    through the pool produces exactly the tokens it produces alone
+    (asserted by tests/test_serving.py), because every decode op is
+    row-independent and the masked slot cache write stores the same values
+    as the static dynamic-slice write.
+
+``Engine.run_static`` is the A/B baseline: classic static batching over
+the same jitted steps — groups of n_slots start together and drain until
+the longest request finishes, burning slot-steps on retired slots.  The
+decode-step/slot-utilization gap between the two is what
+benchmarks/bench_serving.py commits to BENCH_serving.json.
+
+Time is counted in decode steps (deterministic on CPU CI); wall-clock is
+recorded but never asserted on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as steps_lib
+from repro.models import io as io_lib
+from repro.models import transformer as tf
+from repro.serving.scheduler import Request, RequestQueue, Scheduler
+
+
+@dataclasses.dataclass
+class ServeStats:
+    decode_steps: int = 0
+    idle_steps: int = 0              # clock ticks with an empty pool
+    slot_steps_total: int = 0        # n_slots * decode_steps
+    slot_steps_active: int = 0       # slot-steps spent on a live request
+    prefills: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def utilization(self) -> float:
+        if not self.slot_steps_total:
+            return 1.0
+        return self.slot_steps_active / self.slot_steps_total
+
+    def as_row(self) -> Dict[str, float]:
+        return {"decode_steps": self.decode_steps,
+                "idle_steps": self.idle_steps,
+                "slot_steps_total": self.slot_steps_total,
+                "slot_steps_active": self.slot_steps_active,
+                "utilization": round(self.utilization, 4),
+                "prefills": self.prefills,
+                "tokens_out": self.tokens_out}
+
+
+class Engine:
+    """Continuous-batching engine over a fixed slot pool.
+
+    One Engine owns the jitted prefill / slot-decode / cache-insert
+    callables and the preallocated pool; ``run`` (continuous) and
+    ``run_static`` (A/B baseline) share them, so any numeric difference
+    between the two paths would be a scheduling bug, not a compile
+    difference.
+    """
+
+    @staticmethod
+    def supports(cfg: ModelConfig) -> bool:
+        """Continuous batching serves decoder-only token LMs; enc-dec
+        (audio) and frontend-stub (vlm) archs carry non-token prefill
+        inputs the engine does not schedule — they serve via the static
+        launch/serve.py path.  Single source for the eligibility rule
+        (the CLI checks it before paying for param init)."""
+        return cfg.family != "audio" and cfg.frontend == "none"
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 max_len: int, topk: int = 8,
+                 eos_id: Optional[int] = None, dist=None):
+        if not Engine.supports(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: continuous batching serves decoder-only "
+                "token LMs (see Engine.supports); use the static "
+                "launch/serve.py path")
+        assert n_slots >= 1 and max_len >= 2
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.topk = topk
+        self.eos_id = eos_id
+        self._prefill = jax.jit(steps_lib.make_prefill_step(cfg, dist))
+        # the pool is donated through every decode/insert: the host loop
+        # never reuses the previous tree, so XLA (where supported) updates
+        # the multi-GB cache in place instead of allocating a second pool
+        # and copying per step
+        self._decode = jax.jit(steps_lib.make_slot_decode_step(
+            cfg, topk=topk, dist=dist), donate_argnums=(2,))
+        self._insert = jax.jit(steps_lib.insert_cache_slot,
+                               donate_argnums=(0,))
+        self._recover = jax.jit(
+            lambda logits: io_lib.recover_topk(cfg, logits, topk=topk))
+        self._pool_template = tf.init_lm_cache(
+            cfg, n_slots, max_len, dtype=jnp.dtype(cfg.dtype))
+
+    def _fresh_pool(self):
+        # copy, not alias: the first donated insert/decode consumes its
+        # input buffers, and the template must survive across run() calls
+        return jax.tree.map(jnp.copy, self._pool_template)
+
+    # ------------------------------------------------------------------
+    def _admit_one(self, req: Request, caches):
+        """Prefill one request (B=1, exact prompt length — bit-identical
+        to serving it alone) and write its caches into its slot."""
+        assert req.prompt_len + req.max_gen <= self.max_len, (
+            f"request {req.rid}: prompt {req.prompt_len} + max_gen "
+            f"{req.max_gen} exceeds pool max_len {self.max_len}")
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        pre = self._prefill(self.params, {"tokens": prompt})
+        _, ids = self._recover(pre["last_logits"])
+        caches = self._insert(caches, pre["caches"], jnp.int32(req.slot))
+        return caches, int(np.asarray(ids)[0, 0])
+
+    def _stopped(self, req: Request, tok: int) -> bool:
+        if self.eos_id is not None and tok == self.eos_id:
+            return True
+        return len(req.tokens) >= req.max_gen
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]
+            ) -> Tuple[Dict[int, Request], ServeStats]:
+        """Continuous batching: admit into freed slots every step, retire
+        on per-slot stop conditions.  Mutates and returns the requests."""
+        queue = RequestQueue(requests)
+        sched = Scheduler(self.n_slots)
+        stats = ServeStats()
+
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        caches = self._fresh_pool()
+        now = 0
+        t0 = time.perf_counter()
+
+        while len(queue) or sched.n_active:
+            for req in sched.admit(queue, now):
+                caches, first = self._admit_one(req, caches)
+                req.tokens.append(first)
+                stats.prefills += 1
+                stats.tokens_out += 1
+                if self._stopped(req, first):
+                    sched.release(req.slot, now)
+                else:
+                    tokens[req.slot, 0] = first
+                    pos[req.slot] = req.prompt_len
+                    active[req.slot] = True
+
+            if not sched.n_active:
+                nxt = queue.next_arrival()
+                if nxt is None:
+                    break
+                if nxt <= now:
+                    # a slot was freed by a prefill-time retirement
+                    # (max_gen==1 / first-token EOS) while a request is
+                    # already ready: re-admit NOW, no clock tick
+                    continue
+                # empty pool: fast-forward the clock to the next arrival
+                stats.idle_steps += nxt - now
+                now = nxt
+                continue
+
+            out = self._decode(self.params, jnp.asarray(tokens), caches,
+                               jnp.asarray(pos), jnp.asarray(active))
+            caches = out["caches"]
+            ids = np.asarray(out["topk_ids"][:, 0])
+            stats.decode_steps += 1
+            stats.slot_steps_total += self.n_slots
+            stats.slot_steps_active += int(active.sum())
+            now += 1
+            for slot, req in list(sched.active.items()):
+                tok = int(ids[slot])
+                req.tokens.append(tok)
+                stats.tokens_out += 1
+                tokens[slot, 0] = tok
+                pos[slot] += 1
+                if self._stopped(req, tok):
+                    sched.release(slot, now)
+                    active[slot] = False
+
+        stats.wall_s = time.perf_counter() - t0
+        self._sched = sched          # exposed for the simulation tests
+        return {r.rid: r for r in requests}, stats
+
+    # ------------------------------------------------------------------
+    def run_static(self, requests: List[Request]
+                   ) -> Tuple[Dict[int, Request], ServeStats]:
+        """Static-batching A/B baseline over the SAME jitted steps.
+
+        Requests are grouped n_slots at a time in arrival order; a group
+        starts only when its last member has arrived and drains until its
+        longest request stops — retired slots keep burning decode steps,
+        which is exactly the utilization gap continuous batching closes.
+        """
+        stats = ServeStats()
+        reqs = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        caches = self._fresh_pool()
+        now = 0
+        t0 = time.perf_counter()
+
+        for g in range(0, len(reqs), self.n_slots):
+            group = reqs[g:g + self.n_slots]
+            start = max([now] + [r.arrival_step for r in group])
+            stats.idle_steps += start - now
+            now = start
+
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            pos = np.zeros((self.n_slots,), np.int32)
+            collecting = np.zeros((self.n_slots,), bool)
+            for slot, req in enumerate(group):
+                req.slot = slot
+                req.admitted_step = now
+                caches, first = self._admit_one(req, caches)
+                req.tokens.append(first)
+                stats.prefills += 1
+                stats.tokens_out += 1
+                if self._stopped(req, first):
+                    req.finish_step = now
+                else:
+                    tokens[slot, 0] = first
+                    pos[slot] = req.prompt_len
+                    collecting[slot] = True
+
+            while collecting.any():
+                out = self._decode(self.params, jnp.asarray(tokens), caches,
+                                   jnp.asarray(pos),
+                                   jnp.asarray(collecting))
+                caches = out["caches"]
+                ids = np.asarray(out["topk_ids"][:, 0])
+                stats.decode_steps += 1
+                # static batching burns every slot of the pool per step
+                stats.slot_steps_total += self.n_slots
+                stats.slot_steps_active += int(collecting.sum())
+                now += 1
+                for slot, req in enumerate(group):
+                    if not collecting[slot]:
+                        continue
+                    tok = int(ids[slot])
+                    req.tokens.append(tok)
+                    stats.tokens_out += 1
+                    tokens[slot, 0] = tok
+                    pos[slot] += 1
+                    if self._stopped(req, tok):
+                        req.finish_step = now
+                        collecting[slot] = False
+
+        stats.wall_s = time.perf_counter() - t0
+        return {r.rid: r for r in requests}, stats
+
+
+def mean_latency(results: Dict[int, Request]) -> float:
+    """Mean (finish - arrival) in decode steps across completed requests."""
+    done = [r for r in results.values() if r.done]
+    if not done:
+        return 0.0
+    return float(np.mean([r.finish_step - r.arrival_step for r in done]))

@@ -1,9 +1,45 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
 benches must see the real device count (1 CPU); only launch/dryrun.py
 forces 512 placeholder devices (in its own process)."""
+import os
+
 import jax
 import numpy as np
 import pytest
+
+
+def subprocess_env():
+    """Clean env for driver subprocess tests.
+
+    PATH stays stripped to the system dirs on purpose (drivers must not
+    lean on the dev shell), but JAX backend selection has to survive the
+    strip: without JAX_PLATFORMS the child process probes for accelerator
+    runtimes at import and hangs on CPU-only CI boxes.
+    """
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    for var in ("JAX_PLATFORMS", "XLA_FLAGS", "XLA_PYTHON_CLIENT_PREALLOCATE"):
+        if var in os.environ:
+            env[var] = os.environ[var]
+    env.setdefault("JAX_PLATFORMS", jax.default_backend())
+    return env
+
+
+def assert_slot_log_sound(sched, n_slots):
+    """Shared invariant check on a serving Scheduler's event log: per
+    slot, admissions/releases strictly alternate (ordered by the global
+    event seq) with matching rids — i.e. no slot ever hosts two live
+    requests.  Used by the deterministic sim test and the hypothesis
+    property suite."""
+    for slot in range(n_slots):
+        events = sorted(
+            [(seq, 0, rid) for _, s, rid, seq in sched.admissions
+             if s == slot]
+            + [(seq, 1, rid) for _, s, rid, seq in sched.releases
+               if s == slot])
+        assert [kind for _, kind, _ in events] == \
+            [i % 2 for i in range(len(events))]
+        for i in range(0, len(events), 2):
+            assert events[i][2] == events[i + 1][2]
 
 
 @pytest.fixture

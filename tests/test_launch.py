@@ -7,9 +7,9 @@ import sys
 import jax
 import pytest
 
-from repro.launch.mesh import make_elastic_mesh, make_local_mesh
+from conftest import subprocess_env
 
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+from repro.launch.mesh import make_elastic_mesh, make_local_mesh
 
 
 def test_local_mesh_axes():
@@ -34,8 +34,8 @@ def test_dryrun_subprocess_smallest_cell(tmp_path):
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
          "mamba2-1.3b", "--shape", "long_500k", "--no-roofline",
          "--out", str(tmp_path)],
-        capture_output=True, text=True, env=ENV, cwd="/root/repo",
-        timeout=420)
+        capture_output=True, text=True, env=subprocess_env(),
+        cwd="/root/repo", timeout=420)
     assert r.returncode == 0, r.stdout + r.stderr
     arts = os.listdir(tmp_path)
     assert len(arts) == 1

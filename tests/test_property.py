@@ -99,3 +99,90 @@ def test_decode_scores_permutation_invariance(m, k, seed):
     s = np.asarray(decode_scores(spec, logv, chunk=16))
     s_perm = np.asarray(decode_scores(spec, logv[::-1], chunk=16))
     np.testing.assert_allclose(s, s_perm[::-1], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Serving scheduler invariants (repro.serving.scheduler — JAX-free, so
+# hypothesis can drive thousands of random arrival/finish sequences)
+# ---------------------------------------------------------------------------
+
+@given(
+    n_slots=st.integers(1, 5),
+    arrivals=st.lists(st.integers(0, 30), min_size=0, max_size=25),
+    lifetimes=st.data(),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_scheduler_invariants_under_random_traffic(n_slots, arrivals,
+                                                   lifetimes, seed):
+    """Slot conservation, FIFO admission among ready requests, and no
+    starvation, for ANY arrival pattern and ANY finish pattern."""
+    from repro.serving.scheduler import Request, RequestQueue, Scheduler
+
+    reqs = [Request(rid=i, prompt=np.zeros((4,), np.int32), max_gen=1,
+                    arrival_step=a) for i, a in enumerate(arrivals)]
+    life = {r.rid: lifetimes.draw(st.integers(1, 6), label=f"life{r.rid}")
+            for r in reqs}
+    queue = RequestQueue(reqs)
+    sched = Scheduler(n_slots)
+    rng = np.random.default_rng(seed)
+
+    now = 0
+    remaining = {}
+    guard = 0
+    while len(queue) or sched.n_active:
+        guard += 1
+        assert guard < 10_000, "scheduler loop did not terminate"
+        for req in sched.admit(queue, now):
+            remaining[req.rid] = life[req.rid]
+        # slot conservation every step
+        assert sched.n_active <= n_slots
+        assert len(sched.free_slots) + sched.n_active == n_slots
+        for slot, req in list(sched.active.items()):
+            remaining[req.rid] -= 1
+            # random early finishes exercise out-of-order retirement
+            if remaining[req.rid] <= 0 or rng.random() < 0.3:
+                sched.release(slot, now)
+        now += 1
+
+    # no starvation: every request was admitted and finished
+    assert len(sched.admissions) == len(reqs)
+    assert len(sched.releases) == len(reqs)
+    assert all(r.done for r in reqs)
+    assert all(r.admitted_step >= r.arrival_step for r in reqs)
+
+    # FIFO among ready: admission order == arrival order (stable by rid,
+    # because RequestQueue sorts stably on arrival_step)
+    admitted_rids = [rid for _, _, rid, _ in
+                     sorted(sched.admissions, key=lambda e: e[3])]
+    expected = [r.rid for r in
+                sorted(reqs, key=lambda r: (r.arrival_step, r.rid))]
+    assert admitted_rids == expected
+
+    # slot conservation, globally: per-slot event log alternates
+    # admit/release with matching rids
+    from conftest import assert_slot_log_sound
+    assert_slot_log_sound(sched, n_slots)
+
+
+@given(
+    pushes=st.lists(st.integers(0, 20), min_size=1, max_size=15),
+    now=st.integers(0, 25),
+)
+@settings(max_examples=40, deadline=None)
+def test_request_queue_online_push_keeps_arrival_order(pushes, now):
+    from repro.serving.scheduler import Request, RequestQueue
+
+    q = RequestQueue()
+    for i, a in enumerate(pushes):
+        q.push(Request(rid=i, prompt=np.zeros((2,), np.int32), max_gen=1,
+                       arrival_step=a))
+    popped = []
+    while True:
+        r = q.pop_ready(now)
+        if r is None:
+            break
+        popped.append((r.arrival_step, r.rid))
+    assert popped == sorted(popped)
+    assert all(a <= now for a, _ in popped)
+    assert len(q) == sum(a > now for a in pushes)

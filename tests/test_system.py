@@ -71,11 +71,11 @@ def test_serve_driver_generates_tokens():
 def test_train_driver_crash_and_resume(tmp_path):
     """Kill the driver mid-run via --fault-at, rerun, expect completion."""
     ck = str(tmp_path / "ck")
+    from conftest import subprocess_env
     cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
            "qwen1.5-0.5b", "--steps", "16", "--batch", "2", "--seq", "16",
            "--ckpt", ck]
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-           "HOME": "/root"}
+    env = subprocess_env()
     r1 = subprocess.run(cmd + ["--fault-at", "10"], capture_output=True,
                         text=True, env=env, cwd="/root/repo")
     assert r1.returncode != 0 and "induced fault" in r1.stderr
