@@ -24,6 +24,7 @@ import sys
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bloom import BloomSpec
 from repro.kernels import ops, ref
@@ -40,6 +41,11 @@ JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_kernels.json"
 TOPK = 16
 B_DECODE = 8
+# serving-pool shape for the row-skipping occupancy sweep: 64 slots in
+# b_tile=8 row blocks (8 blocks) — the scale where block skipping pays
+B_POOL = 64
+BT_POOL = 8
+MIN_OCC_RATIO = 1.5   # >= 1.5x fewer modeled bytes at <= 50% occupancy
 
 
 def _cases():
@@ -175,6 +181,55 @@ def run(quick: bool = True):
         bytes_fused = B * m * 4 + d * k * 4 + B * TOPK * 8
         rows.append(_row(f"{name}.decode_topk", B, bytes_fused, err,
                          topk=TOPK, hbm_ratio=bytes_then / bytes_fused))
+
+        # ---- serving pool: row-skipping decode-topk vs slot occupancy ----
+        # At pool size (B_POOL slots, b_tile row blocks) the grid streams
+        # (b_tile*m logp + d*k H) bytes per VISITED row block — H is
+        # re-streamed once per block because the vocab axis is innermost.
+        # The dense grid visits all nB blocks regardless of occupancy; the
+        # occupancy-prefetched grid (DESIGN.md §8) visits only the nA
+        # blocks holding a live slot, so modeled HBM bytes scale with
+        # active slots.  CI gates hbm_ratio_vs_full >= MIN_OCC_RATIO at
+        # <= 50% occupancy.  Numeric check runs the skip grid against the
+        # dense grid at a clamped (d, m) — interpret mode executes the
+        # grid in Python — recorded in check_* fields.
+        nB = B_POOL // BT_POOL
+        d_chk, m_chk = 4096, 512
+        spec_occ = BloomSpec(d=d_chk, m=m_chk, k=k)
+        H_occ = ops.cached_hash_matrix(spec_occ)
+        logp_occ = jax.nn.log_softmax(
+            jax.random.normal(key, (B_POOL, m_chk)))
+        dense_v, dense_i = bloom_decode_topk_pallas(
+            logp_occ, H_occ, TOPK, b_tile=BT_POOL, v_tile=512,
+            interpret=True)
+        bytes_full = nB * (BT_POOL * m * 4 + d * k * 4) + B_POOL * TOPK * 8
+        for occ_name, frac in (("occ100", 1.0), ("occ50", 0.5),
+                               ("occ12", 0.125)):
+            n_act = int(B_POOL * frac)
+            active = np.arange(B_POOL) < n_act
+            nA = -(-n_act // BT_POOL)       # blocks holding a live slot
+            bytes_occ = (nA * (BT_POOL * m * 4 + d * k * 4)
+                         + B_POOL * TOPK * 8)
+            vals_s, ids_s = bloom_decode_topk_pallas(
+                logp_occ, H_occ, TOPK, b_tile=BT_POOL, v_tile=512,
+                interpret=True, active=jnp.asarray(active))
+            live = np.repeat(active.reshape(nB, BT_POOL).any(axis=1),
+                             BT_POOL)
+            err = max(_max_err(vals_s[live], dense_v[live]),
+                      float(jnp.abs(ids_s[live]
+                                    - dense_i[live]).max()))
+            if not live.all():
+                dead_ok = bool((np.asarray(vals_s)[~live]
+                                == -np.inf).all()
+                               and (np.asarray(ids_s)[~live] == 0).all())
+                if not dead_ok:      # skipped rows must read (-inf, 0)
+                    err = float("inf")
+            rows.append(_row(
+                f"{name}.decode_topk.{occ_name}", B_POOL, bytes_occ, err,
+                topk=TOPK, occupancy=frac, active_slots=n_act,
+                visited_blocks=nA, total_blocks=nB,
+                hbm_ratio_vs_full=round(bytes_full / bytes_occ, 4),
+                check_d=d_chk, check_m=m_chk))
     return rows
 
 
@@ -231,6 +286,17 @@ def check_against(rows, path=JSON_PATH, err_slack=1e-3,
             failures.append(
                 f"{r['name']}: fused top-k HBM ratio {r['hbm_ratio']:.2f} "
                 f"< {min_topk_ratio} — serving fusion no longer pays")
+        # row-skipping acceptance bar (ISSUE 3): at <= 50% slot occupancy
+        # the occupancy grid must model >= MIN_OCC_RATIO fewer HBM bytes
+        # than the full pool
+        if (".decode_topk.occ" in r["name"]
+                and not r["name"].endswith(".occ100")
+                and r.get("occupancy", 1.0) <= 0.5
+                and r.get("hbm_ratio_vs_full", 0.0) < MIN_OCC_RATIO):
+            failures.append(
+                f"{r['name']}: occupancy bytes ratio "
+                f"{r.get('hbm_ratio_vs_full', 0.0):.2f} < {MIN_OCC_RATIO} "
+                "— row skipping no longer pays at partial occupancy")
     return failures
 
 

@@ -1,5 +1,8 @@
 """Serving-engine benchmark: continuous batching vs static batching on the
-seeded mixed-length workload (serving/loadgen.py), per architecture.
+seeded mixed-length workload (serving/loadgen.py), per architecture, plus
+model-free replays of the gossiped multi-host schedule
+(``sched.sharded_*`` rows — scheduler.simulate_sharded_schedule over
+per-host loadgen streams, DESIGN.md §8).
 
 Every row is a *deterministic simulation*: decode-step counts, slot
 utilization and mean latency are pure functions of (workload seed,
@@ -25,7 +28,9 @@ import jax
 
 from repro import configs
 from repro.launch import steps as steps_lib
-from repro.serving import Engine, mean_latency, mixed_length_workload
+from repro.serving import (Engine, LoadSpec, mean_latency,
+                           mixed_length_workload, sharded_workload,
+                           simulate_sharded_schedule)
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serving.json"
@@ -39,6 +44,18 @@ CASES = [
 ]
 TOPK = 4
 MAX_LEN = 40
+
+# (n_hosts, slots_per_host, n_requests PER HOST, gossip_delay, seed):
+# model-free replays of the gossiped multi-host schedule
+# (scheduler.simulate_sharded_schedule) — deterministic integers on any
+# host, including the 1-device bench-check runner.  The delay sweep pins
+# the gossip cost: the d2 schedule must stay within a few steps of d0.
+SHARDED_CASES = [
+    (4, 2, 4, 1, 0),
+    (8, 1, 2, 1, 0),
+    (4, 2, 4, 0, 0),
+    (4, 2, 4, 2, 0),
+]
 
 
 def _run_case(arch: str, n_slots: int, n_requests: int, seed: int):
@@ -81,10 +98,45 @@ def _run_case(arch: str, n_slots: int, n_requests: int, seed: int):
     return rows
 
 
+def _sharded_spec(n_requests: int, seed: int) -> LoadSpec:
+    # the canonical mixed-length mix (loadgen.mixed_length_workload),
+    # split into per-host streams
+    return LoadSpec(n_requests=n_requests, vocab=1024, rate=2.0,
+                    prompt_lens=(6, 10, 14), gen_lens=(3, 6, 20),
+                    gen_weights=(0.5, 0.3, 0.2), seed=seed)
+
+
+def _run_sharded_case(n_hosts: int, slots_per_host: int, n_requests: int,
+                      gossip_delay: int, seed: int):
+    per_host = sharded_workload(_sharded_spec(n_requests, seed), n_hosts)
+    sched, st = simulate_sharded_schedule(per_host, slots_per_host,
+                                          gossip_delay)
+    results = {r.rid: r for reqs in per_host for r in reqs}
+    assert all(r.done for r in results.values())
+    util = (st["slot_steps_active"] / st["slot_steps_total"]
+            if st["slot_steps_total"] else 1.0)
+    return {
+        "bench": "serving",
+        "name": f"sched.sharded_h{n_hosts}x{slots_per_host}"
+                f"_d{gossip_delay}",
+        "n_hosts": n_hosts, "slots_per_host": slots_per_host,
+        "n_requests": n_requests * n_hosts, "seed": seed,
+        "gossip_delay": gossip_delay,
+        "decode_steps": st["decode_steps"],
+        "slot_steps_total": st["slot_steps_total"],
+        "slot_steps_active": st["slot_steps_active"],
+        "utilization": round(util, 4),
+        "tokens_out": st["tokens_out"],
+        "mean_latency_steps": round(mean_latency(results), 4),
+    }
+
+
 def run():
     rows = []
     for arch, n_slots, n_requests, seed in CASES:
         rows.extend(_run_case(arch, n_slots, n_requests, seed))
+    for case in SHARDED_CASES:
+        rows.append(_run_sharded_case(*case))
     return rows
 
 

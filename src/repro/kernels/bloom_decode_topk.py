@@ -23,6 +23,23 @@ held in VMEM scratch.  HBM traffic drops to
 The merge concatenates the running best with the fresh score tile and takes
 ``jax.lax.top_k`` over topk + Vt lanes; each vocab id enters the stream
 exactly once, so no dedup pass is needed.
+
+**Row-skipping grid (serving slot pools, DESIGN.md §8).**  A continuous-
+batching pool at partial occupancy decodes dead slot rows; the dense grid
+still streams every (logp row-block, H vocab tile) pair for them.  With
+``active`` given, a slot-occupancy-prefetched grid
+(``pltpu.PrefetchScalarGridSpec``) skips the HBM traffic of fully-inactive
+row blocks: the prefetched per-block occupancy drives *data-dependent
+index maps* that pin an inactive block's logp/H block indices to the
+previously-resident blocks, so the Pallas pipeline issues NO new copies
+for them (a revisited block index is never re-fetched); the kernel body
+skips the fold under ``pl.when`` and emits (-inf, 0) for skipped rows —
+exactly the post-hoc masking ``io.recover_topk`` applies anyway.  Modeled
+HBM bytes drop from ``nB*(Bt*m*4 + d*k*4)`` to ``nA*(Bt*m*4 + d*k*4)``
+(+ the B*topk*8 output either way) where nA = #row-blocks containing at
+least one live slot — bytes scale with occupancy instead of pool size
+(bench_kernels.py commits the occupancy sweep; CI gates >=1.5x fewer
+bytes at <=50% occupancy).
 """
 from __future__ import annotations
 
@@ -36,10 +53,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.common import pad_axis, resolve_interpret
 
 
-def _kernel(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
-            topk, v_tile, d):
-    iv = pl.program_id(1)
-
+def _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
+               iv, topk, v_tile, d):
+    """One (row-block, vocab-tile) fold of the streaming top-k — shared
+    by the dense and the row-skipping grids."""
     logp = logp_ref[...].astype(jnp.float32)        # (Bt, m)
     h = h_ref[...]                                  # (Vt, k)
     k = h.shape[1]
@@ -78,16 +95,77 @@ def _kernel(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
         ids_ref[...] = best_i[...]
 
 
+def _kernel(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
+            topk, v_tile, d):
+    _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i,
+               iv=pl.program_id(1), topk=topk, v_tile=v_tile, d=d)
+
+
+def _kernel_skip(occ_ref, pin_ref, logp_ref, h_ref, vals_ref, ids_ref,
+                 best_v, best_i, *, topk, v_tile, d):
+    """Row-skipping variant: ``occ_ref``/``pin_ref`` are the scalar-
+    prefetched per-block occupancy / logp-block pin arrays (also consumed
+    by the data-dependent index maps).  Inactive blocks never touch HBM:
+    their logp/H block indices revisit resident blocks (no copy), the fold
+    is skipped, and the output block — which IS flushed for every b — is
+    written as (-inf, 0), matching recover_topk's dead-row masking."""
+    ib = pl.program_id(0)
+    iv = pl.program_id(1)
+    act = occ_ref[ib] > 0
+
+    @pl.when(act)
+    def _():
+        _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i,
+                   iv=iv, topk=topk, v_tile=v_tile, d=d)
+
+    @pl.when(jnp.logical_not(act) & (iv == pl.num_programs(1) - 1))
+    def _():
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf,
+                                 vals_ref.dtype)
+        ids_ref[...] = jnp.zeros(ids_ref.shape, ids_ref.dtype)
+
+
+def block_occupancy(active: jnp.ndarray, b_tile: int):
+    """active (B,) bool -> (occ, pin), the scalar-prefetch operands of the
+    row-skipping grid, for B padded to a multiple of b_tile.
+
+    occ (nB,) int32 — 1 iff the row block holds >=1 live slot.
+    pin (nB,) int32 — logp block to map block b's fetch to: b itself when
+    active, else the nearest active block at-or-before b (still resident
+    when the pipeline reaches b — revisit, no copy), else the FIRST
+    active block (leading dead blocks prefetch the block the first live
+    sweep needs anyway, so even a drained low-slot prefix issues no dead
+    logp fetch).  All-dead pools pin to 0 (one unavoidable fetch; the
+    engine never decodes an empty pool).
+    """
+    act = pad_axis(active.astype(jnp.int32), 0, b_tile)
+    blk = act.reshape(-1, b_tile).max(axis=1)
+    idx = jnp.arange(blk.shape[0], dtype=jnp.int32)
+    cand = jnp.where(blk > 0, idx, -1)
+    before = jax.lax.cummax(cand, axis=0)
+    first_active = jnp.argmax(blk > 0).astype(jnp.int32)  # 0 if none
+    pin = jnp.where(before >= 0, before, first_active).astype(jnp.int32)
+    return blk.astype(jnp.int32), pin
+
+
 @functools.partial(jax.jit,
                    static_argnames=("topk", "b_tile", "v_tile", "interpret"))
 def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
                              b_tile: int = 8, v_tile: int = 2048,
-                             interpret: bool | None = None):
+                             interpret: bool | None = None,
+                             active: jnp.ndarray | None = None):
     """logp (B, m) float; H (d, k) int32 -> (values, ids), each (B, topk).
 
     values[b] are the topk largest Eq. 3 scores over the original vocab,
     descending; ids[b] the corresponding item/token ids.  The (B, d) score
     matrix is never written to HBM.
+
+    ``active`` (B,) bool selects the row-skipping occupancy grid: rows in
+    a fully-inactive b_tile block are skipped at the HBM level (no logp /
+    H tile fetches — see module docstring) and return (-inf, 0); rows
+    sharing a block with a live slot are computed normally, identical to
+    the dense grid (the caller masks dead rows regardless —
+    io.recover_topk).
     """
     interpret = resolve_interpret(interpret)
     B, m = logp.shape
@@ -101,25 +179,64 @@ def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
     Bp, dp = logp.shape[0], H.shape[0]
     grid = (Bp // b_tile, dp // v_tile)
 
-    vals, ids = pl.pallas_call(
-        functools.partial(_kernel, topk=topk, v_tile=v_tile, d=d),
+    out_shape = [
+        jax.ShapeDtypeStruct((Bp, topk), jnp.float32),
+        jax.ShapeDtypeStruct((Bp, topk), jnp.int32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((b_tile, topk), jnp.float32),
+        pltpu.VMEM((b_tile, topk), jnp.int32),
+    ]
+
+    if active is None:
+        vals, ids = pl.pallas_call(
+            functools.partial(_kernel, topk=topk, v_tile=v_tile, d=d),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
+                pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
+                pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(logp, H)
+        return vals[:B], ids[:B]
+
+    occ, pin = block_occupancy(active, b_tile)
+    nv_last = grid[1] - 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
-            pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
+            # inactive block: revisit the pinned logp block and the H
+            # tile left resident by the previous sweep (nv_last) — a
+            # revisited block index issues no copy in the Pallas
+            # pipeline.  Leading dead blocks (pin points FORWARD to the
+            # first active block) instead prefetch tile 0, the tile that
+            # first live sweep starts with, so they too fetch nothing
+            # the live sweeps would not fetch anyway.
+            pl.BlockSpec((b_tile, m),
+                         lambda b, v, occ, pin: (pin[b], 0)),
+            pl.BlockSpec((v_tile, k),
+                         lambda b, v, occ, pin:
+                         (jnp.where(occ[b] > 0, v,
+                                    jnp.where(pin[b] > b, 0, nv_last)),
+                          0)),
         ],
         out_specs=[
-            pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
-            pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
+            pl.BlockSpec((b_tile, topk), lambda b, v, occ, pin: (b, 0)),
+            pl.BlockSpec((b_tile, topk), lambda b, v, occ, pin: (b, 0)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp, topk), jnp.float32),
-            jax.ShapeDtypeStruct((Bp, topk), jnp.int32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((b_tile, topk), jnp.float32),
-            pltpu.VMEM((b_tile, topk), jnp.int32),
-        ],
+        scratch_shapes=scratch_shapes,
+    )
+    vals, ids = pl.pallas_call(
+        functools.partial(_kernel_skip, topk=topk, v_tile=v_tile, d=d),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(logp, H)
+    )(occ, pin, logp, H)
     return vals[:B], ids[:B]

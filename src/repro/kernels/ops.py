@@ -52,14 +52,18 @@ def bloom_decode(logp: jnp.ndarray, spec: BloomSpec,
 
 
 def bloom_decode_topk(logp: jnp.ndarray, spec: BloomSpec, topk: int,
-                      hash_matrix: jnp.ndarray | None = None):
+                      hash_matrix: jnp.ndarray | None = None,
+                      active: jnp.ndarray | None = None):
     """logp (..., m) -> fused Eq. 3 + top-k: (values, ids), each (..., topk).
 
     Never materializes the (..., d) recovered-score matrix — the serving
     fast path (see kernels.bloom_decode_topk for the bytes model).
+    ``active`` (...,) bool enables the row-skipping occupancy grid for
+    slot pools at partial occupancy (skipped rows return (-inf, 0)).
     """
     lead = logp.shape[:-1]
     flat = logp.reshape(-1, logp.shape[-1])
     H = hash_matrix if hash_matrix is not None else cached_hash_matrix(spec)
-    vals, ids = bloom_decode_topk_pallas(flat, H, topk)
+    act = None if active is None else active.reshape(-1)
+    vals, ids = bloom_decode_topk_pallas(flat, H, topk, active=act)
     return vals.reshape(*lead, topk), ids.reshape(*lead, topk)

@@ -24,6 +24,23 @@ def make_local_mesh(axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(n_hosts: int | None = None, model_parallel: int = 1):
+    """Serving-pool mesh: one `data` shard per (simulated) host, `model`
+    fixed at `model_parallel`.  With
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` this simulates
+    an N-way multi-host serving topology on one CPU process (the
+    multi-host sim tests and the `--sharded` serve CLI use exactly that).
+    """
+    total = jax.device_count()
+    if n_hosts is None:
+        assert total % model_parallel == 0
+        n_hosts = total // model_parallel
+    assert n_hosts * model_parallel <= total, (
+        f"need {n_hosts * model_parallel} devices, have {total}")
+    return jax.make_mesh((n_hosts, model_parallel), ("data", "model"),
+                         devices=jax.devices()[:n_hosts * model_parallel])
+
+
 def make_elastic_mesh(n_devices: int, axes=("data", "model"),
                       model_parallel: int = 1):
     """Rebuild a mesh after a world-size change (node failure / elastic

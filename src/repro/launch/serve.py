@@ -31,12 +31,13 @@ import numpy as np
 
 from repro import configs
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_local_mesh, make_serving_mesh
 from repro.launch.sharding import DistContext
 from repro.models import encdec as encdec_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
-from repro.serving import Engine, LoadSpec, make_workload, mean_latency
+from repro.serving import (Engine, LoadSpec, ShardedEngine, make_workload,
+                           mean_latency, sharded_workload)
 
 
 def pad_caches_to(caches_small, caches_template):
@@ -153,6 +154,51 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
     return results, stats
 
 
+def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
+                rate: float = 1.0, prompt_len: int = 32, gen: int = 16,
+                topk: int = 8, seed: int = 0, full: bool = False,
+                io_impl: str | None = None, eos_id: int | None = None,
+                gossip_delay: int = 1):
+    """Data-axis-sharded serving over per-host arrival streams.
+
+    One simulated host per `data` shard — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate an
+    8-host topology on CPU (DESIGN.md §8).  `requests` is PER HOST.
+    """
+    cfg = _config(arch, full, io_impl)
+    if not Engine.supports(cfg):       # before paying for param init
+        raise SystemExit(
+            f"{arch}: enc-dec / frontend-stub archs serve via --static")
+    mesh = make_serving_mesh()
+    n_hosts = mesh.shape["data"]
+    init = steps_lib.init_fn_for(cfg)
+    params = steps_lib.cast_params_for_compute(
+        init(jax.random.PRNGKey(seed)), cfg)
+    spec = LoadSpec(
+        n_requests=requests, vocab=cfg.vocab, rate=rate,
+        prompt_lens=(max(prompt_len // 2, 2), prompt_len),
+        gen_lens=(max(gen // 4, 1), gen // 2 or 1, gen), seed=seed)
+    per_host = sharded_workload(spec, n_hosts)
+    max_len = max(r.prompt_len + r.max_gen
+                  for reqs in per_host for r in reqs)
+
+    engine = ShardedEngine(cfg, params, mesh=mesh,
+                           slots_per_host=slots_per_host, max_len=max_len,
+                           topk=topk, eos_id=eos_id,
+                           gossip_delay=gossip_delay)
+    results, stats = engine.run(per_host)
+
+    row = stats.as_row()
+    print(f"served {len(results)} requests on {n_hosts} hosts x "
+          f"{slots_per_host} slots (gossip_delay={gossip_delay}): "
+          f"{row['decode_steps']} decode steps, "
+          f"utilization {row['utilization']:.2f}, "
+          f"mean latency {mean_latency(results):.1f} steps")
+    print(f"wall {stats.wall_s*1e3:.0f} ms "
+          f"({stats.tokens_out/max(stats.wall_s, 1e-9):.0f} tok/s)")
+    return results, stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
@@ -160,6 +206,15 @@ def main():
     ap.add_argument("--static", action="store_true",
                     help="old whole-batch path (A/B baseline; required "
                          "for enc-dec / frontend archs)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="data-axis-sharded pool: one simulated host per "
+                         "data shard (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--slots-per-host", type=int, default=1,
+                    help="cache-pool slots per host shard (--sharded)")
+    ap.add_argument("--gossip-delay", type=int, default=1,
+                    help="steps before arrivals/releases become globally "
+                         "visible (--sharded)")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size (--static path)")
     ap.add_argument("--slots", type=int, default=4,
@@ -183,6 +238,13 @@ def main():
         run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
             gen=args.gen, topk=args.topk, seed=args.seed, full=args.full,
             io_impl=args.io_impl)
+    elif args.sharded:
+        run_sharded(args.arch, slots_per_host=args.slots_per_host,
+                    requests=args.requests, rate=args.rate,
+                    prompt_len=args.prompt_len, gen=args.gen,
+                    topk=args.topk, seed=args.seed, full=args.full,
+                    io_impl=args.io_impl, eos_id=args.eos_id,
+                    gossip_delay=args.gossip_delay)
     else:
         run_continuous(args.arch, slots=args.slots, requests=args.requests,
                        rate=args.rate, prompt_len=args.prompt_len,

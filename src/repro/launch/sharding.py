@@ -28,6 +28,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
+try:  # jax>=0.6 stabilized shard_map
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The "skip replication check" kwarg was renamed check_rep -> check_vma
+# across jax versions; resolve it from the actual signature so either
+# jaxlib works (same dance as models/moe.py).
+import inspect as _inspect
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in _inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map_nocheck(fn, mesh, in_specs, out_specs):
+    """shard_map with the replication check disabled, version-portable."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
+
 
 @dataclasses.dataclass
 class DistContext:
@@ -237,6 +256,56 @@ def cache_pspecs(cfg: ModelConfig, caches, dist: DistContext,
         return P(*([None] * nd))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def slot_pool_pspecs(cfg: ModelConfig, pool, dist: DistContext,
+                     n_slots: int):
+    """Serving slot-pool specs (DESIGN.md §8).
+
+    Unlike training-time ``cache_pspecs``, the pool's rules are fixed by
+    the serving protocol, not by divisibility heuristics:
+
+      * the SLOT axis (axis 1 of every stacked ``(L, n_slots, ...)`` leaf)
+        shards over the data axes — each data shard owns the contiguous
+        slot range its host admits into, so a cache insert touches exactly
+        one shard and decode reads are all-local;
+      * the sequence dim NEVER shards: ``insert_cache_slot`` writes a
+        slot-local ``[0, S_p)`` block, and a seq-sharded pool would turn
+        every insert into a ragged multi-shard write;
+      * kv heads shard over ``model`` when divisible (same as
+        cache_pspecs) — orthogonal to the slot axis.
+
+    ``n_slots`` must divide across the data axes: the per-host admission
+    shards (serving/scheduler.py ShardedScheduler) assume equal contiguous
+    slot ranges.
+    """
+    if n_slots % dist.n_batch:
+        raise ValueError(
+            f"n_slots={n_slots} must divide the data axes "
+            f"(|data|={dist.n_batch}) — per-host admission shards own "
+            "equal contiguous slot ranges")
+    bx = dist.batch_axes if dist.n_batch > 1 else None
+    kv_ax = ("model" if dist.n_model > 1
+             and cfg.num_kv_heads % dist.n_model == 0 else None)
+    mamba_ok = (cfg.mamba is not None and dist.n_model > 1
+                and (cfg.mamba.expand * cfg.d_model
+                     // cfg.mamba.head_dim) % dist.n_model == 0)
+    m_ax = "model" if mamba_ok else None
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        nd = len(leaf.shape)
+        if "attn" in s or "cross" in s:   # (L, B, T, KV, hd)
+            return P(None, bx, None, kv_ax, None)
+        if "ssm" in s:                    # (L, B, H, N, P)
+            return P(None, bx, m_ax, None, None)
+        if "conv_x" in s:                 # (L, B, d_conv-1, d_in)
+            return P(None, bx, None, m_ax)
+        return P(None, bx, *([None] * (nd - 2)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pool)
     return jax.tree_util.tree_unflatten(
         treedef, [spec_for(p, l) for p, l in flat])
 

@@ -146,6 +146,70 @@ def insert_cache_slot(pool, caches_small, slot):
     return jax.tree.map(put, pool, caches_small)
 
 
+def make_sharded_insert(pool_specs, dist, slots_per_shard: int):
+    """``insert_cache_slot`` lifted to a shard_map device-to-device cache
+    insert (DESIGN.md §8).
+
+    The pool's slot axis is sharded over ``data`` (sharding.
+    slot_pool_pspecs); the prefill worker's caches arrive replicated —
+    that broadcast IS the device-to-device transfer from the prefill mesh
+    slice into the decode pool.  Inside the shard_map every data shard
+    computes its local view of the global ``slot`` id and only the owning
+    shard's dynamic_update_slice survives the ``where``; all other shards
+    return their pool block untouched, so the insert writes exactly one
+    shard and never gathers the pool.
+
+    Returns a jitted (pool, caches_small, slot) -> pool callable that
+    donates the pool (in-place semantics, same as the engine's single-host
+    insert); semantically identical to ``insert_cache_slot`` on the
+    unsharded tree (asserted by tests/test_serving_multihost.py).
+    """
+    from repro.launch.sharding import shard_map_nocheck
+    from jax.sharding import PartitionSpec as P
+
+    data_axes = dist.batch_axes
+
+    def _insert(pool_local, small, slot):
+        ax = jax.lax.axis_index(data_axes[0]) if data_axes else 0
+        local = jnp.asarray(slot, jnp.int32) - ax * slots_per_shard
+        owns = (local >= 0) & (local < slots_per_shard)
+        idx = jnp.clip(local, 0, slots_per_shard - 1)
+
+        def put(buf, sm):
+            starts = (jnp.int32(0), idx) + (jnp.int32(0),) * (buf.ndim - 2)
+            upd = jax.lax.dynamic_update_slice(
+                buf, sm.astype(buf.dtype), starts)
+            return jnp.where(owns, upd, buf)
+
+        return jax.tree.map(put, pool_local, small)
+
+    def replicated_specs(tree):
+        return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), tree)
+
+    def insert(pool, caches_small, slot):
+        fn = shard_map_nocheck(
+            _insert, dist.mesh,
+            in_specs=(pool_specs, replicated_specs(caches_small), P()),
+            out_specs=pool_specs)
+        return fn(pool, caches_small, jnp.asarray(slot, jnp.int32))
+
+    jitted = jax.jit(insert, donate_argnums=(0,))
+
+    def insert_with_transfer(pool, caches_small, slot):
+        # the prefill worker's caches are committed to its mesh slice;
+        # broadcasting them onto the decode mesh is the explicit
+        # device-to-device transfer (jit refuses mixed commitments)
+        from jax.sharding import NamedSharding
+        caches_small = jax.device_put(
+            caches_small, jax.tree.map(
+                lambda leaf: NamedSharding(dist.mesh,
+                                           P(*([None] * leaf.ndim))),
+                caches_small))
+        return jitted(pool, caches_small, slot)
+
+    return insert_with_transfer
+
+
 def make_slot_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):
     """Continuous-batching decode step over a slot pool.
 

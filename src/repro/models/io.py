@@ -92,9 +92,12 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
 
     `active` (..., ) bool marks live slots in a continuous-batching pool:
     retired/idle slots get ids=0 and scores=-inf so engine bookkeeping
-    can never mistake a stale row for output.  (The recovery itself still
-    runs on every row — masked rows cost the same HBM bytes today; a
-    row-skipping pallas grid is the follow-up noted in DESIGN.md §7.)
+    can never mistake a stale row for output.  With io_impl="pallas" the
+    mask additionally drives the kernel's row-skipping occupancy grid
+    (DESIGN.md §8): fully-inactive row blocks are skipped at the HBM
+    level, so a half-empty pool no longer pays full-pool bytes; the
+    post-hoc where() below still masks dead rows inside partially-live
+    blocks.
     """
     spec = vocab_spec(cfg)
     if spec is None:
@@ -103,7 +106,8 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
         if cfg.io_impl == "pallas":
             from repro.kernels import ops
-            scores, ids = ops.bloom_decode_topk(logp, spec, topk)
+            scores, ids = ops.bloom_decode_topk(logp, spec, topk,
+                                                active=active)
         else:
             scores, ids = decode_topk(spec, logp, topk, chunk=chunk,
                                       unroll=cfg.unroll_for_analysis)

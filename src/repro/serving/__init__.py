@@ -1,14 +1,23 @@
-"""Continuous-batching serving engine (DESIGN.md §7).
+"""Continuous-batching serving engine (DESIGN.md §7–§8).
 
-scheduler.py — JAX-free RequestQueue/Scheduler (slot admission policy)
-loadgen.py   — deterministic Poisson arrival + length-mix workloads
-engine.py    — the slot-pool engine + static-batching A/B baseline
+scheduler.py    — JAX-free RequestQueue/Scheduler (slot admission policy)
+                  + ShardedScheduler (gossiped multi-host admission)
+loadgen.py      — deterministic Poisson arrival + length-mix workloads,
+                  per-host streams pure in (seed, host_id)
+engine.py       — the slot-pool engine, disaggregated PrefillWorker, and
+                  the static-batching A/B baseline
+sharded_pool.py — data-axis-sharded slot pool + ShardedEngine
 """
-from repro.serving.engine import Engine, ServeStats, mean_latency
-from repro.serving.loadgen import LoadSpec, make_workload, \
-    mixed_length_workload
-from repro.serving.scheduler import Request, RequestQueue, Scheduler
+from repro.serving.engine import Engine, PrefillWorker, ServeStats, \
+    mean_latency
+from repro.serving.loadgen import LoadSpec, host_stream, make_workload, \
+    merge_workloads, mixed_length_workload, sharded_workload
+from repro.serving.scheduler import Request, RequestQueue, Scheduler, \
+    ShardedScheduler, simulate_sharded_schedule
+from repro.serving.sharded_pool import ShardedEngine
 
-__all__ = ["Engine", "ServeStats", "mean_latency", "LoadSpec",
-           "make_workload", "mixed_length_workload", "Request",
-           "RequestQueue", "Scheduler"]
+__all__ = ["Engine", "PrefillWorker", "ServeStats", "mean_latency",
+           "LoadSpec", "host_stream", "make_workload", "merge_workloads",
+           "mixed_length_workload", "sharded_workload", "Request",
+           "RequestQueue", "Scheduler", "ShardedEngine",
+           "ShardedScheduler", "simulate_sharded_schedule"]

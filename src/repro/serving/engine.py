@@ -72,6 +72,41 @@ class ServeStats:
                 "tokens_out": self.tokens_out}
 
 
+class PrefillWorker:
+    """Disaggregated prefill: owns the jitted prefill step + first-token
+    recovery, optionally pinned to a dedicated device (a 1-device mesh
+    slice of the serving topology — DESIGN.md §8).
+
+    Prefill is always B=1 at the exact prompt length — bit-identical to
+    serving the request alone — and emits ``(caches, first_token)``; the
+    caller inserts the caches into its decode pool (for the sharded pool
+    that insert is the device-to-device transfer out of the prefill
+    slice).  Splitting prefill out of the engine is what lets the sharded
+    engine place it on its own slice while the decode pool spans the data
+    axis; the single-host Engine uses the same worker unpinned, so both
+    paths run the very same jitted callables.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, topk: int,
+                 dist=None, device=None):
+        self.device = device
+        if device is not None:
+            params = jax.device_put(params, device)
+        self.params = params
+        self._prefill = jax.jit(steps_lib.make_prefill_step(cfg, dist))
+        self._recover = jax.jit(
+            lambda logits: io_lib.recover_topk(cfg, logits, topk=topk))
+
+    def prefill(self, req: Request):
+        """req -> (caches at prompt length, greedy first token id)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        if self.device is not None:
+            prompt = jax.device_put(prompt, self.device)
+        pre = self._prefill(self.params, {"tokens": prompt})
+        _, ids = self._recover(pre["last_logits"])
+        return pre["caches"], int(np.asarray(ids)[0, 0])
+
+
 class Engine:
     """Continuous-batching engine over a fixed slot pool.
 
@@ -106,7 +141,8 @@ class Engine:
         self.max_len = max_len
         self.topk = topk
         self.eos_id = eos_id
-        self._prefill = jax.jit(steps_lib.make_prefill_step(cfg, dist))
+        self._prefill_worker = PrefillWorker(cfg, params, topk=topk,
+                                             dist=dist)
         # the pool is donated through every decode/insert: the host loop
         # never reuses the previous tree, so XLA (where supported) updates
         # the multi-GB cache in place instead of allocating a second pool
@@ -115,8 +151,6 @@ class Engine:
             cfg, topk=topk, dist=dist), donate_argnums=(2,))
         self._insert = jax.jit(steps_lib.insert_cache_slot,
                                donate_argnums=(0,))
-        self._recover = jax.jit(
-            lambda logits: io_lib.recover_topk(cfg, logits, topk=topk))
         self._pool_template = tf.init_lm_cache(
             cfg, n_slots, max_len, dtype=jnp.dtype(cfg.dtype))
 
@@ -132,11 +166,9 @@ class Engine:
         assert req.prompt_len + req.max_gen <= self.max_len, (
             f"request {req.rid}: prompt {req.prompt_len} + max_gen "
             f"{req.max_gen} exceeds pool max_len {self.max_len}")
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        pre = self._prefill(self.params, {"tokens": prompt})
-        _, ids = self._recover(pre["last_logits"])
-        caches = self._insert(caches, pre["caches"], jnp.int32(req.slot))
-        return caches, int(np.asarray(ids)[0, 0])
+        small, first = self._prefill_worker.prefill(req)
+        caches = self._insert(caches, small, jnp.int32(req.slot))
+        return caches, first
 
     def _stopped(self, req: Request, tok: int) -> bool:
         if self.eos_id is not None and tok == self.eos_id:

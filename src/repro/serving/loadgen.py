@@ -6,7 +6,10 @@ categorical prompt/generation length mix — the mixed-length workload that
 makes static batching burn slot-steps on drained requests (DLRM-style
 serving traffic, cf. Naumov et al., 2019).  Everything is a pure function
 of `seed`, so the simulation tests and the committed BENCH_serving.json
-baseline replay the exact same trace on every CI run.
+baseline replay the exact same trace on every CI run.  Under sharding the
+same contract holds per host: ``host_stream`` is a pure function of
+``(seed, host_id)``, so the multi-host schedule replays exactly no matter
+which hosts draw first (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -29,9 +32,13 @@ class LoadSpec:
     seed: int = 0
 
 
-def make_workload(spec: LoadSpec) -> list[Request]:
-    """spec -> arrival-ordered [Request] (prompts drawn uniform over vocab)."""
-    rng = np.random.default_rng(spec.seed)
+def _draw_stream(rng: np.random.Generator, spec: LoadSpec,
+                 rid_of, home: int) -> list[Request]:
+    """One seeded arrival stream — the single sampling implementation
+    behind make_workload AND host_stream, so the mixes can never diverge
+    (merge_workloads must replay the identical traffic through the
+    single-host engine).  Draw order (gaps, prompt lens, gen lens,
+    prompts) is part of the committed-bench contract — do not reorder."""
     gaps = rng.exponential(1.0 / spec.rate, size=spec.n_requests)
     arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
     p_lens = rng.choice(spec.prompt_lens, size=spec.n_requests)
@@ -44,9 +51,47 @@ def make_workload(spec: LoadSpec) -> list[Request]:
     for i in range(spec.n_requests):
         prompt = rng.integers(0, spec.vocab, size=int(p_lens[i]),
                               dtype=np.int32)
-        reqs.append(Request(rid=i, prompt=prompt, max_gen=int(g_lens[i]),
-                            arrival_step=int(arrivals[i])))
+        reqs.append(Request(rid=rid_of(i), prompt=prompt,
+                            max_gen=int(g_lens[i]),
+                            arrival_step=int(arrivals[i]), home=home))
     return reqs
+
+
+def make_workload(spec: LoadSpec) -> list[Request]:
+    """spec -> arrival-ordered [Request] (prompts drawn uniform over vocab)."""
+    return _draw_stream(np.random.default_rng(spec.seed), spec,
+                        rid_of=lambda i: i, home=0)
+
+
+def host_stream(spec: LoadSpec, host: int, n_hosts: int) -> list[Request]:
+    """One host's arrival stream for the sharded engine: a pure function
+    of ``(spec.seed, host)`` and NOTHING else — in particular not of how
+    many streams were drawn before it, so any subset of hosts replays
+    bit-identically and the multi-host schedule is exactly reproducible
+    (DESIGN.md §8; regression-tested in tests/test_serving_multihost.py).
+
+    ``np.random.default_rng([seed, host])`` seeds the underlying
+    SeedSequence with the (seed, host) entropy pair — independent per-host
+    streams without any shared-counter coupling.  rids are globally unique
+    and host-tagged: ``rid = i * n_hosts + host``.
+    """
+    return _draw_stream(np.random.default_rng([spec.seed, host]), spec,
+                        rid_of=lambda i: i * n_hosts + host, home=host)
+
+
+def sharded_workload(spec: LoadSpec, n_hosts: int) -> list[list[Request]]:
+    """Per-host arrival streams (``spec.n_requests`` requests EACH);
+    ``[h]`` is host h's stream.  See host_stream for the determinism
+    contract."""
+    return [host_stream(spec, h, n_hosts) for h in range(n_hosts)]
+
+
+def merge_workloads(per_host: list[list[Request]]) -> list[Request]:
+    """Flatten per-host streams into one global arrival-ordered workload
+    (ties broken by (home, rid) — the same order the gossiped queue uses),
+    for replaying the identical traffic through a single-host engine."""
+    return sorted((r for reqs in per_host for r in reqs),
+                  key=lambda r: (r.arrival_step, r.home, r.rid))
 
 
 def mixed_length_workload(vocab: int, n_requests: int = 12,

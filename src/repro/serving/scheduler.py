@@ -1,15 +1,30 @@
-"""Request queue + slot scheduler for the continuous-batching engine.
+"""Request queues + slot schedulers for the continuous-batching engine.
 
 Deliberately JAX-free: admission policy is host-side control flow over a
-fixed pool of cache slots (the device-side pool lives in engine.py), so
-the invariants — slot conservation, FIFO admission among ready requests,
-no starvation — are testable with hypothesis in microseconds.
+fixed pool of cache slots (the device-side pool lives in engine.py /
+sharded_pool.py), so the invariants — slot conservation, FIFO admission
+among ready requests, no starvation, and (sharded) no cross-host slot
+double-claim — are testable with hypothesis in microseconds.
 
 Time is measured in *decode steps*: the engine advances the clock once
 per jitted decode step, and a request with ``arrival_step = t`` becomes
 admissible the first time the clock reaches t.  That makes every schedule
 a deterministic function of (workload, n_slots) — the property CI runs on
 CPU without ever touching the model.
+
+Two schedulers live here:
+
+  * ``Scheduler`` — the single-host FIFO slot pool from PR 2.
+  * ``ShardedScheduler`` — the multi-host admission protocol (DESIGN.md
+    §8): the global slot pool is partitioned into per-host shards, and
+    admission runs as a *deterministic replicated state machine* over a
+    gossiped event log.  Every scheduling event (request arrival at its
+    home host, slot release) becomes globally visible ``gossip_delay``
+    steps after it happens — including to the host that produced it, so
+    every host replays the identical merged event prefix and computes the
+    identical admission assignment.  A host then *executes* only the
+    admissions that land in its own slot range; no two hosts can ever
+    claim the same slot or the same request.
 """
 from __future__ import annotations
 
@@ -28,6 +43,7 @@ class Request:
     prompt: np.ndarray                 # (S,) int32 token ids
     max_gen: int                       # generation budget (incl. 1st token)
     arrival_step: int = 0              # decode-step clock of arrival
+    home: int = 0                      # host shard the request arrived at
 
     # engine-filled results
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -138,3 +154,207 @@ class Scheduler:
         self.releases.append((now, slot, req.rid, self._seq))
         self._seq += 1
         return req
+
+
+# ---------------------------------------------------------------------------
+# Sharded (multi-host) admission: gossiped replicated-state-machine queue
+# ---------------------------------------------------------------------------
+
+class HostShard:
+    """One host's slice of the global slot pool: the contiguous global
+    slot range [host * slots_per_host, (host+1) * slots_per_host) plus the
+    host-local event log.  Events carry GLOBAL slot ids and the global
+    event seq, so the merged log is reconstructible from the per-host logs
+    (linearization — tested in tests/test_property.py)."""
+
+    def __init__(self, host: int, slots_per_host: int):
+        self.host = host
+        self.slots_per_host = slots_per_host
+        self.lo = host * slots_per_host
+        self.hi = (host + 1) * slots_per_host
+        self.admissions: List[Tuple[int, int, int, int]] = []
+        self.releases: List[Tuple[int, int, int, int]] = []
+
+    def owns(self, gslot: int) -> bool:
+        return self.lo <= gslot < self.hi
+
+
+class ShardedScheduler:
+    """Deterministic gossiped admission over per-host slot shards.
+
+    Protocol (DESIGN.md §8): all scheduling inputs — request arrivals
+    (pushed at their home host) and slot releases — enter a logically
+    replicated event log and become *globally visible* ``gossip_delay``
+    decode steps after they happen, uniformly, including to the host that
+    produced them.  Admission at step ``now`` is then a pure function of
+    the visible prefix: the visible-ready requests, ordered by
+    (arrival_step, home, rid), are assigned to the visible-free slots in
+    global slot order.  Because every host evaluates the same function on
+    the same prefix, the assignment is identical everywhere; each host
+    executes only the admissions inside its own slot range, so a slot (or
+    a request) can never be claimed twice.  ``gossip_delay=0`` degenerates
+    to a single synchronous pool — the single-host ``Scheduler`` order.
+
+    This class *is* the simulation of that protocol: one authoritative
+    merged state, with per-host logs recorded on the owning ``HostShard``.
+    Determinism (two replicas replaying identical logs) is asserted by
+    tests/test_serving_multihost.py; the hypothesis suite drives random
+    traffic against the invariants.
+    """
+
+    def __init__(self, n_hosts: int, slots_per_host: int,
+                 gossip_delay: int = 1):
+        assert n_hosts >= 1 and slots_per_host >= 1 and gossip_delay >= 0
+        self.n_hosts = n_hosts
+        self.slots_per_host = slots_per_host
+        self.n_slots = n_hosts * slots_per_host
+        self.gossip_delay = gossip_delay
+        self.hosts = [HostShard(h, slots_per_host) for h in range(n_hosts)]
+        self._pending: List[Request] = []
+        self._occupant: List[Optional[Request]] = [None] * self.n_slots
+        # step at which the slot's free status is globally visible
+        self._free_vis: List[int] = [0] * self.n_slots
+        self.admissions: List[Tuple[int, int, int, int]] = []
+        self.releases: List[Tuple[int, int, int, int]] = []
+        self._seq = 0
+
+    # ------------------------------------------------------------------
+    def push(self, req: Request, host: Optional[int] = None) -> None:
+        """Local arrival at its home host (visible cluster-wide at
+        arrival_step + gossip_delay)."""
+        if host is not None:
+            req.home = host
+        assert 0 <= req.home < self.n_hosts
+        self._pending.append(req)
+
+    def push_workloads(self, per_host: List[List[Request]]) -> None:
+        assert len(per_host) == self.n_hosts
+        for h, reqs in enumerate(per_host):
+            for r in reqs:
+                self.push(r, host=h)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._occupant)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def active(self) -> Dict[int, Request]:
+        return {s: r for s, r in enumerate(self._occupant) if r is not None}
+
+    def host_of(self, gslot: int) -> int:
+        return gslot // self.slots_per_host
+
+    def _visible_ready(self, now: int) -> List[Request]:
+        return sorted(
+            (r for r in self._pending
+             if r.arrival_step + self.gossip_delay <= now),
+            key=lambda r: (r.arrival_step, r.home, r.rid))
+
+    def _visible_free(self, now: int) -> List[int]:
+        return [s for s in range(self.n_slots)
+                if self._occupant[s] is None and self._free_vis[s] <= now]
+
+    # ------------------------------------------------------------------
+    def admit(self, now: int) -> List[Request]:
+        """The replicated admission function: visible-ready requests ->
+        visible-free slots, both in deterministic global order.  Returns
+        admitted requests with .slot (GLOBAL id) / .admitted_step filled;
+        the owning HostShard records the event."""
+        admitted = []
+        for gslot, req in zip(self._visible_free(now),
+                              self._visible_ready(now)):
+            if self._occupant[gslot] is not None:  # pragma: no cover
+                raise RuntimeError(f"slot {gslot} double-assigned")
+            req.slot = gslot
+            req.admitted_step = now
+            self._occupant[gslot] = req
+            ev = (now, gslot, req.rid, self._seq)
+            self.admissions.append(ev)
+            self.hosts[self.host_of(gslot)].admissions.append(ev)
+            self._seq += 1
+            admitted.append(req)
+        if admitted:
+            taken = {id(r) for r in admitted}
+            self._pending = [r for r in self._pending
+                             if id(r) not in taken]
+        return admitted
+
+    def release(self, gslot: int, now: int) -> Request:
+        req = self._occupant[gslot]
+        if req is None:
+            raise RuntimeError(f"slot {gslot} released while free")
+        req.finish_step = now
+        self._occupant[gslot] = None
+        # the freed slot re-enters the pool only once gossip has spread it
+        self._free_vis[gslot] = now + self.gossip_delay
+        ev = (now, gslot, req.rid, self._seq)
+        self.releases.append(ev)
+        self.hosts[self.host_of(gslot)].releases.append(ev)
+        self._seq += 1
+        return req
+
+    # ------------------------------------------------------------------
+    def next_event_time(self, now: int) -> Optional[int]:
+        """Earliest step > now at which an admission could become possible
+        (a pending request or a freed slot gossips into visibility) — the
+        engine fast-forwards the clock here when the pool is empty."""
+        cands = []
+        if self._pending:
+            cands.append(min(r.arrival_step for r in self._pending)
+                         + self.gossip_delay)
+            cands.extend(v for s, v in enumerate(self._free_vis)
+                         if self._occupant[s] is None and v > now)
+        cands = [c for c in cands if c > now]
+        return min(cands) if cands else None
+
+
+def simulate_sharded_schedule(per_host: List[List[Request]],
+                              slots_per_host: int, gossip_delay: int = 1
+                              ) -> Tuple[ShardedScheduler, Dict[str, int]]:
+    """Model-free replay of the sharded engine's schedule: every request
+    occupies its slot for exactly ``max_gen`` emitted tokens (1 at
+    prefill/admission + max_gen-1 decode steps; no EOS), one clock tick
+    per pool decode step — the same loop order as ShardedEngine.run, so
+    the engine's event log must match this one exactly (asserted by
+    tests/test_serving_multihost.py).  Deterministic integers only:
+    bench_serving.py commits its outputs as a CI baseline.
+    """
+    sched = ShardedScheduler(len(per_host), slots_per_host, gossip_delay)
+    sched.push_workloads(per_host)
+    remaining: Dict[int, int] = {}
+    stats = {"decode_steps": 0, "idle_steps": 0, "slot_steps_total": 0,
+             "slot_steps_active": 0, "tokens_out": 0}
+    now = 0
+    while sched.n_pending or sched.n_active:
+        for req in sched.admit(now):
+            req.tokens.append(-1)          # placeholder first token
+            stats["tokens_out"] += 1
+            if req.max_gen <= 1:
+                sched.release(req.slot, now)
+            else:
+                remaining[req.rid] = req.max_gen - 1
+        if not sched.n_active:
+            nxt = sched.next_event_time(now)
+            if nxt is None:
+                break
+            if nxt <= now:                 # pragma: no cover
+                raise RuntimeError("scheduler clock did not advance")
+            stats["idle_steps"] += nxt - now
+            now = nxt
+            continue
+        stats["decode_steps"] += 1
+        stats["slot_steps_total"] += sched.n_slots
+        stats["slot_steps_active"] += sched.n_active
+        now += 1
+        for gslot, req in list(sched.active.items()):
+            req.tokens.append(-1)
+            stats["tokens_out"] += 1
+            remaining[req.rid] -= 1
+            if remaining[req.rid] <= 0:
+                sched.release(gslot, now)
+    return sched, stats

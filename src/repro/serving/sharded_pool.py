@@ -1,0 +1,215 @@
+"""Data-axis-sharded serving: GSPMD slot pool + disaggregated prefill
+(DESIGN.md §8).
+
+The PR-2 engine is single-host: its slot pool lives on the local mesh and
+admission is host-side Python.  This module shards exactly that boundary,
+the way production recommenders do (DLRM, Naumov et al. 2019):
+
+  * **Sharded slot pool** — the cache tree is one GSPMD pytree whose slot
+    axis shards over the ``data`` mesh axis (`launch/sharding.
+    slot_pool_pspecs`): each data shard owns a contiguous slot range, so
+    decode reads are all-local and a cache insert touches one shard.
+  * **Per-host admission + gossiped queue** — scheduling is the
+    deterministic replicated state machine of ``scheduler.
+    ShardedScheduler``: arrivals and releases gossip into global
+    visibility after ``gossip_delay`` steps, every host computes the same
+    admission assignment, and each host executes only admissions landing
+    in its own slot range — no slot or request is ever claimed twice.
+  * **Disaggregated prefill** — prefill runs on a dedicated 1-device mesh
+    slice (``engine.PrefillWorker``); the emitted caches are inserted into
+    the decode pool by ``steps.make_sharded_insert``, a shard_map whose
+    replicated-operand broadcast IS the device-to-device transfer.
+  * **ONE compiled decode step survives sharding** — the decode-pool step
+    is the same ``steps.make_slot_decode_step`` per-slot-position jitted
+    callable, now traced once over the sharded pool; tokens/pos/active
+    are committed with explicit NamedShardings every step so the input
+    layout (and therefore the executable) never changes mid-run.  The
+    multi-host sim test asserts ``_decode._cache_size() == 1`` after a
+    full run.
+
+Per-request tokens are BIT-identical to the single-host engine and to
+solo static serving: prefill is B=1 at exact prompt length either way,
+and every decode op is row-independent — batch sharding partitions rows
+across devices without touching per-row math (asserted by
+tests/test_serving_multihost.py on a simulated 8-device topology).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import sharding as sharding_lib
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tf
+from repro.serving.engine import Engine, PrefillWorker, ServeStats
+from repro.serving.scheduler import Request, ShardedScheduler
+
+
+class ShardedEngine:
+    """Continuous batching over a data-axis-sharded slot pool.
+
+    ``mesh`` must carry a ``data`` axis; one simulated host per data
+    shard, ``slots_per_host`` slots each (global pool = n_hosts *
+    slots_per_host slots).  ``run`` consumes per-host workloads
+    (``loadgen.sharded_workload``) through the gossiped admission
+    protocol.  Eligibility mirrors ``Engine.supports``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh,
+                 slots_per_host: int, max_len: int, topk: int = 8,
+                 eos_id: Optional[int] = None, gossip_delay: int = 1,
+                 prefill_device=None):
+        if not Engine.supports(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: sharded serving covers the same decoder-only "
+                "token LMs as Engine (see Engine.supports)")
+        assert slots_per_host >= 1 and max_len >= 2
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dist = sharding_lib.DistContext(mesh)
+        self.n_hosts = int(self.dist.n_batch)
+        self.slots_per_host = slots_per_host
+        self.n_slots = self.n_hosts * slots_per_host
+        self.max_len = max_len
+        self.topk = topk
+        self.eos_id = eos_id
+        self.gossip_delay = gossip_delay
+
+        # decode-pool weights: explicitly replicated across the mesh so
+        # every per-step input is committed and the step compiles once
+        self.params = jax.device_put(
+            params, jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 params))
+
+        # Disaggregated prefill: the worker owns its OWN weight copy on
+        # its own device (prefill/decode disaggregation — prefill
+        # capacity scales independently of the pool).  In this
+        # single-process simulation the default device doubles as data
+        # shard 0, so that device carries two param copies; a real
+        # deployment passes a device OUTSIDE the decode mesh.  B=1
+        # prefill cannot shard, so the slice needs no DistContext.
+        self.prefill_worker = PrefillWorker(
+            cfg, params, topk=topk,
+            device=(mesh.devices.flat[0] if prefill_device is None
+                    else prefill_device))
+
+        # the sharded pool: slot axis over `data`
+        template = tf.init_lm_cache(cfg, self.n_slots, max_len,
+                                    dtype=jnp.dtype(cfg.dtype))
+        self._pool_specs = sharding_lib.slot_pool_pspecs(
+            cfg, template, self.dist, self.n_slots)
+        self._pool_shardings = jax.tree.map(
+            lambda spec: NamedSharding(mesh, spec), self._pool_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self._pool_template = jax.device_put(template, self._pool_shardings)
+
+        # per-step host->device commits: slot-aligned over `data`
+        self._row_sharding = NamedSharding(mesh, P(self.dist.batch_axes))
+        self._tok_sharding = NamedSharding(
+            mesh, P(self.dist.batch_axes, None))
+        # out_shardings pin the cache layout to the pool specs so the
+        # donated output of step t is a valid input of step t+1 with the
+        # SAME layout — otherwise GSPMD may pick a different output
+        # sharding and the second step recompiles (single-compiled-step
+        # invariant; the sim test asserts _decode._cache_size() == 1)
+        self._decode = jax.jit(
+            steps_lib.make_slot_decode_step(cfg, topk=topk, dist=self.dist),
+            donate_argnums=(2,),
+            out_shardings={"caches": self._pool_shardings,
+                           "topk_scores": self._tok_sharding,
+                           "topk_ids": self._tok_sharding})
+        self._insert = steps_lib.make_sharded_insert(
+            self._pool_specs, self.dist, slots_per_host)
+
+    def _fresh_pool(self):
+        # copy, not alias: donation consumes the buffers (engine.py)
+        return jax.tree.map(jnp.copy, self._pool_template)
+
+    def _stopped(self, req: Request, tok: int) -> bool:
+        if self.eos_id is not None and tok == self.eos_id:
+            return True
+        return len(req.tokens) >= req.max_gen
+
+    def _admit_one(self, req: Request, caches):
+        assert req.prompt_len + req.max_gen <= self.max_len, (
+            f"request {req.rid}: prompt {req.prompt_len} + max_gen "
+            f"{req.max_gen} exceeds pool max_len {self.max_len}")
+        small, first = self.prefill_worker.prefill(req)
+        caches = self._insert(caches, small, jnp.int32(req.slot))
+        return caches, first
+
+    # ------------------------------------------------------------------
+    def run(self, per_host_requests: List[List[Request]]
+            ) -> Tuple[Dict[int, Request], ServeStats]:
+        """Serve per-host arrival streams through the gossiped pool.
+
+        The loop order is EXACTLY ``scheduler.simulate_sharded_schedule``
+        (admit -> fast-forward-if-empty -> decode -> retire), so with
+        ``eos_id=None`` the engine's event log reproduces the model-free
+        simulation's log integer-for-integer.
+        """
+        sched = ShardedScheduler(self.n_hosts, self.slots_per_host,
+                                 self.gossip_delay)
+        sched.push_workloads(per_host_requests)
+        stats = ServeStats()
+
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        caches = self._fresh_pool()
+        now = 0
+        t0 = time.perf_counter()
+
+        while sched.n_pending or sched.n_active:
+            for req in sched.admit(now):
+                caches, first = self._admit_one(req, caches)
+                req.tokens.append(first)
+                stats.prefills += 1
+                stats.tokens_out += 1
+                if self._stopped(req, first):
+                    sched.release(req.slot, now)
+                else:
+                    tokens[req.slot, 0] = first
+                    pos[req.slot] = req.prompt_len
+                    active[req.slot] = True
+
+            if not sched.n_active:
+                nxt = sched.next_event_time(now)
+                if nxt is None:
+                    break
+                stats.idle_steps += nxt - now
+                now = nxt
+                continue
+
+            out = self._decode(
+                self.params,
+                jax.device_put(jnp.asarray(tokens), self._tok_sharding),
+                caches,
+                jax.device_put(jnp.asarray(pos), self._row_sharding),
+                jax.device_put(jnp.asarray(active), self._row_sharding))
+            caches = out["caches"]
+            ids = np.asarray(out["topk_ids"][:, 0])
+            stats.decode_steps += 1
+            stats.slot_steps_total += self.n_slots
+            stats.slot_steps_active += int(active.sum())
+            now += 1
+            for gslot, req in list(sched.active.items()):
+                tok = int(ids[gslot])
+                req.tokens.append(tok)
+                stats.tokens_out += 1
+                tokens[gslot, 0] = tok
+                pos[gslot] += 1
+                if self._stopped(req, tok):
+                    sched.release(gslot, now)
+                    active[gslot] = False
+
+        stats.wall_s = time.perf_counter() - t0
+        self._sched = sched          # exposed for the simulation tests
+        results = {r.rid: r for reqs in per_host_requests for r in reqs}
+        return results, stats

@@ -123,6 +123,96 @@ def test_bloom_decode_topk_masked_vocab_never_yields_sentinel_ids():
     assert int(ids.min()) >= 0
 
 
+@pytest.mark.parametrize("occupancy", [1 / 8, 1 / 2, 1.0])
+@pytest.mark.parametrize("b_tile", [1, 4])
+def test_bloom_decode_topk_row_skipping_matches_dense(occupancy, b_tile):
+    """The slot-occupancy-prefetched grid == the dense grid on every row
+    block containing a live slot, and (-inf, 0) on fully-dead blocks —
+    exactly the post-hoc masking recover_topk applies (DESIGN.md §8).
+    With b_tile=1 that is per-slot-row skipping."""
+    B, m, d, k, topk = 8, 64, 333, 3, 5
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 2), (d, k), 0, m)
+    active = np.zeros(B, bool)
+    active[:max(1, int(B * occupancy))] = True
+
+    vals, ids = bloom_decode_topk_pallas(
+        logp, H, topk, b_tile=b_tile, v_tile=64, interpret=True,
+        active=jnp.asarray(active))
+    dense_v, dense_i = bloom_decode_topk_pallas(
+        logp, H, topk, b_tile=b_tile, v_tile=64, interpret=True)
+
+    live_block = active.reshape(-1, b_tile).any(axis=1).repeat(b_tile)
+    np.testing.assert_array_equal(np.asarray(vals)[live_block],
+                                  np.asarray(dense_v)[live_block])
+    np.testing.assert_array_equal(np.asarray(ids)[live_block],
+                                  np.asarray(dense_i)[live_block])
+    assert np.all(np.asarray(vals)[~live_block] == -np.inf)
+    assert np.all(np.asarray(ids)[~live_block] == 0)
+
+
+def test_bloom_decode_topk_row_skipping_scattered_occupancy():
+    """Non-contiguous live slots (the realistic mid-flight pool): blocks
+    are skipped wherever a whole b_tile of slots drained, and the pinned
+    logp/H index maps never corrupt a later live block's output."""
+    B, m, d, k, topk = 12, 48, 257, 2, 4
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 3), (d, k), 0, m)
+    # live, dead, dead, live blocks at b_tile=3
+    active = np.array([True, False, True,
+                       False, False, False,
+                       False, False, False,
+                       False, True, False])
+    vals, ids = bloom_decode_topk_pallas(
+        logp, H, topk, b_tile=3, v_tile=64, interpret=True,
+        active=jnp.asarray(active))
+    dense_v, dense_i = bloom_decode_topk_pallas(
+        logp, H, topk, b_tile=3, v_tile=64, interpret=True)
+    live_block = active.reshape(-1, 3).any(axis=1).repeat(3)
+    np.testing.assert_array_equal(np.asarray(vals)[live_block],
+                                  np.asarray(dense_v)[live_block])
+    np.testing.assert_array_equal(np.asarray(ids)[live_block],
+                                  np.asarray(dense_i)[live_block])
+    assert np.all(np.asarray(vals)[~live_block] == -np.inf)
+
+    # leading dead blocks (low slots drained first — forward pin path):
+    # only the LAST block is live
+    active2 = np.zeros(B, bool)
+    active2[-2] = True
+    vals2, ids2 = bloom_decode_topk_pallas(
+        logp, H, topk, b_tile=3, v_tile=64, interpret=True,
+        active=jnp.asarray(active2))
+    np.testing.assert_array_equal(np.asarray(vals2)[-3:],
+                                  np.asarray(dense_v)[-3:])
+    np.testing.assert_array_equal(np.asarray(ids2)[-3:],
+                                  np.asarray(dense_i)[-3:])
+    assert np.all(np.asarray(vals2)[:-3] == -np.inf)
+    assert np.all(np.asarray(ids2)[:-3] == 0)
+
+
+def test_recover_topk_active_mask_drives_row_skipping_kernel():
+    """io.recover_topk(active=...) on the pallas path returns the same
+    (scores, ids) as the xla path with the same mask — the kernel-level
+    block skipping composes with the row-level post-mask."""
+    import dataclasses
+    from repro import configs
+    from repro.models import io as io_lib
+
+    cfg = configs.get_smoke_config("qwen1.5-0.5b")
+    B = 6
+    logits = jax.random.normal(KEY, (B, cfg.m_vocab))
+    active = jnp.asarray(np.array([True, False, True, False, False, True]))
+    cfg_x = dataclasses.replace(cfg, io_impl="xla")
+    cfg_p = dataclasses.replace(cfg, io_impl="pallas")
+    sx, ix = io_lib.recover_topk(cfg_x, logits, topk=4, active=active)
+    sp, ip = io_lib.recover_topk(cfg_p, logits, topk=4, active=active)
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sp),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ip))
+    assert np.all(np.asarray(sp)[~np.asarray(active)] == -np.inf)
+    assert np.all(np.asarray(ip)[~np.asarray(active)] == 0)
+
+
 # --------------------------------------------------------------------------
 # custom-VJP gradients vs the XLA oracles (acceptance: <= 1e-4 max abs err)
 # --------------------------------------------------------------------------

@@ -166,6 +166,110 @@ def test_scheduler_invariants_under_random_traffic(n_slots, arrivals,
 
 
 @given(
+    n_hosts=st.integers(1, 4),
+    slots_per_host=st.integers(1, 3),
+    gossip_delay=st.integers(0, 3),
+    arrivals=st.lists(
+        st.tuples(st.integers(0, 20),      # arrival step
+                  st.integers(0, 3),       # home host (mod n_hosts)
+                  st.integers(1, 6)),      # lifetime (max_gen)
+        min_size=0, max_size=20),
+)
+@settings(max_examples=60, deadline=None)
+def test_gossiped_queue_invariants_under_random_traffic(
+        n_hosts, slots_per_host, gossip_delay, arrivals):
+    """The sharded admission protocol, for ANY per-host arrival pattern
+    and ANY gossip delay: no slot double-claim across host shards, FIFO
+    among ready requests, every admitted request completes, and the
+    merged event log is a linearization of the per-host logs."""
+    from repro.serving.scheduler import Request, simulate_sharded_schedule
+
+    per_host = [[] for _ in range(n_hosts)]
+    reqs = []
+    for i, (a, h, life) in enumerate(arrivals):
+        r = Request(rid=i, prompt=np.zeros((2,), np.int32), max_gen=life,
+                    arrival_step=a, home=h % n_hosts)
+        per_host[r.home].append(r)
+        reqs.append(r)
+
+    sched, stats = simulate_sharded_schedule(
+        per_host, slots_per_host, gossip_delay)
+
+    # every request admitted exactly once and completed
+    assert len(sched.admissions) == len(reqs)
+    assert len(sched.releases) == len(reqs)
+    assert all(r.done for r in reqs)
+    assert all(r.admitted_step >= r.arrival_step + gossip_delay
+               for r in reqs)
+    admitted_rids = [rid for _, _, rid, _ in sched.admissions]
+    assert len(admitted_rids) == len(set(admitted_rids))
+
+    # no slot double-claim across host shards: per-GLOBAL-slot
+    # admit/release alternation with matching rids on the merged log,
+    # and each request claimed by exactly one host
+    from conftest import assert_slot_log_sound
+    assert_slot_log_sound(sched, sched.n_slots)
+    host_claims = {}
+    for _, gslot, rid, _ in sched.admissions:
+        host_claims.setdefault(rid, set()).add(sched.host_of(gslot))
+    assert all(len(h) == 1 for h in host_claims.values())
+
+    # FIFO among ready: the admission sequence respects the gossiped
+    # queue's deterministic global order (arrival, home, rid)
+    expected = [r.rid for r in
+                sorted(reqs, key=lambda r: (r.arrival_step, r.home,
+                                            r.rid))]
+    assert admitted_rids == expected
+
+    # merged log is a linearization of per-host logs: restricting it to
+    # each host's slot range reproduces the host log in order, and the
+    # union of host logs IS the merged log
+    for h, shard in enumerate(sched.hosts):
+        assert shard.admissions == [
+            e for e in sched.admissions if sched.host_of(e[1]) == h]
+        assert shard.releases == [
+            e for e in sched.releases if sched.host_of(e[1]) == h]
+        for evs in (shard.admissions, shard.releases):
+            assert [e[3] for e in evs] == sorted(e[3] for e in evs)
+    merged = sorted(sched.admissions + sched.releases, key=lambda e: e[3])
+    from_hosts = sorted(
+        (e for s in sched.hosts for e in s.admissions + s.releases),
+        key=lambda e: e[3])
+    assert merged == from_hosts
+
+    # slot conservation in aggregate
+    assert stats["slot_steps_active"] <= stats["slot_steps_total"]
+    assert stats["tokens_out"] == sum(r.max_gen for r in reqs)
+
+
+@given(
+    n_hosts=st.integers(1, 3),
+    slots_per_host=st.integers(1, 2),
+    gossip_delay=st.integers(0, 2),
+    seed=st.integers(0, 500),
+    n_requests=st.integers(1, 6),
+)
+@settings(max_examples=25, deadline=None)
+def test_gossiped_schedule_is_deterministic(n_hosts, slots_per_host,
+                                            gossip_delay, seed,
+                                            n_requests):
+    """Two independent replays of (seed, topology) — with host streams
+    drawn in different orders — produce identical event logs."""
+    from repro.serving.loadgen import LoadSpec, host_stream
+    from repro.serving.scheduler import simulate_sharded_schedule
+
+    spec = LoadSpec(n_requests=n_requests, vocab=64, rate=1.0, seed=seed)
+    wl_a = [host_stream(spec, h, n_hosts) for h in range(n_hosts)]
+    wl_b = [host_stream(spec, h, n_hosts)
+            for h in reversed(range(n_hosts))][::-1]
+    sa, sta = simulate_sharded_schedule(wl_a, slots_per_host, gossip_delay)
+    sb, stb = simulate_sharded_schedule(wl_b, slots_per_host, gossip_delay)
+    assert sa.admissions == sb.admissions
+    assert sa.releases == sb.releases
+    assert sta == stb
+
+
+@given(
     pushes=st.lists(st.integers(0, 20), min_size=1, max_size=15),
     now=st.integers(0, 25),
 )
