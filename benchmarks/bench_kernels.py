@@ -33,8 +33,10 @@ from repro.kernels import ops, ref
 from repro.kernels.common import BWD_M_TILE as M_TILE
 from repro.kernels.bloom_ce import bloom_ce_pallas
 from repro.kernels.bloom_decode import bloom_decode_pallas
-from repro.kernels.bloom_decode_topk import bloom_decode_topk_pallas
+from repro.kernels.bloom_decode_topk import (bloom_decode_topk_pallas,
+                                             modeled_hbm_bytes)
 from repro.kernels.bloom_embed import bloom_embed_pallas
+from repro.serving.control import plan_compaction
 
 HBM_BW = 819e9
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
@@ -45,7 +47,11 @@ B_DECODE = 8
 # b_tile=8 row blocks (8 blocks) — the scale where block skipping pays
 B_POOL = 64
 BT_POOL = 8
+SPH_POOL = 16         # slots per host shard in the compaction row
 MIN_OCC_RATIO = 1.5   # >= 1.5x fewer modeled bytes at <= 50% occupancy
+# compaction acceptance (ISSUE 4): the densified scattered pool must
+# model within 1.1x of the globally-dense pool's bytes
+MAX_COMPACT_VS_DENSE = 1.1
 
 
 def _cases():
@@ -202,14 +208,17 @@ def run(quick: bool = True):
         dense_v, dense_i = bloom_decode_topk_pallas(
             logp_occ, H_occ, TOPK, b_tile=BT_POOL, v_tile=512,
             interpret=True)
-        bytes_full = nB * (BT_POOL * m * 4 + d * k * 4) + B_POOL * TOPK * 8
+        # the bytes model is single-sourced from the kernel module so it
+        # can never drift from the grid it describes
+        bytes_full = modeled_hbm_bytes(np.ones(B_POOL, bool), BT_POOL,
+                                       m=m, d=d, k=k, topk=TOPK)
         for occ_name, frac in (("occ100", 1.0), ("occ50", 0.5),
                                ("occ12", 0.125)):
             n_act = int(B_POOL * frac)
             active = np.arange(B_POOL) < n_act
             nA = -(-n_act // BT_POOL)       # blocks holding a live slot
-            bytes_occ = (nA * (BT_POOL * m * 4 + d * k * 4)
-                         + B_POOL * TOPK * 8)
+            bytes_occ = modeled_hbm_bytes(active, BT_POOL, m=m, d=d, k=k,
+                                          topk=TOPK)
             vals_s, ids_s = bloom_decode_topk_pallas(
                 logp_occ, H_occ, TOPK, b_tile=BT_POOL, v_tile=512,
                 interpret=True, active=jnp.asarray(active))
@@ -230,6 +239,49 @@ def run(quick: bool = True):
                 visited_blocks=nA, total_blocks=nB,
                 hbm_ratio_vs_full=round(bytes_full / bytes_occ, 4),
                 check_d=d_chk, check_m=m_chk))
+
+        # ---- serving pool compaction: scattered vs densified occupancy
+        # 4 host shards x SPH_POOL slots, 8 live per host on even local
+        # slots: EVERY b_tile row block holds a live slot, so the
+        # row-skipping grid recovers nothing (the b_tile-bound loss).
+        # plan_compaction — the SAME planner the serving control plane
+        # runs — packs each host's live slots into its dense prefix;
+        # visited blocks halve and the compacted model lands exactly on
+        # the globally-dense model.  CI gates >= MIN_OCC_RATIO recovery
+        # and <= MAX_COMPACT_VS_DENSE of dense (ISSUE 4 acceptance).
+        scattered = np.zeros(B_POOL, bool)
+        scattered[::2] = True                      # 50% live, all blocks
+        occupant = [s if scattered[s] else -1 for s in range(B_POOL)]
+        perm = np.asarray(
+            plan_compaction(occupant, SPH_POOL, threshold=0.0), np.int32)
+        compacted = scattered[perm]
+        dense = np.arange(B_POOL) < int(scattered.sum())
+        b_sc = modeled_hbm_bytes(scattered, BT_POOL, m=m, d=d, k=k,
+                                 topk=TOPK)
+        b_co = modeled_hbm_bytes(compacted, BT_POOL, m=m, d=d, k=k,
+                                 topk=TOPK)
+        b_de = modeled_hbm_bytes(dense, BT_POOL, m=m, d=d, k=k, topk=TOPK)
+        # numeric: the permuted pool recovers the SAME top-k per live
+        # slot — compaction is a pure row move
+        v_sc, i_sc = bloom_decode_topk_pallas(
+            logp_occ, H_occ, TOPK, b_tile=BT_POOL, v_tile=512,
+            interpret=True, active=jnp.asarray(scattered))
+        v_co, i_co = bloom_decode_topk_pallas(
+            logp_occ[perm], H_occ, TOPK, b_tile=BT_POOL, v_tile=512,
+            interpret=True, active=jnp.asarray(compacted))
+        live_new = np.flatnonzero(compacted)
+        err = max(_max_err(v_co[live_new], v_sc[perm[live_new]]),
+                  float(jnp.abs(i_co[live_new]
+                                - i_sc[perm[live_new]]).max()))
+        rows.append(_row(
+            f"{name}.decode_topk.scatter_compact", B_POOL, b_co, err,
+            topk=TOPK, occupancy=0.5,
+            active_slots=int(scattered.sum()),
+            slots_per_host=SPH_POOL,
+            bytes_scattered=b_sc, bytes_dense=b_de,
+            hbm_ratio_vs_scattered=round(b_sc / b_co, 4),
+            vs_dense_ratio=round(b_co / b_de, 4),
+            check_d=d_chk, check_m=m_chk))
     return rows
 
 
@@ -297,6 +349,23 @@ def check_against(rows, path=JSON_PATH, err_slack=1e-3,
                 f"{r['name']}: occupancy bytes ratio "
                 f"{r.get('hbm_ratio_vs_full', 0.0):.2f} < {MIN_OCC_RATIO} "
                 "— row skipping no longer pays at partial occupancy")
+        # compaction acceptance bar (ISSUE 4): densifying a scattered
+        # pool must recover >= MIN_OCC_RATIO of the modeled bytes AND
+        # land within MAX_COMPACT_VS_DENSE of the globally-dense model
+        if r["name"].endswith(".decode_topk.scatter_compact"):
+            if r.get("hbm_ratio_vs_scattered", 0.0) < MIN_OCC_RATIO:
+                failures.append(
+                    f"{r['name']}: compaction bytes recovery "
+                    f"{r.get('hbm_ratio_vs_scattered', 0.0):.2f} < "
+                    f"{MIN_OCC_RATIO} — densifying scattered slots no "
+                    "longer pays")
+            if r.get("vs_dense_ratio", float("inf")) \
+                    > MAX_COMPACT_VS_DENSE:
+                failures.append(
+                    f"{r['name']}: compacted bytes are "
+                    f"{r.get('vs_dense_ratio', float('inf')):.2f}x the "
+                    f"dense-occupancy model (> {MAX_COMPACT_VS_DENSE}) — "
+                    "per-host packing is leaving b_tile tails behind")
     return failures
 
 

@@ -45,16 +45,21 @@ CASES = [
 TOPK = 4
 MAX_LEN = 40
 
-# (n_hosts, slots_per_host, n_requests PER HOST, gossip_delay, seed):
-# model-free replays of the gossiped multi-host schedule
-# (scheduler.simulate_sharded_schedule) — deterministic integers on any
-# host, including the 1-device bench-check runner.  The delay sweep pins
-# the gossip cost: the d2 schedule must stay within a few steps of d0.
+# (n_hosts, slots_per_host, n_requests PER HOST, gossip_delay, seed,
+#  compact_threshold): model-free replays of the gossiped multi-host
+# schedule (scheduler.simulate_sharded_schedule) — deterministic integers
+# on any host, including the 1-device bench-check runner.  The delay
+# sweep pins the gossip cost: the d2 schedule must stay within a few
+# steps of d0.  The compaction pair (same topology with and without a
+# threshold) pins the remap's schedule-invariance: identical step counts,
+# only slot ids move (COMPACT events counted in the row).
 SHARDED_CASES = [
-    (4, 2, 4, 1, 0),
-    (8, 1, 2, 1, 0),
-    (4, 2, 4, 0, 0),
-    (4, 2, 4, 2, 0),
+    (4, 2, 4, 1, 0, None),
+    (8, 1, 2, 1, 0, None),
+    (4, 2, 4, 0, 0, None),
+    (4, 2, 4, 2, 0, None),
+    (4, 4, 6, 1, 0, None),
+    (4, 4, 6, 1, 0, 0.25),
 ]
 
 
@@ -107,28 +112,39 @@ def _sharded_spec(n_requests: int, seed: int) -> LoadSpec:
 
 
 def _run_sharded_case(n_hosts: int, slots_per_host: int, n_requests: int,
-                      gossip_delay: int, seed: int):
+                      gossip_delay: int, seed: int,
+                      compact_threshold=None):
     per_host = sharded_workload(_sharded_spec(n_requests, seed), n_hosts)
-    sched, st = simulate_sharded_schedule(per_host, slots_per_host,
-                                          gossip_delay)
+    sched, st = simulate_sharded_schedule(
+        per_host, slots_per_host, gossip_delay,
+        compact_threshold=compact_threshold)
     results = {r.rid: r for reqs in per_host for r in reqs}
     assert all(r.done for r in results.values())
-    util = (st["slot_steps_active"] / st["slot_steps_total"]
-            if st["slot_steps_total"] else 1.0)
-    return {
+    name = f"sched.sharded_h{n_hosts}x{slots_per_host}_d{gossip_delay}"
+    row = {
         "bench": "serving",
-        "name": f"sched.sharded_h{n_hosts}x{slots_per_host}"
-                f"_d{gossip_delay}",
+        "name": name,
         "n_hosts": n_hosts, "slots_per_host": slots_per_host,
         "n_requests": n_requests * n_hosts, "seed": seed,
         "gossip_delay": gossip_delay,
-        "decode_steps": st["decode_steps"],
-        "slot_steps_total": st["slot_steps_total"],
-        "slot_steps_active": st["slot_steps_active"],
-        "utilization": round(util, 4),
-        "tokens_out": st["tokens_out"],
+        "decode_steps": st.decode_steps,
+        "slot_steps_total": st.slot_steps_total,
+        "slot_steps_active": st.slot_steps_active,
+        "utilization": round(st.utilization, 4),
+        "tokens_out": st.tokens_out,
         "mean_latency_steps": round(mean_latency(results), 4),
     }
+    if compact_threshold is not None:
+        # compaction is schedule-invariant: the remap moves slot ids,
+        # never admission/release steps — so all counters must equal the
+        # no-compaction row's; only the COMPACT count is new
+        row["name"] = f"{name}_c{int(compact_threshold * 100)}"
+        row["compact_threshold"] = compact_threshold
+        row["compactions"] = st.compactions
+        assert st.compactions > 0, (
+            f"{row['name']}: compaction case never compacted — the row "
+            "would silently pin nothing")
+    return row
 
 
 def run():
@@ -137,13 +153,29 @@ def run():
         rows.extend(_run_case(arch, n_slots, n_requests, seed))
     for case in SHARDED_CASES:
         rows.append(_run_sharded_case(*case))
+    # compaction schedule-invariance: every _c row must replay the exact
+    # step counts of its no-compaction twin (slot ids move, steps don't)
+    by_name = {r["name"]: r for r in rows}
+    for r in rows:
+        if "compact_threshold" not in r:
+            continue
+        twin = by_name.get(r["name"].rsplit("_c", 1)[0])
+        assert twin is not None, (
+            f"{r['name']}: compaction case needs its no-compaction twin "
+            "in SHARDED_CASES (same topology with compact_threshold=None) "
+            "for the schedule-invariance check")
+        for f in ("decode_steps", "slot_steps_total", "slot_steps_active",
+                  "tokens_out", "mean_latency_steps"):
+            assert r[f] == twin[f], (
+                f"{r['name']}.{f}: compaction changed the schedule "
+                f"({twin[f]} -> {r[f]})")
     return rows
 
 
 # deterministic simulation outputs; wall-clock fields are excluded
 CHECKED_FIELDS = ("decode_steps", "slot_steps_total", "slot_steps_active",
                   "utilization", "tokens_out", "mean_latency_steps",
-                  "decode_step_speedup", "utilization_gain")
+                  "decode_step_speedup", "utilization_gain", "compactions")
 
 
 def write_json(rows, path=JSON_PATH):
@@ -157,23 +189,38 @@ def write_json(rows, path=JSON_PATH):
 
 
 def check_against(rows, path=JSON_PATH) -> list[str]:
-    """Compare fresh rows against the committed baseline."""
+    """Compare fresh rows against the committed baseline.
+
+    Every mismatch is LOUD (collected here, nonzero exit in main):
+    committed rows missing from the fresh run, fresh rows missing from
+    the committed file, and — unlike the old `f in old` guard, which
+    silently skipped a checked field absent on either side — any checked
+    field present in one row but not the other.
+    """
     committed = {r["name"]: r for r in
                  json.loads(path.read_text())["rows"]}
     failures = []
     fresh = {r["name"]: r for r in rows}
     for gone in sorted(set(committed) - set(fresh)):
-        failures.append(f"{gone}: serving bench row disappeared")
+        failures.append(f"{gone}: committed serving bench row missing "
+                        "from the fresh run — a bench case was dropped "
+                        "or renamed")
     for name, r in fresh.items():
         old = committed.get(name)
         if old is None:
-            failures.append(f"{name}: missing from {path.name} — "
-                            "regenerate with --quick")
+            failures.append(f"{name}: expected row missing from "
+                            f"{path.name} — regenerate the baseline")
             continue
         for f in CHECKED_FIELDS:
-            if f in old and old[f] != r.get(f):
+            if (f in old) != (f in r):
+                side = "baseline" if f in r else "fresh run"
                 failures.append(
-                    f"{name}.{f}: {old[f]} -> {r.get(f)} — the seeded "
+                    f"{name}.{f}: checked field missing from the {side} "
+                    "— schema drift; regenerate the baseline "
+                    "deliberately")
+            elif f in old and old[f] != r[f]:
+                failures.append(
+                    f"{name}.{f}: {old[f]} -> {r[f]} — the seeded "
                     "simulation is no longer reproducing the baseline "
                     "schedule")
         if name.endswith(".speedup") \

@@ -47,10 +47,34 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import pad_axis, resolve_interpret
+
+
+def modeled_hbm_bytes(active, b_tile: int, *, m: int, d: int, k: int,
+                      topk: int) -> int:
+    """Analytic HBM bytes of one row-skipping decode-topk call for a
+    given slot-occupancy mask — the SINGLE source for the occupancy rows
+    in benchmarks/bench_kernels.py and the serving byte audits, so the
+    bytes model can never drift from the grid it describes.
+
+    Per VISITED row block the grid streams the (b_tile, m) f32 logp block
+    plus one full (d, k) i32 sweep of H (vocab axis innermost => H is
+    re-streamed per block); blocks with no live slot are pinned to
+    resident blocks and fetch nothing.  The (B, topk) f32+i32 outputs are
+    flushed for every block, live or dead.  A dense (no ``active``) grid
+    is the all-ones mask.
+    """
+    act = np.asarray(active, bool).ravel()
+    B = act.shape[0]
+    pad = (-B) % b_tile
+    if pad:
+        act = np.concatenate([act, np.zeros(pad, bool)])
+    n_visited = int(act.reshape(-1, b_tile).any(axis=1).sum())
+    return int(n_visited * (b_tile * m * 4 + d * k * 4) + B * topk * 8)
 
 
 def _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,

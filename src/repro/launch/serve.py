@@ -122,7 +122,8 @@ def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
 def run_continuous(arch: str, slots: int = 4, requests: int = 16,
                    rate: float = 1.0, prompt_len: int = 32, gen: int = 16,
                    topk: int = 8, seed: int = 0, full: bool = False,
-                   io_impl: str | None = None, eos_id: int | None = None):
+                   io_impl: str | None = None, eos_id: int | None = None,
+                   prefill_workers: int = 1):
     """Continuous batching over a seeded Poisson workload."""
     cfg = _config(arch, full, io_impl)
     if not Engine.supports(cfg):       # before paying for param init
@@ -137,7 +138,8 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
     max_len = max(r.prompt_len + r.max_gen for r in workload)
 
     engine = Engine(cfg, params, n_slots=slots, max_len=max_len,
-                    topk=topk, eos_id=eos_id, dist=dist)
+                    topk=topk, eos_id=eos_id, dist=dist,
+                    prefill_workers=prefill_workers)
     results, stats = engine.run(workload)
 
     row = stats.as_row()
@@ -158,12 +160,16 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
                 rate: float = 1.0, prompt_len: int = 32, gen: int = 16,
                 topk: int = 8, seed: int = 0, full: bool = False,
                 io_impl: str | None = None, eos_id: int | None = None,
-                gossip_delay: int = 1):
+                gossip_delay: int = 1, transport: str = "sim",
+                prefill_workers: int = 1,
+                compact_threshold: float | None = None):
     """Data-axis-sharded serving over per-host arrival streams.
 
     One simulated host per `data` shard — run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate an
-    8-host topology on CPU (DESIGN.md §8).  `requests` is PER HOST.
+    8-host topology on CPU (DESIGN.md §8/§9).  `requests` is PER HOST.
+    Defaults (sim transport, one prefill worker, no compaction) are
+    exactly PR 3's behavior.
     """
     cfg = _config(arch, full, io_impl)
     if not Engine.supports(cfg):       # before paying for param init
@@ -185,13 +191,18 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
     engine = ShardedEngine(cfg, params, mesh=mesh,
                            slots_per_host=slots_per_host, max_len=max_len,
                            topk=topk, eos_id=eos_id,
-                           gossip_delay=gossip_delay)
+                           gossip_delay=gossip_delay, transport=transport,
+                           prefill_workers=prefill_workers,
+                           compact_threshold=compact_threshold)
     results, stats = engine.run(per_host)
 
     row = stats.as_row()
     print(f"served {len(results)} requests on {n_hosts} hosts x "
-          f"{slots_per_host} slots (gossip_delay={gossip_delay}): "
+          f"{slots_per_host} slots (gossip_delay={gossip_delay}, "
+          f"transport={transport}, prefill_workers={prefill_workers}, "
+          f"compact={compact_threshold}): "
           f"{row['decode_steps']} decode steps, "
+          f"{row['compactions']} compactions, "
           f"utilization {row['utilization']:.2f}, "
           f"mean latency {mean_latency(results):.1f} steps")
     print(f"wall {stats.wall_s*1e3:.0f} ms "
@@ -215,6 +226,20 @@ def main():
     ap.add_argument("--gossip-delay", type=int, default=1,
                     help="steps before arrivals/releases become globally "
                          "visible (--sharded)")
+    ap.add_argument("--transport", choices=("sim", "collective"),
+                    default="sim",
+                    help="control-plane delta transport (--sharded): "
+                         "'sim' = PR-3 in-process gossip (default), "
+                         "'collective' = fixed-size padded all_gather "
+                         "over the mesh data axis (jax.distributed-ready)")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="prefill-pool size: FIFO over N single-device "
+                         "mesh slices (default 1 = PR-3 behavior)")
+    ap.add_argument("--compact-threshold", type=float, default=None,
+                    help="per-host fragmentation (dead-slot fraction "
+                         "below the highest live slot) above which the "
+                         "slot pool compacts; default off = PR-3 "
+                         "behavior (--sharded)")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size (--static path)")
     ap.add_argument("--slots", type=int, default=4,
@@ -244,13 +269,17 @@ def main():
                     prompt_len=args.prompt_len, gen=args.gen,
                     topk=args.topk, seed=args.seed, full=args.full,
                     io_impl=args.io_impl, eos_id=args.eos_id,
-                    gossip_delay=args.gossip_delay)
+                    gossip_delay=args.gossip_delay,
+                    transport=args.transport,
+                    prefill_workers=args.prefill_workers,
+                    compact_threshold=args.compact_threshold)
     else:
         run_continuous(args.arch, slots=args.slots, requests=args.requests,
                        rate=args.rate, prompt_len=args.prompt_len,
                        gen=args.gen, topk=args.topk, seed=args.seed,
                        full=args.full, io_impl=args.io_impl,
-                       eos_id=args.eos_id)
+                       eos_id=args.eos_id,
+                       prefill_workers=args.prefill_workers)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,13 @@ def shard_map_nocheck(fn, mesh, in_specs, out_specs):
                       out_specs=out_specs, **{_CHECK_KW: False})
 
 
+def replicated_specs(tree):
+    """Fully-replicated PartitionSpec pytree matching ``tree`` — the
+    shard_map operand spec for host-broadcast inputs (prefill caches
+    entering the sharded pool, compaction permutations)."""
+    return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), tree)
+
+
 @dataclasses.dataclass
 class DistContext:
     """Carries the mesh + axis conventions into model code."""

@@ -164,7 +164,7 @@ def make_sharded_insert(pool_specs, dist, slots_per_shard: int):
     insert); semantically identical to ``insert_cache_slot`` on the
     unsharded tree (asserted by tests/test_serving_multihost.py).
     """
-    from repro.launch.sharding import shard_map_nocheck
+    from repro.launch.sharding import replicated_specs, shard_map_nocheck
     from jax.sharding import PartitionSpec as P
 
     data_axes = dist.batch_axes
@@ -182,9 +182,6 @@ def make_sharded_insert(pool_specs, dist, slots_per_shard: int):
             return jnp.where(owns, upd, buf)
 
         return jax.tree.map(put, pool_local, small)
-
-    def replicated_specs(tree):
-        return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), tree)
 
     def insert(pool, caches_small, slot):
         fn = shard_map_nocheck(
@@ -208,6 +205,58 @@ def make_sharded_insert(pool_specs, dist, slots_per_shard: int):
         return jitted(pool, caches_small, slot)
 
     return insert_with_transfer
+
+
+def make_compact_pool(pool_specs, dist, slots_per_shard: int):
+    """Slot-compaction remap of the sharded cache pool (DESIGN.md §9).
+
+    ``perm`` is the control plane's (n_slots,) int32 gather permutation
+    (perm[new_slot] = old_slot), guaranteed host-local by
+    ``serving.control.plan_compaction`` — no entry crosses a shard
+    boundary, so the remap is a pure within-shard move and NEVER gathers
+    the pool across the data axis.  Inside the shard_map each data shard
+    slices its own window of the replicated permutation, rebases it to
+    local slot ids, and gathers its slot rows through it; the donated
+    output is the in-place update of the pool (same layout as the input
+    — ``out_specs = pool_specs`` — so the single-compiled-decode-step
+    invariant survives compaction).
+
+    Returns a jitted (pool, perm) -> pool callable; one executable serves
+    every permutation (perm is a traced operand, never a compile-time
+    constant).
+    """
+    from repro.launch.sharding import shard_map_nocheck
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    data_axes = dist.batch_axes
+
+    def _compact(pool_local, perm):
+        ax = jax.lax.axis_index(data_axes[0]) if data_axes else 0
+        local = jax.lax.dynamic_slice(
+            perm, (ax * slots_per_shard,), (slots_per_shard,)) \
+            - ax * slots_per_shard
+
+        def take(buf):
+            return jnp.take(buf, local, axis=1, mode="clip")
+
+        return jax.tree.map(take, pool_local)
+
+    def compact(pool, perm):
+        fn = shard_map_nocheck(
+            _compact, dist.mesh,
+            in_specs=(pool_specs, P(None)), out_specs=pool_specs)
+        return fn(pool, jnp.asarray(perm, jnp.int32))
+
+    jitted = jax.jit(compact, donate_argnums=(0,))
+
+    def compact_with_commit(pool, perm):
+        # the host-built permutation must be committed replicated before
+        # entering the jit (same dance as the sharded insert's broadcast)
+        perm = jax.device_put(jnp.asarray(perm, jnp.int32),
+                              NamedSharding(dist.mesh, P(None)))
+        return jitted(pool, perm)
+
+    return compact_with_commit
 
 
 def make_slot_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):

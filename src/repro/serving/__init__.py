@@ -1,23 +1,41 @@
-"""Continuous-batching serving engine (DESIGN.md §7–§8).
+"""Continuous-batching serving engine (DESIGN.md §7–§9).
 
-scheduler.py    — JAX-free RequestQueue/Scheduler (slot admission policy)
-                  + ShardedScheduler (gossiped multi-host admission)
+control.py      — control plane: pure replicated state machine
+                  (apply_deltas/compute_admissions), compaction planning,
+                  the shared EventLog + replay helper, and the Transport
+                  implementations (SimTransport, CollectiveTransport)
+collective.py   — the device all_gather behind CollectiveTransport
+scheduler.py    — JAX-free RequestQueue/Scheduler (slot admission policy),
+                  ShardedScheduler (transported multi-host admission),
+                  and run_schedule — the ONE serve loop shared by the
+                  sharded engine and the model-free simulation
 loadgen.py      — deterministic Poisson arrival + length-mix workloads,
                   per-host streams pure in (seed, host_id)
-engine.py       — the slot-pool engine, disaggregated PrefillWorker, and
-                  the static-batching A/B baseline
-sharded_pool.py — data-axis-sharded slot pool + ShardedEngine
+engine.py       — the slot-pool engine, the disaggregated PrefillPool
+                  (FIFO over N mesh-slice workers), and the
+                  static-batching A/B baseline
+sharded_pool.py — data plane: data-axis-sharded slot pool, ShardedEngine,
+                  slot compaction
 """
-from repro.serving.engine import Engine, PrefillWorker, ServeStats, \
-    mean_latency
-from repro.serving.loadgen import LoadSpec, host_stream, make_workload, \
-    merge_workloads, mixed_length_workload, sharded_workload
-from repro.serving.scheduler import Request, RequestQueue, Scheduler, \
-    ShardedScheduler, simulate_sharded_schedule
+from repro.serving.control import (CollectiveTransport, ControlState,
+                                   Delta, EventLog, SimTransport,
+                                   Transport, apply_deltas,
+                                   compute_admissions, plan_compaction,
+                                   replay_slot_log)
+from repro.serving.engine import Engine, PrefillPool, PrefillWorker, \
+    ServeStats, mean_latency
+from repro.serving.loadgen import LoadSpec, burst_workload, host_stream, \
+    make_workload, merge_workloads, mixed_length_workload, sharded_workload
+from repro.serving.scheduler import Request, RequestQueue, ScheduleClient, \
+    Scheduler, ShardedScheduler, run_schedule, simulate_sharded_schedule
 from repro.serving.sharded_pool import ShardedEngine
 
-__all__ = ["Engine", "PrefillWorker", "ServeStats", "mean_latency",
-           "LoadSpec", "host_stream", "make_workload", "merge_workloads",
-           "mixed_length_workload", "sharded_workload", "Request",
-           "RequestQueue", "Scheduler", "ShardedEngine",
-           "ShardedScheduler", "simulate_sharded_schedule"]
+__all__ = ["Engine", "PrefillPool", "PrefillWorker", "ServeStats",
+           "mean_latency", "LoadSpec", "burst_workload", "host_stream",
+           "make_workload", "merge_workloads", "mixed_length_workload",
+           "sharded_workload", "Request", "RequestQueue", "ScheduleClient",
+           "Scheduler", "ShardedEngine", "ShardedScheduler",
+           "run_schedule", "simulate_sharded_schedule",
+           "CollectiveTransport", "ControlState", "Delta", "EventLog",
+           "SimTransport", "Transport", "apply_deltas",
+           "compute_admissions", "plan_compaction", "replay_slot_log"]

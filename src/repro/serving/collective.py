@@ -1,0 +1,50 @@
+"""Device collective for ``control.CollectiveTransport`` (DESIGN.md §9).
+
+The transport's protocol logic (padding, rounds, visibility) is JAX-free
+in serving/control.py; this module supplies only the physical exchange:
+each host's fixed-size delta buffer lives on its ``data`` shard and one
+``jax.lax.all_gather`` moves the stack, so every host receives the
+identical merged view.  On the forced 8-device CPU topology this is a
+real device collective — the single-process multi-controller stand-in the
+multi-host sim proves — and the same shard_map runs unchanged under
+jax.distributed with one process per host.
+
+The buffer shape is static (capacity x DELTA_FIELDS), so the gather
+compiles exactly once per transport.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import shard_map_nocheck
+
+
+def make_device_gather(mesh, data_axis: str = "data"):
+    """mesh -> gather fn for ``CollectiveTransport(gather=...)``.
+
+    The returned callable maps the stacked outbox buffer
+    ``(n_hosts, C, F) int32`` — row h committed to data shard h — to
+    every host's received view ``(n_hosts, n_hosts, C, F)``; view[h] is
+    what host h's all_gather returned, kept per-shard so the transport's
+    replica-agreement assert checks the actual collective output."""
+    n_hosts = int(mesh.shape[data_axis])
+    row_sharding = NamedSharding(mesh, P(data_axis))
+
+    def _exchange(local):                     # (1, C, F) per data shard
+        gathered = jax.lax.all_gather(local, data_axis, axis=0,
+                                      tiled=True)      # (n_hosts, C, F)
+        return gathered[None]                 # (1, n_hosts, C, F)
+
+    exchange = jax.jit(shard_map_nocheck(
+        _exchange, mesh, in_specs=P(data_axis), out_specs=P(data_axis)))
+
+    def gather(buf: np.ndarray) -> np.ndarray:
+        assert buf.shape[0] == n_hosts, (buf.shape, n_hosts)
+        committed = jax.device_put(jnp.asarray(buf, jnp.int32),
+                                   row_sharding)
+        return np.asarray(exchange(committed))
+
+    return gather

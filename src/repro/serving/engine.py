@@ -31,7 +31,6 @@ recorded but never asserted on.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -43,33 +42,16 @@ from repro.configs.base import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
-from repro.serving.scheduler import Request, RequestQueue, Scheduler
+from repro.serving.scheduler import (Request, RequestQueue, Scheduler,
+                                     ServeStats)
 
 
-@dataclasses.dataclass
-class ServeStats:
-    decode_steps: int = 0
-    idle_steps: int = 0              # clock ticks with an empty pool
-    slot_steps_total: int = 0        # n_slots * decode_steps
-    slot_steps_active: int = 0       # slot-steps spent on a live request
-    prefills: int = 0
-    tokens_out: int = 0
-    wall_s: float = 0.0
-
-    @property
-    def utilization(self) -> float:
-        if not self.slot_steps_total:
-            return 1.0
-        return self.slot_steps_active / self.slot_steps_total
-
-    def as_row(self) -> Dict[str, float]:
-        return {"decode_steps": self.decode_steps,
-                "idle_steps": self.idle_steps,
-                "slot_steps_total": self.slot_steps_total,
-                "slot_steps_active": self.slot_steps_active,
-                "utilization": round(self.utilization, 4),
-                "prefills": self.prefills,
-                "tokens_out": self.tokens_out}
+def assert_request_fits(req: Request, max_len: int) -> None:
+    """The one pool-capacity precondition, shared by every admission path
+    (continuous, static, sharded)."""
+    assert req.prompt_len + req.max_gen <= max_len, (
+        f"request {req.rid}: prompt {req.prompt_len} + max_gen "
+        f"{req.max_gen} exceeds pool max_len {max_len}")
 
 
 class PrefillWorker:
@@ -107,6 +89,80 @@ class PrefillWorker:
         return pre["caches"], int(np.asarray(ids)[0, 0])
 
 
+class PrefillPool:
+    """Prefill *pool*: a FIFO scheduler over N single-slice
+    ``PrefillWorker``s (DESIGN.md §9, ROADMAP follow-up b).
+
+    A burst of same-step arrivals used to serialize on the single prefill
+    worker — the whole burst head-of-line blocked admission for the
+    duration of N prefills.  The pool dispatches queued jobs FIFO to the
+    earliest-available worker (a deterministic virtual-time model: each
+    worker's clock advances by the job's prompt length), so with W
+    workers a burst drains ~W-times faster in prefill-time while the
+    step-clock schedule — and therefore every committed bench row and
+    every recovered token — is unchanged for ANY W (prefill is B=1
+    exact-length on identical replicated weights on every worker; the
+    dispatch order is the admission order).
+
+    In this single-process simulation jobs still *execute* sequentially;
+    ``stats`` records the dispatch the pool would overlap — per-worker
+    job counts, max queue depth, and the summed virtual queue wait
+    (``wait_units``, in prompt-length units) that tests assert shrinks as
+    workers are added.  A real deployment runs each worker's jitted
+    callables on its own mesh slice asynchronously.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, topk: int,
+                 n_workers: int = 1, devices=None, dist=None):
+        assert n_workers >= 1
+        if devices is None:
+            devices = [None]
+        # one PrefillWorker (and thus one set of jitted callables) per
+        # DISTINCT device: pool slots landing on the same device share
+        # it, so a same-device pool never re-traces the prefill step
+        by_device = {}
+        self.workers = []
+        for i in range(n_workers):
+            dev = devices[i % len(devices)]
+            if dev not in by_device:
+                by_device[dev] = PrefillWorker(cfg, params, topk=topk,
+                                               dist=dist, device=dev)
+            self.workers.append(by_device[dev])
+        self.n_workers = n_workers
+        self._fifo: List[Request] = []
+        self._busy = [0.0] * n_workers     # virtual per-worker clock
+        self.stats = {"jobs": 0, "max_queue_depth": 0, "wait_units": 0.0,
+                      "per_worker": [0] * n_workers}
+
+    def submit(self, req: Request) -> None:
+        self._fifo.append(req)
+        self.stats["max_queue_depth"] = max(self.stats["max_queue_depth"],
+                                            len(self._fifo))
+
+    def drain(self) -> List[Tuple[object, int]]:
+        """Dispatch every queued job FIFO to the earliest-available
+        worker; returns (caches, first_token) per job in submit order."""
+        out = []
+        base = max(self._busy) if self._fifo else 0.0
+        # a fresh burst starts all workers at the same origin: only the
+        # waits created by THIS burst count
+        self._busy = [base] * self.n_workers
+        for req in self._fifo:
+            w = min(range(self.n_workers), key=lambda i: (self._busy[i], i))
+            self.stats["wait_units"] += self._busy[w] - base
+            self._busy[w] += float(req.prompt_len)
+            self.stats["per_worker"][w] += 1
+            self.stats["jobs"] += 1
+            out.append(self.workers[w].prefill(req))
+        self._fifo = []
+        return out
+
+    def prefill_all(self, reqs: List[Request]) -> List[Tuple[object, int]]:
+        for r in reqs:
+            self.submit(r)
+        return self.drain()
+
+
 class Engine:
     """Continuous-batching engine over a fixed slot pool.
 
@@ -128,7 +184,8 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  max_len: int, topk: int = 8,
-                 eos_id: Optional[int] = None, dist=None):
+                 eos_id: Optional[int] = None, dist=None,
+                 prefill_workers: int = 1):
         if not Engine.supports(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: continuous batching serves decoder-only "
@@ -141,8 +198,8 @@ class Engine:
         self.max_len = max_len
         self.topk = topk
         self.eos_id = eos_id
-        self._prefill_worker = PrefillWorker(cfg, params, topk=topk,
-                                             dist=dist)
+        self.prefill_pool = PrefillPool(cfg, params, topk=topk, dist=dist,
+                                        n_workers=prefill_workers)
         # the pool is donated through every decode/insert: the host loop
         # never reuses the previous tree, so XLA (where supported) updates
         # the multi-GB cache in place instead of allocating a second pool
@@ -163,10 +220,8 @@ class Engine:
     def _admit_one(self, req: Request, caches):
         """Prefill one request (B=1, exact prompt length — bit-identical
         to serving it alone) and write its caches into its slot."""
-        assert req.prompt_len + req.max_gen <= self.max_len, (
-            f"request {req.rid}: prompt {req.prompt_len} + max_gen "
-            f"{req.max_gen} exceeds pool max_len {self.max_len}")
-        small, first = self._prefill_worker.prefill(req)
+        assert_request_fits(req, self.max_len)
+        (small, first), = self.prefill_pool.prefill_all([req])
         caches = self._insert(caches, small, jnp.int32(req.slot))
         return caches, first
 
@@ -192,8 +247,16 @@ class Engine:
         t0 = time.perf_counter()
 
         while len(queue) or sched.n_active:
-            for req in sched.admit(queue, now):
-                caches, first = self._admit_one(req, caches)
+            admitted = sched.admit(queue, now)
+            for req in admitted:
+                assert_request_fits(req, self.max_len)
+            # the whole admission burst goes through the prefill pool at
+            # once: FIFO dispatch over the workers, results in admission
+            # order (token- and schedule-identical for any worker count)
+            prefilled = (self.prefill_pool.prefill_all(admitted)
+                         if admitted else [])
+            for req, (small, first) in zip(admitted, prefilled):
+                caches = self._insert(caches, small, jnp.int32(req.slot))
                 req.tokens.append(first)
                 stats.prefills += 1
                 stats.tokens_out += 1

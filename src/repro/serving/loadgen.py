@@ -94,6 +94,20 @@ def merge_workloads(per_host: list[list[Request]]) -> list[Request]:
                   key=lambda r: (r.arrival_step, r.home, r.rid))
 
 
+def burst_workload(spec: LoadSpec, step: int = 0) -> list[Request]:
+    """A whole workload arriving at the SAME step — the prefill-pool
+    stress shape (DESIGN.md §9): one prefill worker serializes the burst
+    and head-of-line blocks admission; a pool of N drains it ~N-times
+    faster in prefill-time while the step-clock schedule (and every
+    recovered token) is unchanged.  Prompt/generation mixes draw exactly
+    like ``make_workload`` (same seeded stream), only the arrival steps
+    are collapsed onto ``step``."""
+    reqs = make_workload(spec)
+    for r in reqs:
+        r.arrival_step = step
+    return reqs
+
+
 def mixed_length_workload(vocab: int, n_requests: int = 12,
                           seed: int = 0) -> list[Request]:
     """The canonical bench/test workload: bursty arrivals, bimodal

@@ -16,15 +16,22 @@ Two schedulers live here:
 
   * ``Scheduler`` — the single-host FIFO slot pool from PR 2.
   * ``ShardedScheduler`` — the multi-host admission protocol (DESIGN.md
-    §8): the global slot pool is partitioned into per-host shards, and
-    admission runs as a *deterministic replicated state machine* over a
-    gossiped event log.  Every scheduling event (request arrival at its
-    home host, slot release) becomes globally visible ``gossip_delay``
-    steps after it happens — including to the host that produced it, so
-    every host replays the identical merged event prefix and computes the
-    identical admission assignment.  A host then *executes* only the
-    admissions that land in its own slot range; no two hosts can ever
-    claim the same slot or the same request.
+    §8/§9), now an orchestrator over the *control plane* in
+    serving/control.py: the replicated state machine advances only via
+    ``control.apply_deltas`` over deltas carried by a pluggable
+    ``Transport`` (in-process simulated gossip, or the fixed-size padded
+    all_gather collective), and admission is the pure
+    ``control.compute_admissions`` every host evaluates identically.
+    A host then *executes* only the admissions that land in its own slot
+    range; no two hosts can ever claim the same slot or the same request.
+    With ``compact_threshold`` set, the control plane additionally plans
+    host-local slot compactions (``control.plan_compaction``) and records
+    them as COMPACT log events so replay stays integer-exact.
+
+``run_schedule`` is the ONE admit -> fast-forward -> decode -> retire
+loop shared by the real ``ShardedEngine.run`` and the model-free
+``simulate_sharded_schedule`` — the engine's event log equals the
+simulation's by construction, compaction decisions included.
 """
 from __future__ import annotations
 
@@ -33,6 +40,11 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.serving import control as control_lib
+from repro.serving.control import (ARRIVE, RELEASE, ControlState, Delta,
+                                   EventLog, HostShard, SimTransport,
+                                   Transport)
 
 
 @dataclasses.dataclass
@@ -58,6 +70,38 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish_step >= 0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Deterministic schedule counters (+ wall-clock, never asserted on).
+    Lives here, JAX-free, so the model-free simulation and the engines
+    fill the identical structure."""
+
+    decode_steps: int = 0
+    idle_steps: int = 0              # clock ticks with an empty pool
+    slot_steps_total: int = 0        # n_slots * decode_steps
+    slot_steps_active: int = 0       # slot-steps spent on a live request
+    prefills: int = 0
+    tokens_out: int = 0
+    compactions: int = 0             # COMPACT events executed
+    wall_s: float = 0.0
+
+    @property
+    def utilization(self) -> float:
+        if not self.slot_steps_total:
+            return 1.0
+        return self.slot_steps_active / self.slot_steps_total
+
+    def as_row(self) -> Dict[str, float]:
+        return {"decode_steps": self.decode_steps,
+                "idle_steps": self.idle_steps,
+                "slot_steps_total": self.slot_steps_total,
+                "slot_steps_active": self.slot_steps_active,
+                "utilization": round(self.utilization, 4),
+                "prefills": self.prefills,
+                "tokens_out": self.tokens_out,
+                "compactions": self.compactions}
 
 
 class RequestQueue:
@@ -98,20 +142,28 @@ class Scheduler:
 
     Raises on any invariant violation (double-assign, double-release) —
     the engine relies on these being impossible, and the hypothesis suite
-    drives random admit/release sequences against them.
+    drives random admit/release sequences against them.  Event logging is
+    the shared ``control.EventLog`` (same format as the sharded log, so
+    one replay helper checks both).
     """
 
     def __init__(self, n_slots: int):
         assert n_slots >= 1
         self.n_slots = n_slots
         self._occupant: List[Optional[Request]] = [None] * n_slots
-        # event log: (step, slot, rid, seq) — the deterministic sim test
-        # reconstructs occupancy from this to prove no double-assignment;
-        # `seq` is a global monotonic counter because several events can
-        # share one step (release + re-admit at the same clock tick)
-        self.admissions: List[Tuple[int, int, int, int]] = []
-        self.releases: List[Tuple[int, int, int, int]] = []
-        self._seq = 0
+        self.log = EventLog()
+
+    @property
+    def admissions(self):
+        return self.log.admissions
+
+    @property
+    def releases(self):
+        return self.log.releases
+
+    @property
+    def compactions(self):
+        return self.log.compactions
 
     # ------------------------------------------------------------------
     @property
@@ -140,8 +192,7 @@ class Scheduler:
             req.slot = slot
             req.admitted_step = now
             self._occupant[slot] = req
-            self.admissions.append((now, slot, req.rid, self._seq))
-            self._seq += 1
+            self.log.admission(now, slot, req.rid)
             admitted.append(req)
         return admitted
 
@@ -151,81 +202,85 @@ class Scheduler:
             raise RuntimeError(f"slot {slot} released while free")
         req.finish_step = now
         self._occupant[slot] = None
-        self.releases.append((now, slot, req.rid, self._seq))
-        self._seq += 1
+        self.log.release(now, slot, req.rid)
         return req
 
 
 # ---------------------------------------------------------------------------
-# Sharded (multi-host) admission: gossiped replicated-state-machine queue
+# Sharded (multi-host) admission: transport-carried replicated state machine
 # ---------------------------------------------------------------------------
 
-class HostShard:
-    """One host's slice of the global slot pool: the contiguous global
-    slot range [host * slots_per_host, (host+1) * slots_per_host) plus the
-    host-local event log.  Events carry GLOBAL slot ids and the global
-    event seq, so the merged log is reconstructible from the per-host logs
-    (linearization — tested in tests/test_property.py)."""
-
-    def __init__(self, host: int, slots_per_host: int):
-        self.host = host
-        self.slots_per_host = slots_per_host
-        self.lo = host * slots_per_host
-        self.hi = (host + 1) * slots_per_host
-        self.admissions: List[Tuple[int, int, int, int]] = []
-        self.releases: List[Tuple[int, int, int, int]] = []
-
-    def owns(self, gslot: int) -> bool:
-        return self.lo <= gslot < self.hi
-
-
 class ShardedScheduler:
-    """Deterministic gossiped admission over per-host slot shards.
+    """Deterministic transported admission over per-host slot shards.
 
-    Protocol (DESIGN.md §8): all scheduling inputs — request arrivals
-    (pushed at their home host) and slot releases — enter a logically
-    replicated event log and become *globally visible* ``gossip_delay``
-    decode steps after they happen, uniformly, including to the host that
-    produced them.  Admission at step ``now`` is then a pure function of
-    the visible prefix: the visible-ready requests, ordered by
-    (arrival_step, home, rid), are assigned to the visible-free slots in
-    global slot order.  Because every host evaluates the same function on
-    the same prefix, the assignment is identical everywhere; each host
-    executes only the admissions inside its own slot range, so a slot (or
-    a request) can never be claimed twice.  ``gossip_delay=0`` degenerates
-    to a single synchronous pool — the single-host ``Scheduler`` order.
+    Protocol (DESIGN.md §8/§9): all scheduling inputs — request arrivals
+    (at their home host) and slot releases — become deltas on a
+    ``Transport`` and reach *every* host (including the producer)
+    ``gossip_delay`` steps after their production step.  The replicated
+    ``ControlState`` advances only by ``control.apply_deltas`` over the
+    delivered deltas, and admission at step ``now`` is the pure
+    ``control.compute_admissions`` over that state.  Because every host
+    applies the same deltas and evaluates the same function, the
+    assignment is identical everywhere; each host executes only the
+    admissions inside its own slot range, so a slot (or a request) can
+    never be claimed twice.  ``gossip_delay=0`` degenerates to a single
+    synchronous pool — the single-host ``Scheduler`` order.
 
-    This class *is* the simulation of that protocol: one authoritative
-    merged state, with per-host logs recorded on the owning ``HostShard``.
-    Determinism (two replicas replaying identical logs) is asserted by
-    tests/test_serving_multihost.py; the hypothesis suite drives random
-    traffic against the invariants.
+    This class is the per-host orchestrator (every replica would run this
+    same code); the default ``SimTransport`` reproduces PR 3's simulated
+    gossip log integer-for-integer, and ``CollectiveTransport`` carries
+    the identical deltas over a fixed-size padded all_gather.
     """
 
     def __init__(self, n_hosts: int, slots_per_host: int,
-                 gossip_delay: int = 1):
+                 gossip_delay: int = 1, *,
+                 transport: Optional[Transport] = None,
+                 compact_threshold: Optional[float] = None):
         assert n_hosts >= 1 and slots_per_host >= 1 and gossip_delay >= 0
         self.n_hosts = n_hosts
         self.slots_per_host = slots_per_host
         self.n_slots = n_hosts * slots_per_host
-        self.gossip_delay = gossip_delay
-        self.hosts = [HostShard(h, slots_per_host) for h in range(n_hosts)]
-        self._pending: List[Request] = []
+        self.transport = (SimTransport(gossip_delay) if transport is None
+                          else transport)
+        self.gossip_delay = self.transport.delay
+        assert self.gossip_delay == gossip_delay, (
+            "transport delay must match gossip_delay")
+        self.compact_threshold = compact_threshold
+        self.state = ControlState.fresh(n_hosts, slots_per_host)
+        self.log = EventLog(n_hosts, slots_per_host)
         self._occupant: List[Optional[Request]] = [None] * self.n_slots
-        # step at which the slot's free status is globally visible
-        self._free_vis: List[int] = [0] * self.n_slots
-        self.admissions: List[Tuple[int, int, int, int]] = []
-        self.releases: List[Tuple[int, int, int, int]] = []
-        self._seq = 0
+        self._requests: Dict[int, Request] = {}   # pushed, not admitted
+        self._unsent: Dict[int, Request] = {}     # ARRIVE delta not sent
+        self._stepped_at = -1
+
+    # ------------------------------------------------------------------
+    @property
+    def admissions(self):
+        return self.log.admissions
+
+    @property
+    def releases(self):
+        return self.log.releases
+
+    @property
+    def compactions(self):
+        return self.log.compactions
+
+    @property
+    def hosts(self) -> List[HostShard]:
+        return self.log.hosts
 
     # ------------------------------------------------------------------
     def push(self, req: Request, host: Optional[int] = None) -> None:
-        """Local arrival at its home host (visible cluster-wide at
-        arrival_step + gossip_delay)."""
+        """Local arrival at its home host (its ARRIVE delta enters the
+        transport once the clock reaches arrival_step; visible
+        cluster-wide at arrival_step + gossip_delay)."""
         if host is not None:
             req.home = host
         assert 0 <= req.home < self.n_hosts
-        self._pending.append(req)
+        assert req.rid not in self._requests, f"rid {req.rid} pushed twice"
+        self._requests[req.rid] = req
+        self._unsent[req.rid] = req
 
     def push_workloads(self, per_host: List[List[Request]]) -> None:
         assert len(per_host) == self.n_hosts
@@ -240,7 +295,7 @@ class ShardedScheduler:
 
     @property
     def n_pending(self) -> int:
-        return len(self._pending)
+        return len(self._requests)
 
     @property
     def active(self) -> Dict[int, Request]:
@@ -249,39 +304,71 @@ class ShardedScheduler:
     def host_of(self, gslot: int) -> int:
         return gslot // self.slots_per_host
 
-    def _visible_ready(self, now: int) -> List[Request]:
-        return sorted(
-            (r for r in self._pending
-             if r.arrival_step + self.gossip_delay <= now),
-            key=lambda r: (r.arrival_step, r.home, r.rid))
+    # ------------------------------------------------------------------
+    def _flush_arrivals(self, now: int) -> None:
+        due = sorted((r for r in self._unsent.values()
+                      if r.arrival_step <= now),
+                     key=lambda r: (r.arrival_step, r.home, r.rid))
+        for r in due:
+            self.transport.send(Delta(ARRIVE, r.arrival_step, r.home,
+                                      r.rid))
+            del self._unsent[r.rid]
 
-    def _visible_free(self, now: int) -> List[int]:
-        return [s for s in range(self.n_slots)
-                if self._occupant[s] is None and self._free_vis[s] <= now]
+    def begin_step(self, now: int) -> Optional[List[int]]:
+        """Advance the replicated state to ``now``: flush due arrivals
+        into the transport, apply every delta that has become visible,
+        then (with compaction enabled) evaluate the compaction plan.
+        Returns the remap permutation when this step compacts — the data
+        plane must apply it BEFORE this step's admissions/decode.  Safe
+        to call more than once per step (polling is idempotent; a second
+        compaction check sees the already-packed state)."""
+        self._flush_arrivals(now)
+        delivered = self.transport.poll(now)
+        if delivered:
+            self.state = control_lib.apply_deltas(self.state, delivered)
+        self._stepped_at = now
+        if self.compact_threshold is None:
+            return None
+        perm = control_lib.plan_compaction(
+            self.state.occupant, self.slots_per_host,
+            self.compact_threshold)
+        if perm is None:
+            return None
+        self._execute_compaction(now, perm)
+        return perm
+
+    def _execute_compaction(self, now: int, perm: List[int]) -> None:
+        # replicated state and the authoritative occupant map remap with
+        # the same permutation; live requests learn their new slot id
+        self.state.occupant = [self.state.occupant[p] for p in perm]
+        self._occupant = [self._occupant[p] for p in perm]
+        for new_slot, req in enumerate(self._occupant):
+            if req is not None:
+                req.slot = new_slot
+        self.log.compaction(now, perm)
 
     # ------------------------------------------------------------------
     def admit(self, now: int) -> List[Request]:
-        """The replicated admission function: visible-ready requests ->
-        visible-free slots, both in deterministic global order.  Returns
+        """Execute the replicated admission function at ``now``.  Returns
         admitted requests with .slot (GLOBAL id) / .admitted_step filled;
         the owning HostShard records the event."""
+        if self._stepped_at != now:
+            # direct callers (no data plane) may skip begin_step; with
+            # compaction enabled the caller MUST begin_step first, or the
+            # data plane would miss the remap
+            assert self.compact_threshold is None, (
+                "begin_step(now) must run before admit(now) when "
+                "compaction is enabled")
+            self.begin_step(now)
         admitted = []
-        for gslot, req in zip(self._visible_free(now),
-                              self._visible_ready(now)):
-            if self._occupant[gslot] is not None:  # pragma: no cover
-                raise RuntimeError(f"slot {gslot} double-assigned")
+        for gslot, rid in control_lib.compute_admissions(self.state):
+            control_lib.commit_admission(self.state, gslot, rid)
+            req = self._requests.pop(rid)
             req.slot = gslot
             req.admitted_step = now
             self._occupant[gslot] = req
-            ev = (now, gslot, req.rid, self._seq)
-            self.admissions.append(ev)
-            self.hosts[self.host_of(gslot)].admissions.append(ev)
-            self._seq += 1
+            self.log.admission(now, gslot, rid)
             admitted.append(req)
-        if admitted:
-            taken = {id(r) for r in admitted}
-            self._pending = [r for r in self._pending
-                             if id(r) not in taken]
         return admitted
 
     def release(self, gslot: int, now: int) -> Request:
@@ -290,71 +377,153 @@ class ShardedScheduler:
             raise RuntimeError(f"slot {gslot} released while free")
         req.finish_step = now
         self._occupant[gslot] = None
-        # the freed slot re-enters the pool only once gossip has spread it
-        self._free_vis[gslot] = now + self.gossip_delay
-        ev = (now, gslot, req.rid, self._seq)
-        self.releases.append(ev)
-        self.hosts[self.host_of(gslot)].releases.append(ev)
-        self._seq += 1
+        self.log.release(now, gslot, req.rid)
+        # the freed slot re-enters the replicated pool only once its
+        # RELEASE delta has travelled the transport (by rid — a COMPACT
+        # may remap slot ids while the delta is in flight)
+        self.transport.send(Delta(RELEASE, now, self.host_of(gslot),
+                                  req.rid, gslot))
         return req
 
     # ------------------------------------------------------------------
     def next_event_time(self, now: int) -> Optional[int]:
-        """Earliest step > now at which an admission could become possible
-        (a pending request or a freed slot gossips into visibility) — the
-        engine fast-forwards the clock here when the pool is empty."""
-        cands = []
-        if self._pending:
-            cands.append(min(r.arrival_step for r in self._pending)
-                         + self.gossip_delay)
-            cands.extend(v for s, v in enumerate(self._free_vis)
-                         if self._occupant[s] is None and v > now)
-        cands = [c for c in cands if c > now]
+        """Earliest step >= now at which an admission could become
+        possible (a pending request or an in-flight release gossips into
+        visibility) — the engine fast-forwards the clock here when the
+        pool is empty.  Returns ``now`` itself when a slot freed during
+        this step's admissions is already visible (gossip_delay=0) while
+        a visible-ready request waits: the driver re-admits without a
+        clock tick instead of dropping the request."""
+        if not self._requests:
+            return None
+        ready_at = min(r.arrival_step
+                       for r in self._requests.values()) + self.gossip_delay
+        rel_vis = self.transport.pending_release_vis()
+        if ready_at <= now and any(v <= now for v in rel_vis):
+            return now
+        cands = [c for c in [ready_at] + rel_vis if c > now]
         return min(cands) if cands else None
 
 
-def simulate_sharded_schedule(per_host: List[List[Request]],
-                              slots_per_host: int, gossip_delay: int = 1
-                              ) -> Tuple[ShardedScheduler, Dict[str, int]]:
-    """Model-free replay of the sharded engine's schedule: every request
-    occupies its slot for exactly ``max_gen`` emitted tokens (1 at
-    prefill/admission + max_gen-1 decode steps; no EOS), one clock tick
-    per pool decode step — the same loop order as ShardedEngine.run, so
-    the engine's event log must match this one exactly (asserted by
-    tests/test_serving_multihost.py).  Deterministic integers only:
-    bench_serving.py commits its outputs as a CI baseline.
-    """
-    sched = ShardedScheduler(len(per_host), slots_per_host, gossip_delay)
-    sched.push_workloads(per_host)
-    remaining: Dict[int, int] = {}
-    stats = {"decode_steps": 0, "idle_steps": 0, "slot_steps_total": 0,
-             "slot_steps_active": 0, "tokens_out": 0}
+# ---------------------------------------------------------------------------
+# The shared serve loop (engine AND model-free simulation)
+# ---------------------------------------------------------------------------
+
+class ScheduleClient:
+    """Data-plane hooks for ``run_schedule``.  The engine implements the
+    real pool (prefill pool, jitted decode, cache compaction); the
+    model-free simulation implements integer placeholders.  Sharing the
+    loop is what makes the engine's event log equal the simulation's by
+    construction — compaction decisions included."""
+
+    def prefill(self, reqs: List[Request]) -> List[int]:
+        """Admitted requests (in admission order) -> first token ids."""
+        raise NotImplementedError
+
+    def stopped(self, req: Request, tok: int) -> bool:
+        """Called after ``tok`` was appended to req.tokens."""
+        return len(req.tokens) >= req.max_gen
+
+    def start_slot(self, req: Request, first: int) -> None:
+        """A non-stopped admission begins decoding in req.slot."""
+
+    def decode(self, active: Dict[int, Request]) -> Dict[int, int]:
+        """One pool decode step -> token id per live slot."""
+        raise NotImplementedError
+
+    def advance_slot(self, gslot: int, req: Request, tok: int) -> None:
+        """Per live slot after a decode step (token already appended)."""
+
+    def stop_slot(self, gslot: int) -> None:
+        """A live slot retired (release already recorded)."""
+
+    def compact(self, perm: List[int]) -> None:
+        """Apply the COMPACT remap to the data plane (perm[new]=old)."""
+
+
+def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
+                 stats: Optional[ServeStats] = None) -> ServeStats:
+    """THE admit -> fast-forward -> decode -> retire loop (DESIGN.md §9),
+    shared by ``ShardedEngine.run`` and ``simulate_sharded_schedule``.
+    One clock tick per pool decode step; requests admitted this step emit
+    their first (prefill) token before the step's decode."""
+    stats = stats or ServeStats()
+    stalls = 0
     now = 0
     while sched.n_pending or sched.n_active:
-        for req in sched.admit(now):
-            req.tokens.append(-1)          # placeholder first token
-            stats["tokens_out"] += 1
-            if req.max_gen <= 1:
+        perm = sched.begin_step(now)
+        if perm is not None:
+            stats.compactions += 1
+            client.compact(perm)
+        admitted = sched.admit(now)
+        firsts = client.prefill(admitted) if admitted else []
+        for req, first in zip(admitted, firsts):
+            req.tokens.append(first)
+            stats.prefills += 1
+            stats.tokens_out += 1
+            if client.stopped(req, first):
                 sched.release(req.slot, now)
             else:
-                remaining[req.rid] = req.max_gen - 1
+                client.start_slot(req, first)
         if not sched.n_active:
             nxt = sched.next_event_time(now)
             if nxt is None:
                 break
-            if nxt <= now:                 # pragma: no cover
-                raise RuntimeError("scheduler clock did not advance")
-            stats["idle_steps"] += nxt - now
+            if nxt < now:  # pragma: no cover
+                raise RuntimeError("scheduler clock went backwards")
+            if nxt == now:
+                # a slot freed during this step's admissions is already
+                # visible (delay 0): re-admit at the same clock tick
+                stalls += 1
+                if not admitted and stalls > 2:  # pragma: no cover
+                    raise RuntimeError("scheduler made no progress")
+                continue
+            stalls = 0
+            stats.idle_steps += nxt - now
             now = nxt
             continue
-        stats["decode_steps"] += 1
-        stats["slot_steps_total"] += sched.n_slots
-        stats["slot_steps_active"] += sched.n_active
+        stalls = 0
+        toks = client.decode(sched.active)
+        stats.decode_steps += 1
+        stats.slot_steps_total += sched.n_slots
+        stats.slot_steps_active += sched.n_active
         now += 1
         for gslot, req in list(sched.active.items()):
-            req.tokens.append(-1)
-            stats["tokens_out"] += 1
-            remaining[req.rid] -= 1
-            if remaining[req.rid] <= 0:
+            tok = toks[gslot]
+            req.tokens.append(tok)
+            stats.tokens_out += 1
+            client.advance_slot(gslot, req, tok)
+            if client.stopped(req, tok):
                 sched.release(gslot, now)
+                client.stop_slot(gslot)
+    return stats
+
+
+class _SimClient(ScheduleClient):
+    """Model-free placeholders: every request occupies its slot for
+    exactly ``max_gen`` emitted tokens (1 at prefill/admission +
+    max_gen - 1 decode steps; no EOS), every token is -1."""
+
+    def prefill(self, reqs):
+        return [-1] * len(reqs)
+
+    def decode(self, active):
+        return {gslot: -1 for gslot in active}
+
+
+def simulate_sharded_schedule(per_host: List[List[Request]],
+                              slots_per_host: int, gossip_delay: int = 1,
+                              *, transport: Optional[Transport] = None,
+                              compact_threshold: Optional[float] = None,
+                              ) -> Tuple[ShardedScheduler, ServeStats]:
+    """Model-free replay of the sharded engine's schedule — the SAME
+    ``run_schedule`` loop over placeholder tokens, so the engine's event
+    log must match this one exactly, COMPACT events included (asserted by
+    tests/test_serving_multihost.py).  Deterministic integers only:
+    bench_serving.py commits its outputs as a CI baseline."""
+    sched = ShardedScheduler(len(per_host), slots_per_host, gossip_delay,
+                             transport=transport,
+                             compact_threshold=compact_threshold)
+    sched.push_workloads(per_host)
+    stats = run_schedule(sched, _SimClient())
     return sched, stats

@@ -1,5 +1,6 @@
-"""Data-axis-sharded serving: GSPMD slot pool + disaggregated prefill
-(DESIGN.md §8).
+"""Data-axis-sharded serving: the *data plane* of the control/data-plane
+split (DESIGN.md §8/§9): GSPMD slot pool + disaggregated prefill pool +
+slot compaction.
 
 The PR-2 engine is single-host: its slot pool lives on the local mesh and
 admission is host-side Python.  This module shards exactly that boundary,
@@ -9,34 +10,46 @@ the way production recommenders do (DLRM, Naumov et al. 2019):
     axis shards over the ``data`` mesh axis (`launch/sharding.
     slot_pool_pspecs`): each data shard owns a contiguous slot range, so
     decode reads are all-local and a cache insert touches one shard.
-  * **Per-host admission + gossiped queue** — scheduling is the
-    deterministic replicated state machine of ``scheduler.
-    ShardedScheduler``: arrivals and releases gossip into global
-    visibility after ``gossip_delay`` steps, every host computes the same
-    admission assignment, and each host executes only admissions landing
-    in its own slot range — no slot or request is ever claimed twice.
-  * **Disaggregated prefill** — prefill runs on a dedicated 1-device mesh
-    slice (``engine.PrefillWorker``); the emitted caches are inserted into
+  * **Transported admission** — scheduling is the replicated state
+    machine of ``serving/control.py`` orchestrated by
+    ``scheduler.ShardedScheduler``: arrival/release deltas travel a
+    pluggable ``Transport`` (``"sim"`` — PR 3's in-process gossip,
+    log-identical; ``"collective"`` — fixed-size padded all_gather over
+    the mesh's data axis, the jax.distributed-ready protocol), every host
+    computes the same admission assignment, and each host executes only
+    its own slot range — no slot or request is ever claimed twice.
+  * **Disaggregated prefill pool** — prefill runs on
+    ``engine.PrefillPool``: a FIFO scheduler over N single-device mesh
+    slices, so a burst of arrivals no longer head-of-line blocks
+    admission behind one worker; the emitted caches are inserted into
     the decode pool by ``steps.make_sharded_insert``, a shard_map whose
     replicated-operand broadcast IS the device-to-device transfer.
-  * **ONE compiled decode step survives sharding** — the decode-pool step
-    is the same ``steps.make_slot_decode_step`` per-slot-position jitted
-    callable, now traced once over the sharded pool; tokens/pos/active
-    are committed with explicit NamedShardings every step so the input
-    layout (and therefore the executable) never changes mid-run.  The
-    multi-host sim test asserts ``_decode._cache_size() == 1`` after a
-    full run.
+  * **Slot compaction** — with ``compact_threshold`` set, the control
+    plane densifies fragmented host shards (``control.plan_compaction``)
+    and this engine applies the remap to the cache pytree via
+    ``steps.make_compact_pool`` (shard-local gather, donated in-place
+    update) and to the host-side token/pos/active arrays.  The densified
+    occupancy feeds ``bloom_decode_topk``'s prefetched row-skipping grid,
+    so a scattered pool recovers the dense pool's HBM bytes
+    (bench_kernels.py ``.decode_topk.scatter*`` rows, gated in CI).
+  * **ONE compiled decode step survives sharding AND compaction** — the
+    decode-pool step is the same ``steps.make_slot_decode_step``
+    per-slot-position jitted callable; out_shardings pin the donated
+    cache layout, and the compaction remap preserves it (out_specs ==
+    pool specs), so the executable never changes mid-run.  The multi-host
+    sim test asserts ``_decode._cache_size() == 1`` after a full
+    transport x compaction run matrix.
 
 Per-request tokens are BIT-identical to the single-host engine and to
-solo static serving: prefill is B=1 at exact prompt length either way,
-and every decode op is row-independent — batch sharding partitions rows
-across devices without touching per-row math (asserted by
+solo static serving — across both transports and with compaction on or
+off: prefill is B=1 at exact prompt length everywhere, every decode op is
+row-independent, and a compaction merely permutes rows (asserted by
 tests/test_serving_multihost.py on a simulated 8-device topology).
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +60,72 @@ from repro.configs.base import ModelConfig
 from repro.launch import sharding as sharding_lib
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tf
-from repro.serving.engine import Engine, PrefillWorker, ServeStats
-from repro.serving.scheduler import Request, ShardedScheduler
+from repro.serving.control import (CollectiveTransport, SimTransport,
+                                   Transport)
+from repro.serving import engine as engine_lib
+from repro.serving.engine import Engine, PrefillPool, ServeStats
+from repro.serving.scheduler import (Request, ScheduleClient,
+                                     ShardedScheduler, run_schedule)
+
+
+class _PoolClient(ScheduleClient):
+    """The real data plane behind ``run_schedule``: prefill-pool dispatch,
+    sharded cache inserts, the jitted pool decode step, and the
+    compaction remap.  The model-free ``_SimClient`` fills the same hooks
+    with placeholders — sharing the loop is what makes the engine's event
+    log equal the simulation's integer-for-integer."""
+
+    def __init__(self, engine: "ShardedEngine"):
+        self.e = engine
+        self.tokens = np.zeros((engine.n_slots, 1), np.int32)
+        self.pos = np.zeros((engine.n_slots,), np.int32)
+        self.active = np.zeros((engine.n_slots,), bool)
+        self.caches = engine._fresh_pool()
+
+    def prefill(self, reqs: List[Request]) -> List[int]:
+        for req in reqs:
+            engine_lib.assert_request_fits(req, self.e.max_len)
+        firsts = []
+        for req, (small, first) in zip(
+                reqs, self.e.prefill_pool.prefill_all(reqs)):
+            self.caches = self.e._insert(self.caches, small,
+                                         jnp.int32(req.slot))
+            firsts.append(first)
+        return firsts
+
+    def stopped(self, req: Request, tok: int) -> bool:
+        return self.e._stopped(req, tok)
+
+    def start_slot(self, req: Request, first: int) -> None:
+        self.tokens[req.slot, 0] = first
+        self.pos[req.slot] = req.prompt_len
+        self.active[req.slot] = True
+
+    def decode(self, active_map: Dict[int, Request]) -> Dict[int, int]:
+        e = self.e
+        out = e._decode(
+            e.params,
+            jax.device_put(jnp.asarray(self.tokens), e._tok_sharding),
+            self.caches,
+            jax.device_put(jnp.asarray(self.pos), e._row_sharding),
+            jax.device_put(jnp.asarray(self.active), e._row_sharding))
+        self.caches = out["caches"]
+        ids = np.asarray(out["topk_ids"][:, 0])
+        return {gslot: int(ids[gslot]) for gslot in active_map}
+
+    def advance_slot(self, gslot: int, req: Request, tok: int) -> None:
+        self.tokens[gslot, 0] = tok
+        self.pos[gslot] += 1
+
+    def stop_slot(self, gslot: int) -> None:
+        self.active[gslot] = False
+
+    def compact(self, perm: List[int]) -> None:
+        p = np.asarray(perm, np.int32)
+        self.caches = self.e._compact(self.caches, p)
+        self.tokens = self.tokens[p]
+        self.pos = self.pos[p]
+        self.active = self.active[p]
 
 
 class ShardedEngine:
@@ -57,14 +134,25 @@ class ShardedEngine:
     ``mesh`` must carry a ``data`` axis; one simulated host per data
     shard, ``slots_per_host`` slots each (global pool = n_hosts *
     slots_per_host slots).  ``run`` consumes per-host workloads
-    (``loadgen.sharded_workload``) through the gossiped admission
+    (``loadgen.sharded_workload``) through the transported admission
     protocol.  Eligibility mirrors ``Engine.supports``.
+
+    ``transport`` / ``compact_threshold`` set the run defaults (both
+    overridable per ``run`` call): ``"sim"`` + ``None`` is exactly PR 3's
+    behavior; ``"collective"`` exchanges the same deltas over a real
+    device all_gather; a float threshold enables slot compaction.
+    ``prefill_workers`` sizes the prefill pool over single-device slices
+    of the mesh (worker i on device i mod n_devices) — the recovered
+    tokens are identical for any worker count.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, mesh,
                  slots_per_host: int, max_len: int, topk: int = 8,
                  eos_id: Optional[int] = None, gossip_delay: int = 1,
-                 prefill_device=None):
+                 prefill_device=None, prefill_workers: int = 1,
+                 transport: Union[str, Transport] = "sim",
+                 compact_threshold: Optional[float] = None,
+                 collective_capacity: int = 8):
         if not Engine.supports(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: sharded serving covers the same decoder-only "
@@ -80,6 +168,9 @@ class ShardedEngine:
         self.topk = topk
         self.eos_id = eos_id
         self.gossip_delay = gossip_delay
+        self.transport = transport
+        self.compact_threshold = compact_threshold
+        self.collective_capacity = collective_capacity
 
         # decode-pool weights: explicitly replicated across the mesh so
         # every per-step input is committed and the step compiles once
@@ -87,17 +178,19 @@ class ShardedEngine:
             params, jax.tree.map(lambda _: NamedSharding(mesh, P()),
                                  params))
 
-        # Disaggregated prefill: the worker owns its OWN weight copy on
-        # its own device (prefill/decode disaggregation — prefill
-        # capacity scales independently of the pool).  In this
-        # single-process simulation the default device doubles as data
-        # shard 0, so that device carries two param copies; a real
-        # deployment passes a device OUTSIDE the decode mesh.  B=1
-        # prefill cannot shard, so the slice needs no DistContext.
-        self.prefill_worker = PrefillWorker(
-            cfg, params, topk=topk,
-            device=(mesh.devices.flat[0] if prefill_device is None
-                    else prefill_device))
+        # Disaggregated prefill pool: each worker owns its OWN weight
+        # copy on its own 1-device mesh slice (prefill/decode
+        # disaggregation — prefill capacity scales independently of the
+        # pool).  In this single-process simulation the slices double as
+        # data shards, so those devices carry two param copies; a real
+        # deployment passes devices OUTSIDE the decode mesh.  B=1
+        # prefill cannot shard, so the slices need no DistContext.
+        devices = ([mesh.devices.flat[i % mesh.devices.size]
+                    for i in range(prefill_workers)]
+                   if prefill_device is None else [prefill_device])
+        self.prefill_pool = PrefillPool(cfg, params, topk=topk,
+                                        n_workers=prefill_workers,
+                                        devices=devices)
 
         # the sharded pool: slot axis over `data`
         template = tf.init_lm_cache(cfg, self.n_slots, max_len,
@@ -126,6 +219,8 @@ class ShardedEngine:
                            "topk_ids": self._tok_sharding})
         self._insert = steps_lib.make_sharded_insert(
             self._pool_specs, self.dist, slots_per_host)
+        self._compact = steps_lib.make_compact_pool(
+            self._pool_specs, self.dist, slots_per_host)
 
     def _fresh_pool(self):
         # copy, not alias: donation consumes the buffers (engine.py)
@@ -136,79 +231,43 @@ class ShardedEngine:
             return True
         return len(req.tokens) >= req.max_gen
 
-    def _admit_one(self, req: Request, caches):
-        assert req.prompt_len + req.max_gen <= self.max_len, (
-            f"request {req.rid}: prompt {req.prompt_len} + max_gen "
-            f"{req.max_gen} exceeds pool max_len {self.max_len}")
-        small, first = self.prefill_worker.prefill(req)
-        caches = self._insert(caches, small, jnp.int32(req.slot))
-        return caches, first
+    def _make_transport(self,
+                        transport: Union[str, Transport]) -> Transport:
+        if isinstance(transport, Transport):
+            return transport
+        if transport == "sim":
+            return SimTransport(self.gossip_delay)
+        if transport == "collective":
+            from repro.serving.collective import make_device_gather
+            return CollectiveTransport(
+                self.n_hosts, self.gossip_delay,
+                capacity=self.collective_capacity,
+                gather=make_device_gather(self.mesh))
+        raise ValueError(f"unknown transport {transport!r}")
 
     # ------------------------------------------------------------------
-    def run(self, per_host_requests: List[List[Request]]
+    def run(self, per_host_requests: List[List[Request]], *,
+            transport: Union[str, Transport, None] = None,
+            compact_threshold: Union[float, None, str] = "default",
             ) -> Tuple[Dict[int, Request], ServeStats]:
-        """Serve per-host arrival streams through the gossiped pool.
+        """Serve per-host arrival streams through the transported pool.
 
-        The loop order is EXACTLY ``scheduler.simulate_sharded_schedule``
-        (admit -> fast-forward-if-empty -> decode -> retire), so with
-        ``eos_id=None`` the engine's event log reproduces the model-free
-        simulation's log integer-for-integer.
+        The loop is LITERALLY ``scheduler.run_schedule`` — the same
+        driver the model-free ``simulate_sharded_schedule`` runs — so
+        with ``eos_id=None`` the engine's event log reproduces the
+        simulation's log integer-for-integer, COMPACT events included.
         """
-        sched = ShardedScheduler(self.n_hosts, self.slots_per_host,
-                                 self.gossip_delay)
+        sched = ShardedScheduler(
+            self.n_hosts, self.slots_per_host, self.gossip_delay,
+            transport=self._make_transport(
+                self.transport if transport is None else transport),
+            compact_threshold=(self.compact_threshold
+                               if compact_threshold == "default"
+                               else compact_threshold))
         sched.push_workloads(per_host_requests)
-        stats = ServeStats()
-
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
-        active = np.zeros((self.n_slots,), bool)
-        caches = self._fresh_pool()
-        now = 0
+        client = _PoolClient(self)
         t0 = time.perf_counter()
-
-        while sched.n_pending or sched.n_active:
-            for req in sched.admit(now):
-                caches, first = self._admit_one(req, caches)
-                req.tokens.append(first)
-                stats.prefills += 1
-                stats.tokens_out += 1
-                if self._stopped(req, first):
-                    sched.release(req.slot, now)
-                else:
-                    tokens[req.slot, 0] = first
-                    pos[req.slot] = req.prompt_len
-                    active[req.slot] = True
-
-            if not sched.n_active:
-                nxt = sched.next_event_time(now)
-                if nxt is None:
-                    break
-                stats.idle_steps += nxt - now
-                now = nxt
-                continue
-
-            out = self._decode(
-                self.params,
-                jax.device_put(jnp.asarray(tokens), self._tok_sharding),
-                caches,
-                jax.device_put(jnp.asarray(pos), self._row_sharding),
-                jax.device_put(jnp.asarray(active), self._row_sharding))
-            caches = out["caches"]
-            ids = np.asarray(out["topk_ids"][:, 0])
-            stats.decode_steps += 1
-            stats.slot_steps_total += self.n_slots
-            stats.slot_steps_active += int(active.sum())
-            now += 1
-            for gslot, req in list(sched.active.items()):
-                tok = int(ids[gslot])
-                req.tokens.append(tok)
-                stats.tokens_out += 1
-                tokens[gslot, 0] = tok
-                pos[gslot] += 1
-                if self._stopped(req, tok):
-                    sched.release(gslot, now)
-                    active[gslot] = False
-
+        stats = run_schedule(sched, client)
         stats.wall_s = time.perf_counter() - t0
         self._sched = sched          # exposed for the simulation tests
         results = {r.rid: r for reqs in per_host_requests for r in reqs}

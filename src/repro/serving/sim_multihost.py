@@ -3,20 +3,28 @@
 Forces an 8-device CPU topology via XLA_FLAGS *before* jax initializes —
 that is why this module must run as ``__main__`` in a fresh process (the
 test suite's parent process must keep seeing 1 CPU device, see
-tests/conftest.py) — then serves the same seeded per-host workload three
-ways and dumps everything a verdict needs as JSON:
+tests/conftest.py) — then serves the same seeded per-host workload
+through the full control/data-plane matrix (DESIGN.md §9) and dumps
+everything a verdict needs as JSON:
 
-  * ``sharded``  — ShardedEngine: data-axis-sharded slot pool, gossiped
-    admission, disaggregated prefill (DESIGN.md §8);
-  * ``single``   — the PR-2 single-host Engine over the merged workload;
-  * ``solo``     — each request alone through static serving (the paper's
-    Fig. 3 serving path, the ground truth the other two must match
-    BIT-identically).
+  * ``runs`` — ONE ShardedEngine (single jitted decode step, prefill pool
+    of 2 mesh-slice workers) driven through
+    {sim, collective} transports x {no-compaction, compaction}: the
+    collective runs exchange deltas over a REAL device all_gather on the
+    8-device topology, and the compaction runs remap the sharded cache
+    pytree mid-flight;
+  * ``single`` — the PR-2 single-host Engine over the merged workload;
+  * ``solo``   — each request alone through static serving (the paper's
+    Fig. 3 serving path, the ground truth everything must match
+    BIT-identically);
+  * ``sims``   — the model-free ``simulate_sharded_schedule`` replays
+    (per compaction setting): the engine logs must equal them
+    integer-for-integer, COMPACT events included.
 
-Also recorded: the sharded scheduler's merged + per-host event logs, the
-model-free ``simulate_sharded_schedule`` replay of the same workload (the
-engine log must equal it integer-for-integer), and the decode-step
-compile count (the single-compiled-step invariant must survive sharding).
+Also recorded: per-host event logs (linearization), the decode-step
+compile count across the WHOLE matrix (the single-compiled-step
+invariant must survive transports and compaction), and the prefill
+pool's dispatch stats.
 
 Usage:  python -m repro.serving.sim_multihost --out report.json
 """
@@ -42,26 +50,65 @@ from repro.serving import (Engine, LoadSpec, ShardedEngine,
 
 ARCH = "qwen1.5-0.5b"
 N_HOSTS = 8
-SLOTS_PER_HOST = 1
+SLOTS_PER_HOST = 2        # >= 2 so per-host fragmentation can occur
 MAX_LEN = 40
 TOPK = 4
 GOSSIP_DELAY = 1
+PREFILL_WORKERS = 2
+COMPACT_THRESHOLD = 0.25  # frag 0.5 (1 hole of 2 slots) crosses it
+
+
+def _log_of(sched) -> dict:
+    return {
+        "admissions": sched.admissions,
+        "releases": sched.releases,
+        "compactions": [(step, list(perm), seq)
+                        for step, perm, seq in sched.compactions],
+        "per_host": [{"admissions": h.admissions,
+                      "releases": h.releases,
+                      "compactions": [(s, list(p), q)
+                                      for s, p, q in h.compactions]}
+                     for h in sched.hosts],
+    }
 
 
 def run(seed: int = 0) -> dict:
     cfg = configs.get_smoke_config(ARCH)
     params = steps_lib.cast_params_for_compute(
         steps_lib.init_fn_for(cfg)(jax.random.PRNGKey(0)), cfg)
-    # one request per host per stream keeps the sim < ~1 min on CPU CI
-    # while still exercising cross-host admission and mid-flight churn
-    spec = LoadSpec(n_requests=1, vocab=cfg.vocab, rate=1.0,
+    # two requests per host per stream keeps the sim fast on CPU CI while
+    # still exercising cross-host admission, mid-flight churn, and enough
+    # slot fragmentation for the compaction runs to actually compact
+    spec = LoadSpec(n_requests=2, vocab=cfg.vocab, rate=1.0,
                     prompt_lens=(6, 10), gen_lens=(3, 6, 12), seed=seed)
 
     mesh = make_serving_mesh()
     engine = ShardedEngine(cfg, params, mesh=mesh,
                            slots_per_host=SLOTS_PER_HOST, max_len=MAX_LEN,
-                           topk=TOPK, gossip_delay=GOSSIP_DELAY)
-    sharded_res, sharded_stats = engine.run(sharded_workload(spec, N_HOSTS))
+                           topk=TOPK, gossip_delay=GOSSIP_DELAY,
+                           prefill_workers=PREFILL_WORKERS)
+
+    runs = {}
+    for tname in ("sim", "collective"):
+        for cname, thresh in (("plain", None),
+                              ("compact", COMPACT_THRESHOLD)):
+            res, stats = engine.run(sharded_workload(spec, N_HOSTS),
+                                    transport=tname,
+                                    compact_threshold=thresh)
+            runs[f"{tname}_{cname}"] = {
+                "tokens": {r.rid: r.tokens for r in res.values()},
+                "done": {rid: r.done for rid, r in res.items()},
+                "stats": stats.as_row(),
+                "log": _log_of(engine._sched),
+            }
+
+    sims = {}
+    for cname, thresh in (("plain", None), ("compact", COMPACT_THRESHOLD)):
+        sim_sched, sim_stats = simulate_sharded_schedule(
+            sharded_workload(spec, N_HOSTS), SLOTS_PER_HOST, GOSSIP_DELAY,
+            compact_threshold=thresh)
+        sims[cname] = {"stats": sim_stats.as_row(),
+                       "log": _log_of(sim_sched)}
 
     single = Engine(cfg, params, n_slots=N_HOSTS * SLOTS_PER_HOST,
                     max_len=MAX_LEN, topk=TOPK)
@@ -76,33 +123,23 @@ def run(seed: int = 0) -> dict:
             r, _ = solo.run_static([req])
             solo_tokens[req.rid] = r[req.rid].tokens
 
-    sim_sched, sim_stats = simulate_sharded_schedule(
-        sharded_workload(spec, N_HOSTS), SLOTS_PER_HOST, GOSSIP_DELAY)
-
-    sched = engine._sched
     return {
         "n_devices": jax.device_count(),
         "n_hosts": N_HOSTS,
         "slots_per_host": SLOTS_PER_HOST,
         "gossip_delay": GOSSIP_DELAY,
+        "compact_threshold": COMPACT_THRESHOLD,
+        "prefill_workers": PREFILL_WORKERS,
+        # compile count across the ENTIRE matrix: 4 engine runs through
+        # both transports, with and without mid-flight cache remaps
         "decode_compiles": engine._decode._cache_size(),
-        "tokens": {
-            "sharded": {r.rid: r.tokens for r in sharded_res.values()},
-            "single": {r.rid: r.tokens for r in single_res.values()},
-            "solo": solo_tokens,
-        },
-        "done": {rid: r.done for rid, r in sharded_res.items()},
-        "stats": {"sharded": sharded_stats.as_row(),
-                  "single": single_stats.as_row(),
-                  "sim": sim_stats},
-        "log": {
-            "admissions": sched.admissions,
-            "releases": sched.releases,
-            "per_host": [{"admissions": h.admissions,
-                          "releases": h.releases} for h in sched.hosts],
-        },
-        "sim_log": {"admissions": sim_sched.admissions,
-                    "releases": sim_sched.releases},
+        "prefill_stats": engine.prefill_pool.stats,
+        "runs": runs,
+        "sims": sims,
+        "single": {"tokens": {r.rid: r.tokens
+                              for r in single_res.values()},
+                   "stats": single_stats.as_row()},
+        "solo": solo_tokens,
     }
 
 

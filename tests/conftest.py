@@ -25,21 +25,15 @@ def subprocess_env():
 
 
 def assert_slot_log_sound(sched, n_slots):
-    """Shared invariant check on a serving Scheduler's event log: per
-    slot, admissions/releases strictly alternate (ordered by the global
-    event seq) with matching rids — i.e. no slot ever hosts two live
-    requests.  Used by the deterministic sim test and the hypothesis
-    property suite."""
-    for slot in range(n_slots):
-        events = sorted(
-            [(seq, 0, rid) for _, s, rid, seq in sched.admissions
-             if s == slot]
-            + [(seq, 1, rid) for _, s, rid, seq in sched.releases
-               if s == slot])
-        assert [kind for _, kind, _ in events] == \
-            [i % 2 for i in range(len(events))]
-        for i in range(0, len(events), 2):
-            assert events[i][2] == events[i + 1][2]
+    """Shared invariant check on a serving scheduler's event log — thin
+    wrapper over THE replay helper (serving/control.replay_slot_log):
+    admissions/releases per slot alternate with matching rids through any
+    COMPACT remaps, i.e. no slot ever hosts two live requests and no
+    live request is dropped by a compaction.  Used by the deterministic
+    sim test and the hypothesis property suite."""
+    from repro.serving.control import replay_slot_log
+    replay_slot_log(sched.admissions, sched.releases,
+                    getattr(sched, "compactions", []), n_slots)
 
 
 @pytest.fixture

@@ -120,6 +120,41 @@ def test_engine_rejects_overlong_request():
         engine.run([req])
 
 
+def test_prefill_pool_is_schedule_and_token_invariant(served):
+    """Prefill pool satellite (DESIGN.md §9): a burst served through a
+    3-worker pool produces the EXACT tokens of the 1-worker pool (and of
+    solo static serving), with FIFO dispatch spreading the burst across
+    all workers and the summed virtual queue wait strictly shrinking."""
+    from repro.serving import LoadSpec, burst_workload
+
+    cfg = served["cfg"]
+    spec = LoadSpec(n_requests=6, vocab=cfg.vocab, prompt_lens=(6, 10, 14),
+                    gen_lens=(3, 6), seed=1)
+    max_len = 24
+
+    stats = {}
+    tokens = {}
+    for n_workers in (1, 3):
+        engine = Engine(cfg, served["engine"].params, n_slots=6,
+                        max_len=max_len, topk=4,
+                        prefill_workers=n_workers)
+        results, st = engine.run(burst_workload(spec))
+        tokens[n_workers] = {rid: r.tokens for rid, r in results.items()}
+        stats[n_workers] = (engine.prefill_pool.stats, st)
+    assert tokens[1] == tokens[3]
+    assert stats[1][1].decode_steps == stats[3][1].decode_steps
+
+    pool1, pool3 = stats[1][0], stats[3][0]
+    assert pool1["jobs"] == pool3["jobs"] == 6
+    assert pool1["per_worker"] == [6]
+    assert len(pool3["per_worker"]) == 3
+    assert sum(pool3["per_worker"]) == 6
+    assert all(c > 0 for c in pool3["per_worker"])   # burst spreads out
+    assert pool3["max_queue_depth"] == pool1["max_queue_depth"] == 6
+    # head-of-line blocking: 1 worker serializes the burst, 3 overlap it
+    assert pool3["wait_units"] < pool1["wait_units"]
+
+
 def test_loadgen_is_deterministic():
     spec = LoadSpec(n_requests=20, vocab=128, rate=0.7, seed=123)
     a, b = make_workload(spec), make_workload(spec)

@@ -1,26 +1,34 @@
-"""Deterministic multi-host serving simulation tests (DESIGN.md §8).
+"""Deterministic multi-host serving simulation tests (DESIGN.md §8/§9).
 
 The heavyweight piece runs ``repro.serving.sim_multihost`` in a
 subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
 the forced topology must be set before jax initializes, and this pytest
 process must keep seeing 1 CPU device (tests/test_launch.py asserts it).
-The driver serves the same seeded per-host workload through the sharded
-engine, the single-host engine, and solo static serving, and the
-assertions here prove:
+The driver serves the same seeded per-host workload through the FULL
+control/data-plane matrix — {sim, collective} transports x
+{no-compaction, compaction} on ONE sharded engine — plus the single-host
+engine and solo static serving, and the assertions here prove:
 
-  * per-request tokens are BIT-identical across all three paths — the
-    data-axis sharding, gossiped admission, and disaggregated prefill
-    change the schedule but never a single recovered token;
-  * the sharded engine's event log equals the model-free
-    ``simulate_sharded_schedule`` replay integer-for-integer;
-  * no slot is double-claimed (per-slot admit/release alternation on the
-    merged log) and the merged log is a linearization of per-host logs;
-  * the single-compiled-step invariant survives sharding (decode compiled
-    exactly once).
+  * per-request tokens are BIT-identical across ALL SIX paths — data-axis
+    sharding, transported admission (including the real device all_gather
+    of the collective transport), the prefill pool, and mid-flight slot
+    compaction change the schedule but never a single recovered token;
+  * each engine run's event log equals the model-free
+    ``simulate_sharded_schedule`` replay integer-for-integer, COMPACT
+    events included, and the sim/collective transports produce identical
+    logs (transport equivalence on the device topology);
+  * no slot is double-claimed (shared ``replay_slot_log`` through any
+    COMPACT remaps) and the merged log is a linearization of per-host
+    logs;
+  * the single-compiled-step invariant survives the whole matrix (decode
+    compiled exactly once across all four runs);
+  * the compaction runs actually compact, and the prefill pool actually
+    dispatches over both workers.
 
 The JAX-free tests below the subprocess fixture pin the loadgen and
-scheduler determinism contracts (satellite: arrival streams are pure
-functions of (seed, host_id); two runs replay identical event logs).
+scheduler determinism contracts in-process — including deterministic
+(no-hypothesis) versions of the transport-equivalence and compaction
+invariants, so they run even where hypothesis is absent.
 """
 import json
 import subprocess
@@ -31,11 +39,14 @@ import pytest
 
 from conftest import subprocess_env
 
-from repro.serving import (LoadSpec, host_stream, merge_workloads,
+from repro.serving import (CollectiveTransport, LoadSpec, Request,
+                           host_stream, merge_workloads, replay_slot_log,
                            sharded_workload, simulate_sharded_schedule)
 
 N_HOSTS = 8
-SLOTS_PER_HOST = 1
+SLOTS_PER_HOST = 2
+RUNS = ("sim_plain", "sim_compact", "collective_plain",
+        "collective_compact")
 
 
 @pytest.fixture(scope="module")
@@ -59,73 +70,139 @@ def report(tmp_path_factory):
 def test_sim_ran_on_8_devices(report):
     assert report["n_devices"] == 8
     assert report["n_hosts"] == N_HOSTS
+    assert report["slots_per_host"] == SLOTS_PER_HOST
+    assert set(report["runs"]) == set(RUNS)
 
 
 def test_tokens_bit_identical_across_all_paths(report):
-    """Sharded pool == single-host pool == solo static, token for token."""
-    toks = report["tokens"]
-    assert toks["sharded"], "sharded run produced no results"
-    assert set(toks["sharded"]) == set(toks["single"]) == set(toks["solo"])
-    for rid in toks["solo"]:
-        assert toks["sharded"][rid] == toks["solo"][rid], (
-            f"req {rid}: sharded {toks['sharded'][rid]} != solo "
-            f"{toks['solo'][rid]}")
-        assert toks["single"][rid] == toks["solo"][rid], (
-            f"req {rid}: single {toks['single'][rid]} != solo "
-            f"{toks['solo'][rid]}")
+    """{sim, collective} x {plain, compact} == single-host pool == solo
+    static, token for token."""
+    solo = report["solo"]
+    assert solo, "solo run produced no results"
+    single = report["single"]["tokens"]
+    assert set(single) == set(solo)
+    for rid in solo:
+        assert single[rid] == solo[rid], (
+            f"req {rid}: single {single[rid]} != solo {solo[rid]}")
+    for name in RUNS:
+        toks = report["runs"][name]["tokens"]
+        assert set(toks) == set(solo)
+        for rid in solo:
+            assert toks[rid] == solo[rid], (
+                f"req {rid}: {name} {toks[rid]} != solo {solo[rid]}")
 
 
 def test_every_request_completes(report):
-    assert report["done"] and all(report["done"].values())
+    for name in RUNS:
+        done = report["runs"][name]["done"]
+        assert done and all(done.values()), name
 
 
-def test_single_compiled_decode_step_survives_sharding(report):
+def test_single_compiled_decode_step_survives_the_matrix(report):
+    """One executable across sim+collective transports AND mid-flight
+    cache compactions (out_specs == pool specs pins the layout)."""
     assert report["decode_compiles"] == 1
 
 
-def test_engine_log_matches_model_free_simulation(report):
-    """The engine's gossiped schedule is exactly the JAX-free replay —
-    scheduling is decoupled from the model (the workload has no EOS)."""
+def test_engine_logs_match_model_free_simulation(report):
+    """Each engine run's transported schedule is exactly the JAX-free
+    replay for its compaction setting — scheduling is decoupled from the
+    model (the workload has no EOS) — and COMPACT events replay too."""
     as_tuples = lambda evs: [tuple(e) for e in evs]
-    assert as_tuples(report["log"]["admissions"]) == \
-        as_tuples(report["sim_log"]["admissions"])
-    assert as_tuples(report["log"]["releases"]) == \
-        as_tuples(report["sim_log"]["releases"])
-    assert report["stats"]["sharded"]["decode_steps"] == \
-        report["stats"]["sim"]["decode_steps"]
+    as_comp = lambda evs: [(s, tuple(p), q) for s, p, q in evs]
+    for name in RUNS:
+        sim = report["sims"][name.split("_")[1]]
+        run_log, sim_log = report["runs"][name]["log"], sim["log"]
+        assert as_tuples(run_log["admissions"]) == \
+            as_tuples(sim_log["admissions"]), name
+        assert as_tuples(run_log["releases"]) == \
+            as_tuples(sim_log["releases"]), name
+        assert as_comp(run_log["compactions"]) == \
+            as_comp(sim_log["compactions"]), name
+        assert report["runs"][name]["stats"]["decode_steps"] == \
+            sim["stats"]["decode_steps"]
+
+
+def test_transport_equivalence_on_device_topology(report):
+    """The collective transport (REAL device all_gather on the 8-device
+    mesh) reproduces the simulated gossip's log integer-for-integer."""
+    for cname in ("plain", "compact"):
+        a = report["runs"][f"sim_{cname}"]["log"]
+        b = report["runs"][f"collective_{cname}"]["log"]
+        assert a == b, f"sim vs collective diverged ({cname})"
+
+
+def test_compaction_runs_compact_and_stay_schedule_invariant(report):
+    """The compact runs execute COMPACT events; the remap moves slot ids
+    but never admission/release steps or rids."""
+    for t in ("sim", "collective"):
+        plain = report["runs"][f"{t}_plain"]
+        comp = report["runs"][f"{t}_compact"]
+        assert comp["stats"]["compactions"] > 0
+        assert len(comp["log"]["compactions"]) == \
+            comp["stats"]["compactions"]
+        assert plain["stats"]["compactions"] == 0
+        key = lambda evs: [(e[0], e[2]) for e in evs]   # (step, rid)
+        assert key(plain["log"]["admissions"]) == \
+            key(comp["log"]["admissions"])
+        # intra-step release order follows slot order, which the remap
+        # permutes — per-step multiset comparison
+        assert sorted(key(plain["log"]["releases"])) == \
+            sorted(key(comp["log"]["releases"]))
+        assert plain["stats"]["decode_steps"] == \
+            comp["stats"]["decode_steps"]
+
+
+def test_prefill_pool_dispatches_over_all_workers(report):
+    """FIFO pool over 2 mesh-slice workers: every job dispatched, both
+    workers used, totals consistent across the 4-run matrix."""
+    st = report["prefill_stats"]
+    total = sum(r["stats"]["prefills"] for r in report["runs"].values())
+    assert st["jobs"] == total
+    assert len(st["per_worker"]) == report["prefill_workers"] == 2
+    assert sum(st["per_worker"]) == st["jobs"]
+    assert all(c > 0 for c in st["per_worker"])
 
 
 def test_no_slot_double_claim_and_linearization(report):
-    """Merged-log soundness: per-slot admit/release alternation with
-    matching rids, and the merged log restricted to each host's slot
-    range reproduces that host's local log exactly (linearization)."""
-    adm = [tuple(e) for e in report["log"]["admissions"]]
-    rel = [tuple(e) for e in report["log"]["releases"]]
+    """Merged-log soundness through COMPACT remaps (shared
+    ``replay_slot_log``), every request admitted exactly once by exactly
+    one host, and the merged log restricted to each host's slot range
+    reproduces that host's local log exactly (linearization)."""
     n_slots = N_HOSTS * SLOTS_PER_HOST
+    for name in RUNS:
+        log = report["runs"][name]["log"]
+        adm = [tuple(e) for e in log["admissions"]]
+        rel = [tuple(e) for e in log["releases"]]
+        comp = [(s, tuple(p), q) for s, p, q in log["compactions"]]
+        final = replay_slot_log(adm, rel, comp, n_slots)
+        assert all(o is None for o in final), f"{name}: slots left live"
 
-    class _Log:                      # adapt to conftest's checker shape
-        admissions, releases = adm, rel
-    from conftest import assert_slot_log_sound
-    assert_slot_log_sound(_Log, n_slots)
+        # every request admitted exactly once, by exactly one host —
+        # "which host" is the admitting slot's owner at admission time
+        rids = [rid for _, _, rid, _ in adm]
+        assert len(rids) == len(set(rids))
 
-    # every request admitted exactly once, by exactly one host
-    rids = [rid for _, _, rid, _ in adm]
-    assert len(rids) == len(set(rids))
-    hosts_of = {}
-    for _, gslot, rid, _ in adm:
-        hosts_of.setdefault(rid, set()).add(gslot // SLOTS_PER_HOST)
-    assert all(len(h) == 1 for h in hosts_of.values())
-
-    for h, hlog in enumerate(report["log"]["per_host"]):
-        lo, hi = h * SLOTS_PER_HOST, (h + 1) * SLOTS_PER_HOST
-        assert [tuple(e) for e in hlog["admissions"]] == \
-            [e for e in adm if lo <= e[1] < hi]
-        assert [tuple(e) for e in hlog["releases"]] == \
-            [e for e in rel if lo <= e[1] < hi]
-    # seqs strictly increase within each host log (order preserved)
-    for hlog in report["log"]["per_host"]:
-        seqs = [e[3] for e in hlog["admissions"] + hlog["releases"]]
-        assert sorted(seqs) == sorted(set(seqs))
+        for h, hlog in enumerate(log["per_host"]):
+            lo, hi = h * SLOTS_PER_HOST, (h + 1) * SLOTS_PER_HOST
+            assert [tuple(e) for e in hlog["admissions"]] == \
+                [e for e in adm if lo <= e[1] < hi]
+            assert [tuple(e) for e in hlog["releases"]] == \
+                [e for e in rel if lo <= e[1] < hi]
+            assert [(s, tuple(p), q)
+                    for s, p, q in hlog["compactions"]] == \
+                [(s, p[lo:hi], q) for s, p, q in comp
+                 if p[lo:hi] != tuple(range(lo, hi))]
+        # seqs strictly increase within each host list (order preserved)
+        # and never collide across a host's lists
+        for hlog in log["per_host"]:
+            for evs in (hlog["admissions"], hlog["releases"],
+                        hlog["compactions"]):
+                assert [e[-1] for e in evs] == \
+                    sorted(e[-1] for e in evs)
+            seqs = [e[-1] for e in hlog["admissions"] + hlog["releases"]
+                    + hlog["compactions"]]
+            assert len(seqs) == len(set(seqs))
 
 
 # ---------------------------------------------------------------------------
@@ -200,3 +277,77 @@ def test_merged_workload_orders_like_the_gossip_queue():
     keys = [(r.arrival_step, r.home, r.rid) for r in merged]
     assert keys == sorted(keys)
     assert len(merged) == 15
+
+
+def test_transport_equivalence_deterministic_sweep():
+    """sim transport == collective transport (loopback gather), log for
+    log, over a deterministic grid of topologies, delays, capacities and
+    compaction settings — the no-hypothesis version of the equivalence
+    property (CI also runs the hypothesis sweep)."""
+    for n_hosts, spp, delay, cap, thresh, seed in [
+            (1, 1, 0, 1, None, 0), (2, 3, 1, 2, None, 1),
+            (4, 2, 2, 8, None, 2), (3, 4, 1, 1, 0.0, 3),
+            (2, 4, 0, 4, 0.25, 4), (8, 2, 3, 2, 0.0, 5)]:
+        spec = LoadSpec(n_requests=4, vocab=64, rate=1.5, seed=seed)
+        a, sa = simulate_sharded_schedule(
+            sharded_workload(spec, n_hosts), spp, delay,
+            compact_threshold=thresh)
+        b, sb = simulate_sharded_schedule(
+            sharded_workload(spec, n_hosts), spp, delay,
+            transport=CollectiveTransport(n_hosts, delay, capacity=cap),
+            compact_threshold=thresh)
+        key = (n_hosts, spp, delay, cap, thresh)
+        assert a.admissions == b.admissions, key
+        assert a.releases == b.releases, key
+        assert a.compactions == b.compactions, key
+        assert sa == sb, key
+        for ha, hb in zip(a.hosts, b.hosts):
+            assert (ha.admissions, ha.releases, ha.compactions) == \
+                (hb.admissions, hb.releases, hb.compactions), key
+
+
+def test_compaction_is_schedule_invariant_and_sound():
+    """Deterministic compaction contract: the remap changes slot ids,
+    never admission/release steps or rids; perms never cross a host
+    boundary; the log replays soundly through COMPACT events; every
+    request still completes."""
+    spec = LoadSpec(n_requests=6, vocab=128, rate=2.0,
+                    prompt_lens=(4, 8), gen_lens=(2, 5, 11), seed=3)
+    for n_hosts, spp in [(2, 4), (4, 2), (1, 6)]:
+        s0, st0 = simulate_sharded_schedule(
+            sharded_workload(spec, n_hosts), spp, 1)
+        s1, st1 = simulate_sharded_schedule(
+            sharded_workload(spec, n_hosts), spp, 1,
+            compact_threshold=0.0)
+        assert len(s1.compactions) > 0, "threshold 0.0 never compacted"
+        # admissions keep the slot-independent ready order exactly;
+        # intra-step release order follows slot order, which the remap
+        # permutes — compare releases as per-step multisets
+        key = lambda evs: [(e[0], e[2]) for e in evs]
+        assert key(s0.admissions) == key(s1.admissions)
+        assert sorted(key(s0.releases)) == sorted(key(s1.releases))
+        assert (st0.decode_steps, st0.idle_steps, st0.tokens_out) == \
+            (st1.decode_steps, st1.idle_steps, st1.tokens_out)
+        for step, perm, seq in s1.compactions:
+            assert sorted(perm) == list(range(n_hosts * spp))
+            assert all(new // spp == old // spp
+                       for new, old in enumerate(perm))
+        final = replay_slot_log(s1.admissions, s1.releases,
+                                s1.compactions, n_hosts * spp)
+        assert all(o is None for o in final)
+
+
+def test_delay0_same_step_release_readmits_instead_of_dropping():
+    """Regression: with gossip_delay=0 a slot freed during the admit
+    phase (max_gen=1) is visible the same step; the driver must re-admit
+    the waiting request at the same clock tick, not break the loop and
+    drop it (the pre-refactor next_event_time filtered the candidate
+    out)."""
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32), max_gen=1,
+                    arrival_step=0, home=0) for i in range(3)]
+    sched, stats = simulate_sharded_schedule([reqs], slots_per_host=1,
+                                             gossip_delay=0)
+    assert all(r.done for r in reqs)
+    assert len(sched.admissions) == 3
+    # all three turned around at step 0: pure same-tick re-admission
+    assert [e[0] for e in sched.admissions] == [0, 0, 0]
