@@ -13,7 +13,15 @@ record the checked shape when it is scaled down.
 against the committed file and exits non-zero on regression (wired into
 CI).  The serving acceptance bar lives in the `decode_topk` rows:
 ``hbm_ratio`` = decode-then-top_k bytes / fused bytes must stay >= 3 at the
-qwen3-4b shape.
+qwen3-4b shape.  The training acceptance bar lives in the ``*.bwd.csr``
+rows (uniform + collision-heavy skew variants): the CSR-binned backward
+must model >= MIN_EMBED_CSR_RATIO / MIN_DECODE_CSR_RATIO fewer bytes than
+the dense-sweep rows it replaces; every ``*.bwd`` row carries
+``bytes_ideal`` (the single-pass floor of the op AS A SCATTER-ADD —
+embed's includes the grad table's read-modify-write) and
+``bwd_bytes_ratio`` = bytes / bytes_ideal, which the embed CSR rows
+legitimately push below 1.0 (sorting turns the RMW scatter into
+write-once output runs — see the embed.bwd comment in run()).
 """
 from __future__ import annotations
 
@@ -32,6 +40,8 @@ from repro.kernels import ops, ref
 # cannot drift from the m-tile the backward grids actually run with
 from repro.kernels.common import BWD_M_TILE as M_TILE
 from repro.kernels.bloom_ce import bloom_ce_pallas
+from repro.kernels.bloom_csr import (modeled_decode_bwd_csr_bytes,
+                                     modeled_embed_bwd_csr_bytes)
 from repro.kernels.bloom_decode import bloom_decode_pallas
 from repro.kernels.bloom_decode_topk import (bloom_decode_topk_pallas,
                                              modeled_hbm_bytes)
@@ -52,6 +62,11 @@ MIN_OCC_RATIO = 1.5   # >= 1.5x fewer modeled bytes at <= 50% occupancy
 # compaction acceptance (ISSUE 4): the densified scattered pool must
 # model within 1.1x of the globally-dense pool's bytes
 MAX_COMPACT_VS_DENSE = 1.1
+# CSR-binned backward acceptance (ISSUE 5): the binned scatter-add must
+# model >= these factors fewer HBM bytes than the dense m-tile sweep it
+# replaces (both at the production shape)
+MIN_EMBED_CSR_RATIO = 3.0
+MIN_DECODE_CSR_RATIO = 10.0
 
 
 def _cases():
@@ -100,8 +115,14 @@ def run(quick: bool = True):
         # the m axis in M_TILE blocks and re-reads g/idx from HBM on every
         # sweep; the f32 grad table is written exactly once (blocks are
         # zero-initialized in VMEM).  `bytes_ideal` is the single-pass
-        # scatter-add floor for reference.  Numeric check runs jax.grad
-        # through the custom-VJP at a reduced (tokens, d_model) shape.
+        # SCATTER-ADD floor (one g read + the grad table's RMW read+write
+        # — the 2*m*D*4 term — as a true data-dependent scatter pays);
+        # `bwd_bytes_ratio` = bytes / that floor.  NOTE the CSR rows land
+        # BELOW 1.0 on this ratio: binning sorts the scatter into
+        # write-once output runs, so it never pays the RMW read — beating
+        # the scatter formulation's floor is the point, not a modeling
+        # error.  Numeric check runs jax.grad through the custom-VJP at a
+        # reduced (tokens, d_model) shape.
         Tb = min(Tc, 16)
         idx_b = idx[:Tb]
         tbl32 = table[:, :min(D, 512)].astype(jnp.float32)
@@ -115,7 +136,41 @@ def run(quick: bool = True):
         rows.append(_row(f"{name}.embed.bwd", T, bytes_bwd,
                          _max_err(g_pal, g_ref),
                          bytes_ideal=bytes_bwd_ideal,
+                         bwd_bytes_ratio=round(bytes_bwd
+                                               / bytes_bwd_ideal, 4),
                          check_tokens=Tb, check_dmodel=tbl32.shape[1]))
+
+        # ---- embed bwd CSR: the binned scatter-add (bwd_impl="csr").
+        # The production bytes model is distribution-INDEPENDENT: the
+        # kernel DMAs exactly the E = T*k live cotangent rows whatever
+        # the hash draw (pad slots are gated off), so the uniform and
+        # collision-heavy rows commit the SAME bytes — the skew variant
+        # exists to pin numeric correctness when every entry piles into
+        # one m-tile (long multi-tile segment + all-empty pad tiles).
+        # Numeric checks run jax.grad through the custom VJP at a scaled
+        # (tokens, m, d_model) shape, recorded in check_* fields.
+        bytes_bwd_csr = modeled_embed_bwd_csr_bytes(T, k, D, m)
+        m_chk = 4096
+        tblc = jax.random.normal(key, (m_chk, tbl32.shape[1]))
+        for variant, hi in (("", m_chk), (".skew", min(M_TILE, m_chk))):
+            idx_c = jax.random.randint(jax.random.fold_in(key, 11),
+                                       (Tb, k), 0, hi)
+            cot_c = jax.random.normal(jax.random.fold_in(key, 12),
+                                      (Tb, tbl32.shape[1]))
+            g_pal = jax.grad(lambda t: jnp.sum(
+                bloom_embed_pallas(t, idx_c, interpret=True,
+                                   bwd_impl="csr") * cot_c))(tblc)
+            g_ref = jax.grad(lambda t: jnp.sum(
+                ref.bloom_embed_ref(t, idx_c) * cot_c))(tblc)
+            rows.append(_row(
+                f"{name}.embed.bwd.csr{variant}", T, bytes_bwd_csr,
+                _max_err(g_pal, g_ref),
+                bytes_ideal=bytes_bwd_ideal,
+                bwd_bytes_ratio=round(bytes_bwd_csr / bytes_bwd_ideal, 4),
+                vs_dense_ratio=round(bytes_bwd / bytes_bwd_csr, 4),
+                skew="collision_heavy" if variant else "uniform",
+                check_tokens=Tb, check_m=m_chk,
+                check_dmodel=tbl32.shape[1]))
 
         # ---- ce fwd: ONE read of the (T, m) f32 logits row + loss/lse ----
         logits = jax.random.normal(key, (Tc, m), jnp.float32)
@@ -136,9 +191,14 @@ def run(quick: bool = True):
             bloom_ce_pallas(z, h, interpret=True) * cot))(logits)
         g_ref = jax.grad(lambda z: jnp.sum(
             ref.bloom_ce_ref(z, h) * cot))(logits)
+        # ce.bwd IS the floor already (ISSUE 5 satellite: emit the ideal
+        # + ratio for it too, so every *.bwd row carries the same audit
+        # columns): one logits-row read + one dz write is irreducible
         bytes_ce_bwd = 2 * T * m * 4 + T * (k + 2) * 4
         rows.append(_row(f"{name}.ce.bwd", T, bytes_ce_bwd,
-                         _max_err(g_pal, g_ref), check_tokens=Tc))
+                         _max_err(g_pal, g_ref),
+                         bytes_ideal=bytes_ce_bwd, bwd_bytes_ratio=1.0,
+                         check_tokens=Tc))
 
         # ---- decode fwd: logp rows + (d, k) hash matrix + (B, d) scores --
         B = B_DECODE
@@ -169,7 +229,40 @@ def run(quick: bool = True):
         rows.append(_row(f"{name}.decode.bwd", B, bytes_dec_bwd,
                          _max_err(g_pal, g_ref),
                          bytes_ideal=bytes_dec_bwd_ideal,
+                         bwd_bytes_ratio=round(bytes_dec_bwd
+                                               / bytes_dec_bwd_ideal, 4),
                          check_d=d_chk, check_m=m_chk))
+
+        # ---- decode bwd CSR: the shared row-scatter kernel on the
+        # transposed cotangent, with H's bins cached per spec
+        # (core.bloom.cached_decode_bins — binning amortizes to zero and
+        # is NOT in the per-step model).  Same skew story as embed: the
+        # bytes model is distribution-independent, the .skew row pins
+        # numerics with the whole scaled vocab hashed into one m-tile.
+        bytes_dec_bwd_csr = modeled_decode_bwd_csr_bytes(B, d, k, m)
+        dc_chk, mc_chk = 2048, 1024     # nM=2 at check scale: the skew
+        #                                 draw leaves m-tile 1 fully empty
+        logp_c = jax.nn.log_softmax(
+            jax.random.normal(jax.random.fold_in(key, 13), (B, mc_chk)))
+        cot_c = jax.random.normal(jax.random.fold_in(key, 14), (B, dc_chk))
+        for variant, hi in (("", mc_chk), (".skew", min(M_TILE, mc_chk))):
+            H_c = jax.random.randint(jax.random.fold_in(key, 15),
+                                     (dc_chk, k), 0, hi)
+            g_pal = jax.grad(lambda lp: jnp.sum(
+                bloom_decode_pallas(lp, H_c, interpret=True,
+                                    bwd_impl="csr") * cot_c))(logp_c)
+            g_ref = jax.grad(lambda lp: jnp.sum(
+                ref.bloom_decode_ref(lp, H_c) * cot_c))(logp_c)
+            rows.append(_row(
+                f"{name}.decode.bwd.csr{variant}", B, bytes_dec_bwd_csr,
+                _max_err(g_pal, g_ref),
+                bytes_ideal=bytes_dec_bwd_ideal,
+                bwd_bytes_ratio=round(bytes_dec_bwd_csr
+                                      / bytes_dec_bwd_ideal, 4),
+                vs_dense_ratio=round(bytes_dec_bwd
+                                     / bytes_dec_bwd_csr, 4),
+                skew="collision_heavy" if variant else "uniform",
+                check_d=dc_chk, check_m=mc_chk))
 
         # ---- serving: decode-then-top_k vs fused decode_topk -------------
         # baseline writes the (B, d) score matrix to HBM and reads it back
@@ -338,6 +431,26 @@ def check_against(rows, path=JSON_PATH, err_slack=1e-3,
             failures.append(
                 f"{r['name']}: fused top-k HBM ratio {r['hbm_ratio']:.2f} "
                 f"< {min_topk_ratio} — serving fusion no longer pays")
+        # CSR-binned backward acceptance bars (ISSUE 5): the binned
+        # scatter-add must model >= MIN_*_CSR_RATIO fewer HBM bytes than
+        # the dense m-tile sweep at the production shape, on the uniform
+        # AND the collision-heavy (skew) rows alike — the model is
+        # distribution-independent, so a diverging skew row means the
+        # kernel/model went out of sync
+        if ".embed.bwd.csr" in r["name"] \
+                and r.get("vs_dense_ratio", 0.0) < MIN_EMBED_CSR_RATIO:
+            failures.append(
+                f"{r['name']}: CSR/dense bytes ratio "
+                f"{r.get('vs_dense_ratio', 0.0):.2f} < "
+                f"{MIN_EMBED_CSR_RATIO} — the binned embed backward no "
+                "longer closes the backward bytes gap")
+        if ".decode.bwd.csr" in r["name"] \
+                and r.get("vs_dense_ratio", 0.0) < MIN_DECODE_CSR_RATIO:
+            failures.append(
+                f"{r['name']}: CSR/dense bytes ratio "
+                f"{r.get('vs_dense_ratio', 0.0):.2f} < "
+                f"{MIN_DECODE_CSR_RATIO} — the binned decode backward "
+                "no longer closes the backward bytes gap")
         # row-skipping acceptance bar (ISSUE 3): at <= 50% slot occupancy
         # the occupancy grid must model >= MIN_OCC_RATIO fewer HBM bytes
         # than the full pool

@@ -94,6 +94,9 @@ class ModelConfig:
                                     # stats kept) — flash2-style trade-off
     moe_impl: str = "dense"       # dense (1-device oracle)|ep (shard_map)
     io_impl: str = "xla"          # xla | pallas (bloom embed/CE kernels)
+    bwd_impl: str = "csr"         # pallas-path backward: csr (CSR-binned
+                                  # scatter-add, stream-once) | dense
+                                  # (m-tile sweep, oracle-adjacent)
     # Dry-run analysis mode: unroll inner lax.scans (attention kv chunks,
     # top-k vocab chunks) so XLA cost_analysis counts every iteration —
     # cost_analysis counts a while-loop body exactly once (verified

@@ -77,8 +77,43 @@ def cached_hash_matrix(spec: BloomSpec) -> jnp.ndarray:
     spec is built on first use and shared by every caller (kernels.ops, the
     serving loop, benchmarks).  Respects `on_the_fly`: the cached matrix is
     exactly what indices_for would return for every id.
+
+    Forced eager (ensure_compile_time_eval): the first call may come from
+    inside someone else's jit trace (an ops.* call in a user-jitted loss,
+    or the lazy decode-bins thunk resolving at vjp-trace time) — without
+    the guard the lru_cache would capture that trace's tracers and poison
+    every later caller.
     """
-    return spec.indices_for(jnp.arange(spec.d))
+    with jax.ensure_compile_time_eval():
+        return spec.indices_for(jnp.arange(spec.d))
+
+
+@functools.lru_cache(maxsize=8)
+def cached_decode_bins(spec: BloomSpec, m_tile: int, e_tile: int):
+    """CSR bins of the whole-vocab hash matrix, cached per (spec, tiling).
+
+    The bwd_impl="csr" decode backward (DESIGN.md §4) scatter-adds the
+    (B, d) cotangent through per-m-tile segments of H.  H is a pure
+    function of the spec, so the binning pass (argsort of d*k entries —
+    kernels.bloom_csr.bin_csr) runs ONCE per spec here, next to the
+    cached hash matrix it bins, and every caller that DIFFERENTIATES the
+    Eq. 3 decode (ranking losses / grad sweeps through ops.bloom_decode)
+    reuses the device arrays; per-step binned-backward traffic is just
+    the segment row DMAs.  Built lazily on the first csr decode backward
+    — the LM training loss (embed + CE) never reads it.  (Embed bins
+    depend on the batch's token indices and are rebuilt in-graph each
+    step instead — see bloom_embed_pallas.)
+    """
+    from repro.kernels.bloom_csr import bin_csr   # deferred: keeps the
+    # core -> kernels edge lazy so the oracle layer stays importable
+    # without Pallas
+    # The first call may come from INSIDE a backward trace (kernels.ops
+    # resolves the bins thunk lazily at vjp-trace time); force eager
+    # evaluation so the lru_cache always holds concrete device arrays —
+    # never tracers of whatever jit happened to trigger the build.
+    with jax.ensure_compile_time_eval():
+        return bin_csr(cached_hash_matrix(spec), spec.m, m_tile=m_tile,
+                       e_tile=e_tile)
 
 
 # --------------------------------------------------------------------------

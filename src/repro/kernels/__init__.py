@@ -8,6 +8,10 @@
                       scatter-add backward
   bloom_decode_topk — fused Eq. 3 + streaming top-k (serving path; the
                       (B, d) score matrix never reaches HBM)
+  bloom_csr         — CSR-binned scatter-add backward shared by
+                      bloom_embed/bloom_decode (bwd_impl="csr": sort by
+                      m-tile, DMA exactly the live cotangent rows — the
+                      stream-once training backward; DESIGN.md §4)
 
 All four are differentiable where it makes sense (jax.custom_vjp with
 dedicated backward Pallas kernels) and validated in interpret mode against

@@ -17,11 +17,16 @@ DESIGN.md §4.
   H    — block (Vt, k)  at (v, 0)
   out  — block (Bt, Vt) at (b, v)
 
-The backward inverts the stream: grid (nM, nV) with the vocab axis
+The DENSE backward inverts the stream: grid (nM, nV) with the vocab axis
 innermost; each step builds the (v_tile, m_tile) one-hot count matrix
 w[i, c] = #{j : H[i, j] == c} from k iota-compares in VMEM and accumulates
 ``g_tile @ w`` into the revisited (B, m_tile) output block on the MXU —
-race-free, and no (B, d, k) or (d, m) one-hot ever reaches HBM.
+race-free, and no (B, d, k) or (d, m) one-hot ever reaches HBM, but the
+m-tile sweep re-reads the (B, d) cotangent and H nM times.
+``bwd_impl="csr"`` (the training default) routes the VJP through the
+CSR-binned backward (kernels/bloom_csr.py) on the transposed cotangent
+with per-spec cached bins of H — one read of g plus ~k row fetches; the
+dense kernel remains the oracle-adjacent fallback.
 """
 from __future__ import annotations
 
@@ -32,7 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import (BWD_M_TILE, onehot_count, pad_axis,
-                                  resolve_interpret)
+                                  resolve_bwd_impl, resolve_interpret)
 
 
 # --------------------------------------------------------------------------
@@ -122,19 +127,34 @@ def bloom_decode_bwd_pallas(g: jnp.ndarray, H: jnp.ndarray, m: int,
 # custom_vjp glue + public entry point
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _bloom_decode(logp, H, b_tile, v_tile, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def _bloom_decode(logp, H, bins_fn, b_tile, v_tile, interpret, bwd_impl,
+                  m_tile, e_tile):
     return _decode_fwd(logp, H, b_tile, v_tile, interpret)
 
 
-def _bloom_decode_vjp_fwd(logp, H, b_tile, v_tile, interpret):
+def _bloom_decode_vjp_fwd(logp, H, bins_fn, b_tile, v_tile, interpret,
+                          bwd_impl, m_tile, e_tile):
     return _decode_fwd(logp, H, b_tile, v_tile, interpret), (logp, H)
 
 
-def _bloom_decode_vjp_bwd(b_tile, v_tile, interpret, res, g):
+def _bloom_decode_vjp_bwd(bins_fn, b_tile, v_tile, interpret, bwd_impl,
+                          m_tile, e_tile, res, g):
     logp, H = res
-    dlogp = bloom_decode_bwd_pallas(g, H, logp.shape[1], v_tile=v_tile,
-                                    interpret=interpret)
+    if bwd_impl == "csr":
+        from repro.kernels.bloom_csr import bloom_decode_bwd_csr_pallas
+        # bins_fn resolves HERE, at backward-trace time — forward-only
+        # callers never pay the binning sort (the cached device arrays
+        # are picked up as constants, like cached_hash_matrix elsewhere)
+        bins = bins_fn() if bins_fn is not None else None
+        dlogp = bloom_decode_bwd_csr_pallas(
+            g, H, logp.shape[1], m_tile=m_tile, e_tile=e_tile,
+            interpret=interpret, bins=bins)
+    else:
+        # all tiling knobs forwarded (m_tile was previously dropped)
+        dlogp = bloom_decode_bwd_pallas(g, H, logp.shape[1],
+                                        m_tile=m_tile, v_tile=v_tile,
+                                        interpret=interpret)
     return dlogp.astype(logp.dtype), None
 
 
@@ -142,16 +162,34 @@ _bloom_decode.defvjp(_bloom_decode_vjp_fwd, _bloom_decode_vjp_bwd)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("b_tile", "v_tile", "interpret"))
+                   static_argnames=("b_tile", "v_tile", "interpret",
+                                    "bwd_impl", "m_tile", "e_tile",
+                                    "bins_fn"))
 def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
                         b_tile: int = 8, v_tile: int = 2048,
-                        interpret: bool | None = None) -> jnp.ndarray:
+                        interpret: bool | None = None,
+                        bwd_impl: str = "dense",
+                        m_tile: int = BWD_M_TILE,
+                        e_tile: int | None = None,
+                        bins_fn=None) -> jnp.ndarray:
     """logp (B, m) float; H (d, k) int32 -> scores (B, d) float32.
 
-    Differentiable: jax.grad w.r.t. `logp` runs the blocked scatter-add
-    backward kernel.
+    Differentiable: jax.grad w.r.t. `logp` runs the scatter-add backward
+    selected by ``bwd_impl`` — "dense" (the blocked m-tile sweep,
+    oracle-adjacent fallback) or "csr" (the CSR-binned backward of
+    kernels.bloom_csr, which reads the (B, d) cotangent once instead of
+    once per m-tile).  ``bins_fn`` is an optional HASHABLE zero-arg
+    callable returning precomputed bin_csr output for H; it is invoked
+    only when the backward is traced, so forward-only calls never pay
+    the binning pass (kernels.ops wires the per-spec
+    core.bloom.cached_decode_bins thunk here — H is fixed per BloomSpec,
+    so the sort amortizes to zero).  None on the csr path re-bins
+    in-graph inside the backward.  All backward tiling knobs
+    (``m_tile``, ``e_tile``) are threaded through the custom VJP.
     """
+    bwd_impl, e_tile = resolve_bwd_impl(bwd_impl, e_tile)
     b_tile = min(b_tile, logp.shape[0])
     v_tile = min(v_tile, H.shape[0])
-    return _bloom_decode(logp, H, b_tile, v_tile,
-                         resolve_interpret(interpret))
+    return _bloom_decode(logp, H, bins_fn, b_tile, v_tile,
+                         resolve_interpret(interpret), bwd_impl, m_tile,
+                         e_tile)

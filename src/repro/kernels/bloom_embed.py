@@ -17,12 +17,17 @@ TPU mapping (DESIGN.md §4):
 
 * Backward — the k-way scatter-add.  A data-dependent-output scatter races
   under the Pallas output pipeline (and interpret mode's block write-back),
-  so the kernel is formulated race-free as a blocked one-hot contraction:
-  grid ``(nM, nD, nT)`` with tokens innermost; each step builds the
-  ``(t_tile, m_tile)`` one-hot count matrix w[t, i] = #{j : idx[t, j] == i}
-  (kernels.common.onehot_count) IN VMEM ONLY and accumulates ``w.T @ g``
-  into the revisited ``(m_tile, d_tile)`` output block on the MXU.  The
-  dense ``(T, m)`` one-hot gradient of the XLA fallback never exists in HBM.
+  so this module's DENSE backward is formulated race-free as a blocked
+  one-hot contraction: grid ``(nM, nD, nT)`` with tokens innermost; each
+  step builds the ``(t_tile, m_tile)`` one-hot count matrix
+  w[t, i] = #{j : idx[t, j] == i} (kernels.common.onehot_count) IN VMEM
+  ONLY and accumulates ``w.T @ g`` into the revisited ``(m_tile, d_tile)``
+  output block on the MXU.  The dense ``(T, m)`` one-hot gradient of the
+  XLA fallback never exists in HBM — but the m-tile sweep re-reads ``g``
+  nM times.  ``bwd_impl="csr"`` (the training default) instead routes the
+  VJP through the CSR-binned backward of kernels/bloom_csr.py, which
+  sorts entries by m-tile and reads ``g`` ~k times total; the dense
+  kernel remains the oracle-adjacent fallback.
 """
 from __future__ import annotations
 
@@ -34,7 +39,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import (BWD_M_TILE, onehot_count, pad_axis,
-                                  resolve_interpret)
+                                  resolve_bwd_impl, resolve_interpret)
 
 
 # --------------------------------------------------------------------------
@@ -147,21 +152,34 @@ def bloom_embed_bwd_pallas(g: jnp.ndarray, idx: jnp.ndarray, m: int,
 # custom_vjp glue + public entry point
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _bloom_embed(table, idx, t_tile, d_tile, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def _bloom_embed(table, idx, t_tile, d_tile, interpret, bwd_impl,
+                 m_tile, bwd_t_tile, e_tile):
     return _embed_fwd(table, idx, t_tile, d_tile, interpret)
 
 
-def _bloom_embed_vjp_fwd(table, idx, t_tile, d_tile, interpret):
+def _bloom_embed_vjp_fwd(table, idx, t_tile, d_tile, interpret, bwd_impl,
+                         m_tile, bwd_t_tile, e_tile):
     out = _embed_fwd(table, idx, t_tile, d_tile, interpret)
     # `table` rides along for shape/dtype only — it is a live param anyway.
     return out, (idx, table)
 
 
-def _bloom_embed_vjp_bwd(t_tile, d_tile, interpret, res, g):
+def _bloom_embed_vjp_bwd(t_tile, d_tile, interpret, bwd_impl, m_tile,
+                         bwd_t_tile, e_tile, res, g):
     idx, table = res
-    dtable = bloom_embed_bwd_pallas(g, idx, table.shape[0],
-                                    d_tile=d_tile, interpret=interpret)
+    if bwd_impl == "csr":
+        from repro.kernels.bloom_csr import bloom_embed_bwd_csr_pallas
+        dtable = bloom_embed_bwd_csr_pallas(
+            g, idx, table.shape[0], m_tile=m_tile, e_tile=e_tile,
+            d_tile=d_tile, interpret=interpret)
+    else:
+        # every caller tiling knob is forwarded (bwd_t_tile defaults to
+        # the dense backward's own token tile, NOT the forward t_tile:
+        # the fwd default of 8 would shrink the bwd grid 16x)
+        dtable = bloom_embed_bwd_pallas(
+            g, idx, table.shape[0], m_tile=m_tile, d_tile=d_tile,
+            t_tile=bwd_t_tile, interpret=interpret)
     return dtable.astype(table.dtype), None
 
 
@@ -169,14 +187,33 @@ _bloom_embed.defvjp(_bloom_embed_vjp_fwd, _bloom_embed_vjp_bwd)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("t_tile", "d_tile", "interpret"))
+                   static_argnames=("t_tile", "d_tile", "interpret",
+                                    "bwd_impl", "m_tile", "bwd_t_tile",
+                                    "e_tile"))
 def bloom_embed_pallas(table: jnp.ndarray, idx: jnp.ndarray,
                        t_tile: int = 8, d_tile: int = 512,
-                       interpret: bool | None = None) -> jnp.ndarray:
+                       interpret: bool | None = None,
+                       bwd_impl: str = "dense",
+                       m_tile: int = BWD_M_TILE,
+                       bwd_t_tile: int = 128,
+                       e_tile: int | None = None) -> jnp.ndarray:
     """table (m, D), idx (T, k) int32 -> (T, D) = k-way gather-sum.
 
-    Differentiable: jax.grad w.r.t. `table` runs the fused scatter-add
-    backward kernel (validated vs the XLA oracle in tests/test_kernels.py).
+    Differentiable: jax.grad w.r.t. `table` runs the scatter-add backward
+    selected by ``bwd_impl`` (validated vs the XLA oracle in
+    tests/test_kernels.py):
+
+      "dense" — the blocked one-hot-contraction sweep over every m-tile
+                (oracle-adjacent fallback; re-reads g once per m-tile);
+      "csr"   — the CSR-binned backward (kernels.bloom_csr): a jitted
+                per-batch binning pass + segment row-DMA kernel that
+                reads g ~k times total.
+
+    All backward tiling knobs are threaded through the custom VJP:
+    ``m_tile`` (both impls), ``bwd_t_tile`` (dense token tile) and
+    ``e_tile`` (csr entry tile; None = kernels.bloom_csr.CSR_E_TILE).
     """
+    bwd_impl, e_tile = resolve_bwd_impl(bwd_impl, e_tile)
     return _bloom_embed(table, idx, t_tile, d_tile,
-                        resolve_interpret(interpret))
+                        resolve_interpret(interpret), bwd_impl, m_tile,
+                        bwd_t_tile, e_tile)

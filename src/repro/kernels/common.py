@@ -23,6 +23,19 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return bool(interpret)
 
 
+def resolve_bwd_impl(bwd_impl: str, e_tile: int | None) -> tuple[str, int]:
+    """Validate a differentiable entry point's ``bwd_impl`` knob and
+    resolve the csr entry-tile default — shared by bloom_embed_pallas
+    and bloom_decode_pallas so the two public APIs cannot drift."""
+    if bwd_impl not in ("dense", "csr"):
+        raise ValueError(f"bwd_impl must be 'dense' or 'csr', "
+                         f"got {bwd_impl!r}")
+    if e_tile is None:
+        from repro.kernels.bloom_csr import CSR_E_TILE
+        e_tile = CSR_E_TILE
+    return bwd_impl, e_tile
+
+
 def pad_axis(x: jnp.ndarray, axis: int, multiple: int,
              value=0) -> jnp.ndarray:
     """Right-pad `axis` of x to a multiple of `multiple` with `value`."""

@@ -12,10 +12,15 @@ serving loop never rehashes the vocabulary per step.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.bloom import BloomSpec, cached_hash_matrix
+from repro.core.bloom import (BloomSpec, cached_decode_bins,
+                              cached_hash_matrix)
+from repro.kernels.common import BWD_M_TILE
+from repro.kernels.bloom_csr import CSR_E_TILE
 from repro.kernels.bloom_embed import bloom_embed_pallas
 from repro.kernels.bloom_decode import bloom_decode_pallas
 from repro.kernels.bloom_decode_topk import bloom_decode_topk_pallas
@@ -23,11 +28,16 @@ from repro.kernels.bloom_ce import bloom_ce_pallas
 
 
 def bloom_embed(table: jnp.ndarray, tokens: jnp.ndarray,
-                spec: BloomSpec) -> jnp.ndarray:
-    """table (m, D); tokens (B, S) -> (B, S, D)."""
+                spec: BloomSpec, bwd_impl: str = "csr") -> jnp.ndarray:
+    """table (m, D); tokens (B, S) -> (B, S, D).
+
+    ``bwd_impl`` selects the scatter-add backward under jax.grad: "csr"
+    (CSR-binned, reads the cotangent ~k times total) or "dense" (m-tile
+    sweep fallback) — threaded from ModelConfig.bwd_impl by models/io.py.
+    """
     B, S = tokens.shape
     idx = spec.indices_for(tokens.reshape(-1))        # (T, k)
-    out = bloom_embed_pallas(table, idx)
+    out = bloom_embed_pallas(table, idx, bwd_impl=bwd_impl)
     return out.reshape(B, S, -1)
 
 
@@ -41,13 +51,38 @@ def bloom_ce(logits: jnp.ndarray, labels: jnp.ndarray,
     return loss.reshape(shape)
 
 
+@functools.lru_cache(maxsize=8)
+def _decode_bins_thunk(spec: BloomSpec, m_tile: int, e_tile: int):
+    """One stable (hashable, identity-cached) zero-arg thunk per
+    (spec, tiling): bloom_decode_pallas takes it as a STATIC arg and the
+    csr backward calls it at trace time — so the binning sort runs only
+    if the decode is actually differentiated, and a stable thunk object
+    never forces a retrace."""
+    return functools.partial(cached_decode_bins, spec, m_tile, e_tile)
+
+
 def bloom_decode(logp: jnp.ndarray, spec: BloomSpec,
-                 hash_matrix: jnp.ndarray | None = None) -> jnp.ndarray:
-    """logp (..., m) -> Eq. 3 scores (..., d) over the original vocab."""
+                 hash_matrix: jnp.ndarray | None = None,
+                 bwd_impl: str = "csr") -> jnp.ndarray:
+    """logp (..., m) -> Eq. 3 scores (..., d) over the original vocab.
+
+    With bwd_impl="csr" and the spec-cached hash matrix, the per-spec CSR
+    bins thunk (core.bloom.cached_decode_bins) rides into the custom VJP
+    so the binned backward never re-sorts H — and forward-only callers
+    never build the bins at all; a caller-supplied hash_matrix falls back
+    to in-graph binning inside the backward.
+    """
     lead = logp.shape[:-1]
     flat = logp.reshape(-1, logp.shape[-1])
-    H = hash_matrix if hash_matrix is not None else cached_hash_matrix(spec)
-    scores = bloom_decode_pallas(flat, H)
+    bins_fn = None
+    if hash_matrix is None:
+        H = cached_hash_matrix(spec)
+        if bwd_impl == "csr":
+            bins_fn = _decode_bins_thunk(spec, BWD_M_TILE, CSR_E_TILE)
+    else:
+        H = hash_matrix
+    scores = bloom_decode_pallas(flat, H, bwd_impl=bwd_impl,
+                                 bins_fn=bins_fn)
     return scores.reshape(*lead, spec.d)
 
 

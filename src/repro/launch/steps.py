@@ -64,6 +64,9 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, dist=None):
     """(params, opt_state, batch) -> (params, opt_state, metrics)."""
     loss_fn = loss_fn_for(cfg, dist)
     optimizer = trainer_lib.make_optimizer(tc)
+    # pallas path: build the per-spec hash matrix before the first trace
+    # (the LM loss never differentiates decode, so no decode bins here)
+    trainer_lib.warm_bloom_caches(cfg)
 
     def step(params, opt_state, batch):
         def scalar_loss(p):

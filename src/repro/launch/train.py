@@ -49,9 +49,15 @@ def run(arch: str, steps: int = 100, batch: int = 8, seq: int = 64,
         ckpt_dir: str | None = None, full: bool = False,
         bloom: bool = True, log_every: int = 10, microbatch: int = 0,
         grad_compression: str = "none", seed: int = 0,
-        fault_at: int = -1, learning_rate: float = 3e-3):
+        fault_at: int = -1, learning_rate: float = 3e-3,
+        io_impl: str | None = None, bwd_impl: str | None = None):
     cfg = (configs.get_config(arch, bloom=bloom) if full
            else configs.get_smoke_config(arch))
+    import dataclasses
+    if io_impl is not None:
+        cfg = dataclasses.replace(cfg, io_impl=io_impl)
+    if bwd_impl is not None:
+        cfg = dataclasses.replace(cfg, bwd_impl=bwd_impl)
     mesh = make_local_mesh()
     dist = DistContext(mesh) if mesh.size > 1 else None
     tc = TrainConfig(optimizer="adamw", learning_rate=learning_rate,
@@ -139,11 +145,19 @@ def main():
                     choices=["none", "bf16"])
     ap.add_argument("--fault-at", type=int, default=-1,
                     help="raise at this step (fault-tolerance demo)")
+    ap.add_argument("--io-impl", default=None, choices=["xla", "pallas"],
+                    help="override cfg.io_impl (pallas = fused Bloom "
+                         "embed/CE kernels in the train step)")
+    ap.add_argument("--bwd-impl", default=None, choices=["dense", "csr"],
+                    help="pallas-path Bloom backward: csr (CSR-binned "
+                         "scatter-add, stream-once) or dense (m-tile "
+                         "sweep fallback)")
     args = ap.parse_args()
     run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
         ckpt_dir=args.ckpt, full=args.full, bloom=not args.no_bloom,
         microbatch=args.microbatch, grad_compression=args.grad_compression,
-        fault_at=args.fault_at)
+        fault_at=args.fault_at, io_impl=args.io_impl,
+        bwd_impl=args.bwd_impl)
 
 
 if __name__ == "__main__":

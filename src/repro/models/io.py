@@ -8,6 +8,11 @@ recovery use the k-way likelihood of Eqs. 2/3.
 io_impl selects the execution path:
   "xla"    — pure jnp (gather/take); the oracle, and the dry-run path.
   "pallas" — fused TPU kernels from repro.kernels (validated vs this file).
+
+On the pallas path, bwd_impl selects the training backward of the Bloom
+scatter-adds: "csr" (default — CSR-binned segment kernel, reads the
+cotangent ~k times total, DESIGN.md §4) or "dense" (the m-tile-sweep
+fallback).  Both match the xla oracle's jax.grad to <= 1e-4.
 """
 from __future__ import annotations
 
@@ -53,7 +58,8 @@ def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray,
         return jnp.take(table, tokens, axis=0).astype(dt)
     if cfg.io_impl == "pallas":
         from repro.kernels import ops
-        return ops.bloom_embed(table.astype(dt), tokens, spec)
+        return ops.bloom_embed(table.astype(dt), tokens, spec,
+                               bwd_impl=cfg.bwd_impl)
     idx = spec.indices_for(tokens)                     # (B, S, k)
     rows = jnp.take(table, idx, axis=0).astype(dt)     # (B, S, k, D)
     return rows.sum(axis=2)

@@ -14,6 +14,11 @@ no (B, d) score matrix in HBM); this module makes a *system* out of it:
   * host-side admission/retirement per step (serving/scheduler.py): freed
     slots are refilled from the queue every decode step, per-slot stop
     conditions (max_gen / EOS id) retire them;
+  * device-resident slot state: (tokens, pos, active) stay on device for
+    the whole run and advance from the decode step's own outputs; the
+    host writes them only on admit/retire events instead of re-uploading
+    all three every decode step (the one d2h transfer left in the
+    steady-state loop is the new-token download the scheduler needs);
   * per-row math is *bit-identical* to the static path — a request served
     through the pool produces exactly the tokens it produces alone
     (asserted by tests/test_serving.py), because every decode op is
@@ -210,6 +215,33 @@ class Engine:
                                donate_argnums=(0,))
         self._pool_template = tf.init_lm_cache(
             cfg, n_slots, max_len, dtype=jnp.dtype(cfg.dtype))
+        # (tokens, pos, active) live ON DEVICE for the whole run: the old
+        # loop rebuilt them host-side and re-uploaded all three every
+        # decode step (3 h2d transfers per token).  Steady-state decode
+        # advances them from the step's own outputs (_advance — next
+        # token and pos+1 for every slot that decoded, exactly what the
+        # host wrote back); the host touches them only on admit
+        # (_set_slot) and retire (_drop_slot) events.  Values are
+        # bit-identical to the host-side bookkeeping, so tokens are too.
+        self._advance = jax.jit(
+            lambda ids, tokens, pos, active: (
+                jnp.where(active[:, None], ids[:, :1], tokens),
+                pos + active.astype(pos.dtype)),
+            donate_argnums=(1, 2))
+        self._set_slot = jax.jit(
+            lambda tokens, pos, active, slot, tok, p: (
+                tokens.at[slot, 0].set(tok), pos.at[slot].set(p),
+                active.at[slot].set(True)),
+            donate_argnums=(0, 1, 2))
+        self._drop_slot = jax.jit(lambda active, slot:
+                                  active.at[slot].set(False),
+                                  donate_argnums=(0,))
+
+    def _fresh_slot_state(self):
+        """Persistent device-side (tokens, pos, active) slot buffers."""
+        return (jnp.zeros((self.n_slots, 1), jnp.int32),
+                jnp.zeros((self.n_slots,), jnp.int32),
+                jnp.zeros((self.n_slots,), bool))
 
     def _fresh_pool(self):
         # copy, not alias: the first donated insert/decode consumes its
@@ -239,9 +271,7 @@ class Engine:
         sched = Scheduler(self.n_slots)
         stats = ServeStats()
 
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
-        active = np.zeros((self.n_slots,), bool)
+        tokens, pos, active = self._fresh_slot_state()
         caches = self._fresh_pool()
         now = 0
         t0 = time.perf_counter()
@@ -263,9 +293,10 @@ class Engine:
                 if self._stopped(req, first):
                     sched.release(req.slot, now)
                 else:
-                    tokens[req.slot, 0] = first
-                    pos[req.slot] = req.prompt_len
-                    active[req.slot] = True
+                    # admit event: the only h2d update of the slot state
+                    tokens, pos, active = self._set_slot(
+                        tokens, pos, active, jnp.int32(req.slot),
+                        jnp.int32(first), jnp.int32(req.prompt_len))
 
             if not sched.n_active:
                 nxt = queue.next_arrival()
@@ -281,23 +312,27 @@ class Engine:
                 now = nxt
                 continue
 
-            out = self._decode(self.params, jnp.asarray(tokens), caches,
-                               jnp.asarray(pos), jnp.asarray(active))
+            out = self._decode(self.params, tokens, caches, pos, active)
             caches = out["caches"]
+            # steady-state decode: tokens/pos advance on device from the
+            # step's own outputs — no host round-trip re-upload.  The
+            # d2h token download below is irreducible (the scheduler
+            # decides retirement host-side).  `active` at decode time is
+            # exactly sched.active membership, so its sum is host state.
+            tokens, pos = self._advance(out["topk_ids"], tokens, pos,
+                                        active)
             ids = np.asarray(out["topk_ids"][:, 0])
             stats.decode_steps += 1
             stats.slot_steps_total += self.n_slots
-            stats.slot_steps_active += int(active.sum())
+            stats.slot_steps_active += sched.n_active
             now += 1
             for slot, req in list(sched.active.items()):
                 tok = int(ids[slot])
                 req.tokens.append(tok)
                 stats.tokens_out += 1
-                tokens[slot, 0] = tok
-                pos[slot] += 1
                 if self._stopped(req, tok):
                     sched.release(slot, now)
-                    active[slot] = False
+                    active = self._drop_slot(active, jnp.int32(slot))
 
         stats.wall_s = time.perf_counter() - t0
         self._sched = sched          # exposed for the simulation tests
@@ -325,8 +360,10 @@ class Engine:
             stats.idle_steps += start - now
             now = start
 
-            tokens = np.zeros((self.n_slots, 1), np.int32)
-            pos = np.zeros((self.n_slots,), np.int32)
+            tokens, pos, active = self._fresh_slot_state()
+            # host-side mirror of the active mask — scheduling decisions
+            # (group drained? which slots still collect?) stay host-side;
+            # the device mask is only written on admit/retire events
             collecting = np.zeros((self.n_slots,), bool)
             for slot, req in enumerate(group):
                 req.slot = slot
@@ -338,15 +375,17 @@ class Engine:
                 if self._stopped(req, first):
                     req.finish_step = now
                 else:
-                    tokens[slot, 0] = first
-                    pos[slot] = req.prompt_len
                     collecting[slot] = True
+                    tokens, pos, active = self._set_slot(
+                        tokens, pos, active, jnp.int32(slot),
+                        jnp.int32(first), jnp.int32(req.prompt_len))
 
             while collecting.any():
-                out = self._decode(self.params, jnp.asarray(tokens), caches,
-                                   jnp.asarray(pos),
-                                   jnp.asarray(collecting))
+                out = self._decode(self.params, tokens, caches, pos,
+                                   active)
                 caches = out["caches"]
+                tokens, pos = self._advance(out["topk_ids"], tokens, pos,
+                                            active)
                 ids = np.asarray(out["topk_ids"][:, 0])
                 stats.decode_steps += 1
                 # static batching burns every slot of the pool per step
@@ -359,11 +398,10 @@ class Engine:
                     tok = int(ids[slot])
                     req.tokens.append(tok)
                     stats.tokens_out += 1
-                    tokens[slot, 0] = tok
-                    pos[slot] += 1
                     if self._stopped(req, tok):
                         req.finish_step = now
                         collecting[slot] = False
+                        active = self._drop_slot(active, jnp.int32(slot))
 
         stats.wall_s = time.perf_counter() - t0
         return {r.rid: r for r in requests}, stats

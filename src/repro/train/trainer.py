@@ -27,6 +27,33 @@ class TrainState:
     step: int
 
 
+def warm_bloom_caches(cfg, decode_grad: bool = False) -> None:
+    """Pre-build the per-spec Bloom device caches the hot path reads
+    (ModelConfig-aware entry; no-op off the pallas path).
+
+    The LM training loss touches only the (d, k) hash matrix (embed +
+    CE; embed's bwd_impl="csr" bins are per-batch and fuse into the
+    jitted step), so that is all the default warms.  Pass
+    ``decode_grad=True`` from workloads that DIFFERENTIATE the Eq. 3
+    decode (ranking losses through ops.bloom_decode) to also pre-build
+    the per-spec CSR bins of the hash matrix
+    (core.bloom.cached_decode_bins) — otherwise they are built lazily on
+    the first csr decode backward.  Warming before the first jitted step
+    keeps the one-time work out of the first step's wall time and out of
+    any traced scope.
+    """
+    from repro.core import bloom as bloom_lib
+    from repro.models import io as io_lib
+    spec = io_lib.vocab_spec(cfg)
+    if spec is None or cfg.io_impl != "pallas":
+        return
+    bloom_lib.cached_hash_matrix(spec)
+    if decode_grad and cfg.bwd_impl == "csr":
+        from repro.kernels.bloom_csr import CSR_E_TILE
+        from repro.kernels.common import BWD_M_TILE
+        bloom_lib.cached_decode_bins(spec, BWD_M_TILE, CSR_E_TILE)
+
+
 def make_optimizer(tc: TrainConfig, total_steps: Optional[int] = None):
     sched = (opt_lib.warmup_cosine(tc.learning_rate, tc.warmup_steps,
                                    total_steps or tc.steps)

@@ -266,6 +266,231 @@ def test_bloom_decode_grad(B, m, d, k):
                                atol=1e-4, rtol=1e-4)
 
 
+# --------------------------------------------------------------------------
+# CSR-binned backward (bwd_impl="csr") vs the XLA oracle AND the dense
+# Pallas backward — uniform, collision-heavy (skewed-hash) and ragged
+# (non-tile-multiple T / m) shapes, incl. the all-tokens-in-one-m-tile
+# and empty-m-tile extremes (ISSUE 5)
+# --------------------------------------------------------------------------
+
+def _embed_grads(table, idx, cot, *, m_tile, e_tile):
+    """(csr, dense, oracle) dtable gradients for one embed shape."""
+    g_csr = jax.grad(lambda t: jnp.sum(
+        bloom_embed_pallas(t, idx, d_tile=64, interpret=True,
+                           bwd_impl="csr", m_tile=m_tile,
+                           e_tile=e_tile) * cot))(table)
+    g_dense = jax.grad(lambda t: jnp.sum(
+        bloom_embed_pallas(t, idx, d_tile=64, interpret=True,
+                           bwd_impl="dense", m_tile=m_tile) * cot))(table)
+    g_ref = jax.grad(lambda t: jnp.sum(
+        ref.bloom_embed_ref(t, idx) * cot))(table)
+    return g_csr, g_dense, g_ref
+
+
+@pytest.mark.parametrize("T,k,m,D,m_tile,e_tile", [
+    (1, 1, 16, 32, 16, 4),      # single entry, single tile
+    (7, 3, 60, 48, 16, 4),      # ragged m (not an m_tile multiple)
+    (13, 8, 250, 100, 64, 128), # e_tile > per-segment entries, ragged m
+    (32, 4, 128, 256, 32, 8),   # multi-tile segments
+    (5, 2, 40, 20, 16, 3),      # non-power-of-two e_tile, ragged T
+])
+def test_bloom_embed_grad_csr_uniform(T, k, m, D, m_tile, e_tile):
+    """CSR backward == oracle == dense backward on uniform hash draws."""
+    table = jax.random.normal(KEY, (m, D))
+    idx = jax.random.randint(jax.random.fold_in(KEY, 1), (T, k), 0, m)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 9), (T, D))
+    g_csr, g_dense, g_ref = _embed_grads(table, idx, cot,
+                                         m_tile=m_tile, e_tile=e_tile)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("hot", [1, 3])
+def test_bloom_embed_grad_csr_collision_heavy(hot):
+    """Skewed-hash extreme: every entry collides into `hot` distinct
+    indices of ONE m-tile — one long multi-tile segment, every other
+    m-tile empty (the pad-tile path must still zero their blocks)."""
+    T, k, m, D, m_tile, e_tile = 24, 4, 160, 64, 32, 8
+    table = jax.random.normal(KEY, (m, D))
+    idx = jax.random.randint(jax.random.fold_in(KEY, 2), (T, k), 0, hot)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 9), (T, D))
+    g_csr, g_dense, g_ref = _embed_grads(table, idx, cot,
+                                         m_tile=m_tile, e_tile=e_tile)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_dense),
+                               atol=1e-4, rtol=1e-4)
+    # rows the skew never touched must come back exactly zero
+    assert np.all(np.asarray(g_csr)[hot:] == 0.0)
+
+
+def test_bloom_embed_grad_csr_middle_tile_only():
+    """Entries confined to a MIDDLE m-tile: leading and trailing m-tiles
+    are both empty (exercises pad tiles on both sides of the live run)."""
+    T, k, m, D, m_tile, e_tile = 9, 3, 96, 40, 32, 4
+    table = jax.random.normal(KEY, (m, D))
+    idx = 32 + jax.random.randint(jax.random.fold_in(KEY, 3), (T, k),
+                                  0, 32)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 9), (T, D))
+    g_csr, _, g_ref = _embed_grads(table, idx, cot,
+                                   m_tile=m_tile, e_tile=e_tile)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    got = np.asarray(g_csr)
+    assert np.all(got[:32] == 0.0) and np.all(got[64:] == 0.0)
+
+
+@pytest.mark.parametrize("B,m,d,k,m_tile,e_tile", [
+    (1, 32, 100, 1, 16, 8),
+    (5, 64, 333, 3, 16, 32),    # ragged everything
+    (8, 128, 1024, 4, 64, 128),
+])
+def test_bloom_decode_grad_csr(B, m, d, k, m_tile, e_tile):
+    """CSR decode backward (shared row-scatter kernel on the transposed
+    cotangent) == oracle == dense backward."""
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 2), (d, k), 0, m)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 9), (B, d))
+
+    def run(impl):
+        return jax.grad(lambda lp: jnp.sum(
+            bloom_decode_pallas(lp, H, b_tile=4, v_tile=64,
+                                interpret=True, bwd_impl=impl,
+                                m_tile=m_tile, e_tile=e_tile) * cot))(logp)
+
+    g_csr, g_dense = run("csr"), run("dense")
+    g_ref = jax.grad(lambda lp: jnp.sum(
+        ref.bloom_decode_ref(lp, H) * cot))(logp)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_dense),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_bloom_decode_grad_csr_skewed_hash():
+    """Collision-heavy H (whole vocab hashes into one m-tile)."""
+    B, m, d, k, m_tile = 4, 96, 200, 3, 32
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 5), (d, k), 0, 7)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 9), (B, d))
+    g_csr = jax.grad(lambda lp: jnp.sum(
+        bloom_decode_pallas(lp, H, b_tile=4, v_tile=64, interpret=True,
+                            bwd_impl="csr", m_tile=m_tile,
+                            e_tile=16) * cot))(logp)
+    g_ref = jax.grad(lambda lp: jnp.sum(
+        ref.bloom_decode_ref(lp, H) * cot))(logp)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    assert np.all(np.asarray(g_csr)[:, 7:] == 0.0)
+
+
+def test_ops_decode_grad_uses_cached_bins():
+    """ops.bloom_decode's csr path rides the per-spec cached bins thunk
+    and still matches the XLA Eq. 3 gradient; forward-only calls never
+    build the bins (the thunk resolves at backward-trace time only)."""
+    from repro.core.bloom import cached_decode_bins, decode_scores
+    from repro.kernels.bloom_csr import CSR_E_TILE
+    from repro.kernels.common import BWD_M_TILE
+    spec = BloomSpec(d=500, m=128, k=4, seed=3)
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (3, 128)))
+    cot = jax.random.normal(jax.random.fold_in(KEY, 9), (3, 500))
+
+    # forward-only: no bins are built for a never-differentiated spec
+    spec_fwd = BloomSpec(d=500, m=128, k=4, seed=4)
+    hits0 = cached_decode_bins.cache_info().currsize
+    ops.bloom_decode(logp, spec_fwd)
+    assert cached_decode_bins.cache_info().currsize == hits0, \
+        "forward-only bloom_decode must not pay the binning sort"
+
+    # the hardest path: grad under an OUTER user jit — the bins thunk
+    # resolves inside the backward trace, and both per-spec caches must
+    # come out holding CONCRETE arrays (ensure_compile_time_eval), never
+    # the outer trace's tracers
+    g_csr = jax.grad(jax.jit(lambda lp: jnp.sum(
+        ops.bloom_decode(lp, spec) * cot)))(logp)
+    g_ref = jax.grad(lambda lp: jnp.sum(
+        decode_scores(spec, lp) * cot))(logp)
+    np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+    # the grad above populated the cache with concrete, eagerly-usable
+    # arrays; hits return the same object
+    b1 = cached_decode_bins(spec, BWD_M_TILE, CSR_E_TILE)
+    b2 = cached_decode_bins(spec, BWD_M_TILE, CSR_E_TILE)
+    assert b1.tok is b2.tok
+    assert int(np.asarray(b1.tile_len).sum()) == spec.d * spec.k
+    # and an eager (un-jitted) grad after the jitted one still works
+    g_eager = jax.grad(lambda lp: jnp.sum(
+        ops.bloom_decode(lp, spec) * cot))(logp)
+    np.testing.assert_allclose(np.asarray(g_eager), np.asarray(g_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_bin_csr_layout_invariants():
+    """The binning pass is a permutation: every (source row, m index)
+    entry lands in exactly one live slot of a tile owned by its m-block;
+    tiles are sorted by block, every block owns >= 1 tile, and pad slots
+    are sentinel-valued."""
+    from repro.kernels.bloom_csr import bin_csr, csr_tile_counts
+    T, k, m, m_tile, e_tile = 23, 5, 150, 32, 8
+    idx = jax.random.randint(jax.random.fold_in(KEY, 7), (T, k), 0, m)
+    bins = bin_csr(idx, m, m_tile=m_tile, e_tile=e_tile)
+    nM, NT, et = csr_tile_counts(m, T * k, m_tile, e_tile)
+    assert et == e_tile and bins.n_tiles == NT and bins.e_tile == e_tile
+
+    tok = np.asarray(bins.tok)
+    val = np.asarray(bins.val)[:, 0]
+    tmb = np.asarray(bins.tile_mb)
+    tfirst = np.asarray(bins.tile_first)
+    tlen = np.asarray(bins.tile_len)
+
+    # live (tok, val) pairs == the original (row, idx) entries, as multisets
+    live = val >= 0
+    got = sorted(zip(tok[live].tolist(), val[live].tolist()))
+    want = sorted((t, int(v)) for t, row in enumerate(np.asarray(idx))
+                  for v in row)
+    assert got == want
+    # tiles ascend by block; every block appears; first flags mark runs
+    assert (np.diff(tmb) >= 0).all()
+    assert set(range(nM)) <= set(tmb.tolist())
+    assert tfirst.sum() == nM
+    for t in range(NT):
+        s = slice(t * e_tile, (t + 1) * e_tile)
+        v = val[s]
+        assert (v[:tlen[t]] >= 0).all()            # live prefix ...
+        assert (v[tlen[t]:] == -1).all()           # ... then pad slots
+        if tlen[t]:
+            assert ((v[:tlen[t]] // m_tile) == tmb[t]).all()
+    assert tlen.sum() == T * k
+
+
+def test_bwd_impl_validation():
+    table = jax.random.normal(KEY, (32, 16))
+    idx = jax.random.randint(KEY, (4, 2), 0, 32)
+    with pytest.raises(ValueError, match="bwd_impl"):
+        bloom_embed_pallas(table, idx, interpret=True, bwd_impl="nope")
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (2, 32)))
+    H = jax.random.randint(KEY, (50, 2), 0, 32)
+    with pytest.raises(ValueError, match="bwd_impl"):
+        bloom_decode_pallas(logp, H, interpret=True, bwd_impl="nope")
+
+
+def test_csr_bins_tiling_mismatch_is_rejected():
+    """Bins carry (m, m_tile) as static metadata; the kernel entry must
+    refuse bins built for a different tiling instead of silently
+    scattering into the wrong output blocks."""
+    from repro.kernels.bloom_csr import bin_csr, csr_scatter_add_pallas
+    m, D, T, k = 96, 24, 6, 2
+    idx = jax.random.randint(jax.random.fold_in(KEY, 4), (T, k), 0, m)
+    g = jax.random.normal(KEY, (T, D))
+    bins = bin_csr(idx, m, m_tile=16, e_tile=4)
+    with pytest.raises(ValueError, match="mismatched bins"):
+        csr_scatter_add_pallas(g, bins, m, m_tile=32, interpret=True)
+    with pytest.raises(ValueError, match="mismatched bins"):
+        csr_scatter_add_pallas(g, bins, m - 32, m_tile=16, interpret=True)
+
+
 def test_interpret_defaults_to_backend_autodetect():
     """Satellite: no `interpret=` arg must NOT force interpret mode on TPU —
     kernels resolve it from the backend (True here: CPU test box)."""
@@ -282,13 +507,16 @@ def test_interpret_defaults_to_backend_autodetect():
                                rtol=1e-6, atol=1e-6)
 
 
-def test_grad_through_model_pallas_vs_xla():
-    """jax.grad of the full LM loss: io_impl='pallas' == io_impl='xla'."""
+@pytest.mark.parametrize("bwd_impl", ["csr", "dense"])
+def test_grad_through_model_pallas_vs_xla(bwd_impl):
+    """jax.grad of the full LM loss: io_impl='pallas' == io_impl='xla'
+    for both Bloom backwards (csr is the ModelConfig default)."""
     import dataclasses
     from repro import configs
     from repro.models import transformer as tf
     cfg_x = configs.get_smoke_config("qwen3-4b", dtype="float32")
-    cfg_p = dataclasses.replace(cfg_x, io_impl="pallas")
+    cfg_p = dataclasses.replace(cfg_x, io_impl="pallas",
+                                bwd_impl=bwd_impl)
     params = tf.lm_init(KEY, cfg_x)
     toks = jax.random.randint(KEY, (2, 8), 0, cfg_x.vocab)
 
