@@ -2,7 +2,9 @@
 seeded mixed-length workload (serving/loadgen.py), per architecture, plus
 model-free replays of the gossiped multi-host schedule
 (``sched.sharded_*`` rows — scheduler.simulate_sharded_schedule over
-per-host loadgen streams, DESIGN.md §8).
+per-host loadgen streams, DESIGN.md §8).  The ``sched.sharded_kill1``
+row replays the h4x2_d1 workload under a committed mid-traffic host
+kill (DESIGN.md §10) and pins the recovery overhead in decode steps.
 
 Every row is a *deterministic simulation*: decode-step counts, slot
 utilization and mean latency are pure functions of (workload seed,
@@ -28,7 +30,7 @@ import jax
 
 from repro import configs
 from repro.launch import steps as steps_lib
-from repro.serving import (Engine, LoadSpec, mean_latency,
+from repro.serving import (Engine, FailPlan, LoadSpec, mean_latency,
                            mixed_length_workload, sharded_workload,
                            simulate_sharded_schedule)
 
@@ -60,6 +62,17 @@ SHARDED_CASES = [
     (4, 2, 4, 2, 0, None),
     (4, 4, 6, 1, 0, None),
     (4, 4, 6, 1, 0, 0.25),
+]
+
+# The chaos row (failure-model satellite): replay the h4x2_d1 workload
+# with host 1 killed mid-traffic — the same committed kill schedule the
+# CI chaos job drives through sim_multihost.  Every request must still
+# complete (the HOST_DOWN reclaim re-queues host 1's in-flight work),
+# nothing is rejected, and the extra decode steps over the fault-free
+# twin — the price of re-prefilling the reclaimed requests — are pinned
+# as ``recovery_overhead_steps``.
+SHARDED_KILL_CASES = [
+    (4, 2, 4, 1, 0, None, "kill_host:1@3"),
 ]
 
 
@@ -113,11 +126,12 @@ def _sharded_spec(n_requests: int, seed: int) -> LoadSpec:
 
 def _run_sharded_case(n_hosts: int, slots_per_host: int, n_requests: int,
                       gossip_delay: int, seed: int,
-                      compact_threshold=None):
+                      compact_threshold=None, failpoints=None):
     per_host = sharded_workload(_sharded_spec(n_requests, seed), n_hosts)
     sched, st = simulate_sharded_schedule(
         per_host, slots_per_host, gossip_delay,
-        compact_threshold=compact_threshold)
+        compact_threshold=compact_threshold,
+        failpoints=FailPlan.parse(failpoints) if failpoints else None)
     results = {r.rid: r for reqs in per_host for r in reqs}
     assert all(r.done for r in results.values())
     name = f"sched.sharded_h{n_hosts}x{slots_per_host}_d{gossip_delay}"
@@ -144,6 +158,21 @@ def _run_sharded_case(n_hosts: int, slots_per_host: int, n_requests: int,
         assert st.compactions > 0, (
             f"{row['name']}: compaction case never compacted — the row "
             "would silently pin nothing")
+    if failpoints is not None:
+        # the kill row keeps the fault-free twin's workload so the
+        # recovery overhead is a pure schedule diff, computed in run()
+        row["name"] = "sched.sharded_kill1"
+        row["fault_free_twin"] = name
+        row["failpoints"] = failpoints
+        row["host_downs"] = st.host_downs
+        row["requeued"] = st.requeued
+        row["rejects"] = st.rejects
+        assert st.requeued > 0, (
+            f"{row['name']}: the kill reclaimed nothing — the row would "
+            "silently pin a fault-free schedule; move the kill step "
+            "inside the arrival span")
+        assert st.rejects == 0, (
+            f"{row['name']}: recovery dropped {st.rejects} requests")
     return row
 
 
@@ -152,6 +181,8 @@ def run():
     for arch, n_slots, n_requests, seed in CASES:
         rows.extend(_run_case(arch, n_slots, n_requests, seed))
     for case in SHARDED_CASES:
+        rows.append(_run_sharded_case(*case))
+    for case in SHARDED_KILL_CASES:
         rows.append(_run_sharded_case(*case))
     # compaction schedule-invariance: every _c row must replay the exact
     # step counts of its no-compaction twin (slot ids move, steps don't)
@@ -169,13 +200,31 @@ def run():
             assert r[f] == twin[f], (
                 f"{r['name']}.{f}: compaction changed the schedule "
                 f"({twin[f]} -> {r[f]})")
+    # recovery overhead: the kill row replays its fault-free twin's
+    # workload, so the decode-step delta is exactly what the mid-traffic
+    # host loss cost (re-prefill + re-decode of the reclaimed requests)
+    for r in rows:
+        twin_name = r.get("fault_free_twin")
+        if twin_name is None:
+            continue
+        twin = by_name.get(twin_name)
+        assert twin is not None, (
+            f"{r['name']}: fault-free twin {twin_name} missing from "
+            "SHARDED_CASES — the recovery overhead has no baseline")
+        overhead = r["decode_steps"] - twin["decode_steps"]
+        assert overhead >= 0, (
+            f"{r['name']}: killing a host SHORTENED the schedule "
+            f"({twin['decode_steps']} -> {r['decode_steps']})")
+        r["recovery_overhead_steps"] = overhead
     return rows
 
 
 # deterministic simulation outputs; wall-clock fields are excluded
 CHECKED_FIELDS = ("decode_steps", "slot_steps_total", "slot_steps_active",
                   "utilization", "tokens_out", "mean_latency_steps",
-                  "decode_step_speedup", "utilization_gain", "compactions")
+                  "decode_step_speedup", "utilization_gain", "compactions",
+                  "host_downs", "requeued", "rejects",
+                  "recovery_overhead_steps")
 
 
 def write_json(rows, path=JSON_PATH):

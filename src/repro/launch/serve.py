@@ -36,8 +36,8 @@ from repro.launch.sharding import DistContext
 from repro.models import encdec as encdec_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
-from repro.serving import (Engine, LoadSpec, ShardedEngine, make_workload,
-                           mean_latency, sharded_workload)
+from repro.serving import (Engine, FailPlan, LoadSpec, ShardedEngine,
+                           make_workload, mean_latency, sharded_workload)
 
 
 def pad_caches_to(caches_small, caches_template):
@@ -123,7 +123,8 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
                    rate: float = 1.0, prompt_len: int = 32, gen: int = 16,
                    topk: int = 8, seed: int = 0, full: bool = False,
                    io_impl: str | None = None, eos_id: int | None = None,
-                   prefill_workers: int = 1):
+                   prefill_workers: int = 1,
+                   failpoints: str | None = None):
     """Continuous batching over a seeded Poisson workload."""
     cfg = _config(arch, full, io_impl)
     if not Engine.supports(cfg):       # before paying for param init
@@ -139,8 +140,12 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
 
     engine = Engine(cfg, params, n_slots=slots, max_len=max_len,
                     topk=topk, eos_id=eos_id, dist=dist,
-                    prefill_workers=prefill_workers)
+                    prefill_workers=prefill_workers,
+                    failpoints=FailPlan.parse(failpoints))
     results, stats = engine.run(workload)
+    if stats.rejects:
+        print(f"rejected {stats.rejects} requests "
+              f"(prefill attempts exhausted)")
 
     row = stats.as_row()
     print(f"served {len(results)} requests on {slots} slots: "
@@ -162,14 +167,18 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
                 io_impl: str | None = None, eos_id: int | None = None,
                 gossip_delay: int = 1, transport: str = "sim",
                 prefill_workers: int = 1,
-                compact_threshold: float | None = None):
+                compact_threshold: float | None = None,
+                failpoints: str | None = None):
     """Data-axis-sharded serving over per-host arrival streams.
 
     One simulated host per `data` shard — run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate an
     8-host topology on CPU (DESIGN.md §8/§9).  `requests` is PER HOST.
     Defaults (sim transport, one prefill worker, no compaction) are
-    exactly PR 3's behavior.
+    exactly PR 3's behavior.  ``failpoints`` replays a deterministic
+    failure schedule (serving/failpoints.py grammar) against the run,
+    e.g. ``kill_host:1@3`` — survivors reclaim the dead host's slots and
+    finish every request.
     """
     cfg = _config(arch, full, io_impl)
     if not Engine.supports(cfg):       # before paying for param init
@@ -193,7 +202,8 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
                            topk=topk, eos_id=eos_id,
                            gossip_delay=gossip_delay, transport=transport,
                            prefill_workers=prefill_workers,
-                           compact_threshold=compact_threshold)
+                           compact_threshold=compact_threshold,
+                           failpoints=FailPlan.parse(failpoints))
     results, stats = engine.run(per_host)
 
     row = stats.as_row()
@@ -205,6 +215,9 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
           f"{row['compactions']} compactions, "
           f"utilization {row['utilization']:.2f}, "
           f"mean latency {mean_latency(results):.1f} steps")
+    if failpoints:
+        print(f"failpoints {failpoints!r}: {stats.host_downs} host_downs, "
+              f"{stats.requeued} requeued, {stats.rejects} rejects")
     print(f"wall {stats.wall_s*1e3:.0f} ms "
           f"({stats.tokens_out/max(stats.wall_s, 1e-9):.0f} tok/s)")
     return results, stats
@@ -258,6 +271,11 @@ def main():
     ap.add_argument("--io-impl", choices=("xla", "pallas"), default=None,
                     help="override cfg.io_impl (pallas = fused Bloom "
                          "kernels incl. streaming decode-topk)")
+    ap.add_argument("--failpoints", default=None,
+                    help="deterministic fault schedule "
+                         "(serving/failpoints.py grammar), e.g. "
+                         "'kill_host:1@3,fail_prefill:2:3'; host kills "
+                         "need --sharded")
     args = ap.parse_args()
     if args.static:
         run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
@@ -272,14 +290,16 @@ def main():
                     gossip_delay=args.gossip_delay,
                     transport=args.transport,
                     prefill_workers=args.prefill_workers,
-                    compact_threshold=args.compact_threshold)
+                    compact_threshold=args.compact_threshold,
+                    failpoints=args.failpoints)
     else:
         run_continuous(args.arch, slots=args.slots, requests=args.requests,
                        rate=args.rate, prompt_len=args.prompt_len,
                        gen=args.gen, topk=args.topk, seed=args.seed,
                        full=args.full, io_impl=args.io_impl,
                        eos_id=args.eos_id,
-                       prefill_workers=args.prefill_workers)
+                       prefill_workers=args.prefill_workers,
+                       failpoints=args.failpoints)
 
 
 if __name__ == "__main__":

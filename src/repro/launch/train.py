@@ -43,6 +43,7 @@ from repro.launch.mesh import make_local_mesh
 from repro.launch.sharding import DistContext, param_pspecs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.optim import optimizers as opt_lib
+from repro.serving.failpoints import FailPlan
 
 
 def run(arch: str, steps: int = 100, batch: int = 8, seq: int = 64,
@@ -50,7 +51,8 @@ def run(arch: str, steps: int = 100, batch: int = 8, seq: int = 64,
         bloom: bool = True, log_every: int = 10, microbatch: int = 0,
         grad_compression: str = "none", seed: int = 0,
         fault_at: int = -1, learning_rate: float = 3e-3,
-        io_impl: str | None = None, bwd_impl: str | None = None):
+        io_impl: str | None = None, bwd_impl: str | None = None,
+        failpoints: str | None = None):
     cfg = (configs.get_config(arch, bloom=bloom) if full
            else configs.get_smoke_config(arch))
     import dataclasses
@@ -103,11 +105,19 @@ def run(arch: str, steps: int = 100, batch: int = 8, seq: int = 64,
                 it.restore(extra["data"])
             print(f"resumed from step {rstep}")
 
+    # Fault injection goes through the same seeded registry the serving
+    # stack uses (serving/failpoints.py); --fault-at is sugar for
+    # `train_fault@S`, and both compose in one plan.
+    plan = FailPlan.parse(failpoints)
+    if fault_at >= 0:
+        plan = plan.merge(FailPlan.parse(f"train_fault@{fault_at}"))
+    fault_hook = plan.train_hook()
+
     history = []
     t_start = time.perf_counter()
     for s in range(start_step, steps):
-        if s == fault_at:
-            raise RuntimeError(f"induced fault at step {s}")  # test hook
+        if fault_hook is not None:
+            fault_hook(s)
         arrays = next(it)
         t0 = time.perf_counter()
         params, opt_state, metrics = step_jit(params, opt_state,
@@ -144,7 +154,11 @@ def main():
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "bf16"])
     ap.add_argument("--fault-at", type=int, default=-1,
-                    help="raise at this step (fault-tolerance demo)")
+                    help="raise at this step (fault-tolerance demo); "
+                         "sugar for --failpoints train_fault@S")
+    ap.add_argument("--failpoints", default=None,
+                    help="failpoint spec (serving/failpoints.py grammar), "
+                         "e.g. train_fault@7")
     ap.add_argument("--io-impl", default=None, choices=["xla", "pallas"],
                     help="override cfg.io_impl (pallas = fused Bloom "
                          "embed/CE kernels in the train step)")
@@ -157,7 +171,7 @@ def main():
         ckpt_dir=args.ckpt, full=args.full, bloom=not args.no_bloom,
         microbatch=args.microbatch, grad_compression=args.grad_compression,
         fault_at=args.fault_at, io_impl=args.io_impl,
-        bwd_impl=args.bwd_impl)
+        bwd_impl=args.bwd_impl, failpoints=args.failpoints)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
 """Continuous-batching serving engine (DESIGN.md §7–§9).
 
 control.py      — control plane: pure replicated state machine
-                  (apply_deltas/compute_admissions), compaction planning,
+                  (apply_deltas/compute_admissions), membership + epochs
+                  (HOST_DOWN reclaim/re-queue), compaction planning,
                   the shared EventLog + replay helper, and the Transport
                   implementations (SimTransport, CollectiveTransport)
+                  with per-round digest checks + deadlines
+failpoints.py   — seeded deterministic fault injection (FailPlan): one
+                  spec string replays the identical failure schedule in
+                  the engine, the model-free sim, the bench and CI
 collective.py   — the device all_gather behind CollectiveTransport
 scheduler.py    — JAX-free RequestQueue/Scheduler (slot admission policy),
                   ShardedScheduler (transported multi-host admission),
@@ -22,8 +27,12 @@ from repro.serving.control import (CollectiveTransport, ControlState,
                                    Transport, apply_deltas,
                                    compute_admissions, plan_compaction,
                                    replay_slot_log)
-from repro.serving.engine import Engine, PrefillPool, PrefillWorker, \
-    ServeStats, mean_latency
+from repro.serving.control import (HOST_DOWN, ReplicaDivergence,
+                                   TransportTimeout, control_digest)
+from repro.serving.engine import Engine, PrefillFault, PrefillPool, \
+    PrefillWorker, ServeStats, mean_latency
+from repro.serving.failpoints import (FailPlan, Failpoint,
+                                      PREFILL_MAX_ATTEMPTS)
 from repro.serving.loadgen import LoadSpec, burst_workload, host_stream, \
     make_workload, merge_workloads, mixed_length_workload, sharded_workload
 from repro.serving.scheduler import Request, RequestQueue, ScheduleClient, \
@@ -38,4 +47,7 @@ __all__ = ["Engine", "PrefillPool", "PrefillWorker", "ServeStats",
            "run_schedule", "simulate_sharded_schedule",
            "CollectiveTransport", "ControlState", "Delta", "EventLog",
            "SimTransport", "Transport", "apply_deltas",
-           "compute_admissions", "plan_compaction", "replay_slot_log"]
+           "compute_admissions", "plan_compaction", "replay_slot_log",
+           "FailPlan", "Failpoint", "PREFILL_MAX_ATTEMPTS",
+           "PrefillFault", "HOST_DOWN", "ReplicaDivergence",
+           "TransportTimeout", "control_digest"]

@@ -9,8 +9,10 @@ real device collective — the single-process multi-controller stand-in the
 multi-host sim proves — and the same shard_map runs unchanged under
 jax.distributed with one process per host.
 
-The buffer shape is static (capacity x DELTA_FIELDS), so the gather
-compiles exactly once per transport.
+The buffer shape is static ((capacity + 1) x DELTA_FIELDS — the extra
+row carries each host's replicated-state digest, DESIGN.md §10), so the
+gather compiles exactly once per transport: fault injection never
+changes the collective's shape, only the row contents.
 """
 from __future__ import annotations
 

@@ -47,8 +47,14 @@ from repro.configs.base import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
+from repro.serving.failpoints import FailPlan, PREFILL_MAX_ATTEMPTS
 from repro.serving.scheduler import (Request, RequestQueue, Scheduler,
                                      ServeStats)
+
+
+class PrefillFault(RuntimeError):
+    """Injected prefill failure (FailPlan ``fail_prefill``) — raised at
+    the same point a real worker crash would surface."""
 
 
 def assert_request_fits(req: Request, max_len: int) -> None:
@@ -115,10 +121,18 @@ class PrefillPool:
     (``wait_units``, in prompt-length units) that tests assert shrinks as
     workers are added.  A real deployment runs each worker's jitted
     callables on its own mesh slice asynchronously.
+
+    A worker raising mid-prefill no longer loses the request (it used to
+    escape the pool and strand the slot): the job retries on the next
+    worker, up to ``PREFILL_MAX_ATTEMPTS`` attempts, then surfaces as a
+    ``None`` result — the scheduler turns that into a REJECT event
+    instead of hanging.  Injected faults (``FailPlan.fail_prefill``)
+    raise at the same point a real crash would.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, topk: int,
-                 n_workers: int = 1, devices=None, dist=None):
+                 n_workers: int = 1, devices=None, dist=None,
+                 failpoints: Optional[FailPlan] = None):
         assert n_workers >= 1
         if devices is None:
             devices = [None]
@@ -134,19 +148,51 @@ class PrefillPool:
                                                dist=dist, device=dev)
             self.workers.append(by_device[dev])
         self.n_workers = n_workers
+        self.failpoints = failpoints if failpoints else None
         self._fifo: List[Request] = []
         self._busy = [0.0] * n_workers     # virtual per-worker clock
         self.stats = {"jobs": 0, "max_queue_depth": 0, "wait_units": 0.0,
-                      "per_worker": [0] * n_workers}
+                      "per_worker": [0] * n_workers, "retries": 0,
+                      "rejects": 0}
 
     def submit(self, req: Request) -> None:
         self._fifo.append(req)
         self.stats["max_queue_depth"] = max(self.stats["max_queue_depth"],
                                             len(self._fifo))
 
-    def drain(self) -> List[Tuple[object, int]]:
+    def _attempt(self, req: Request, w0: int,
+                 base: float) -> Optional[Tuple[object, int]]:
+        """Run ``req``'s prefill with retry-on-another-worker: attempt k
+        lands on worker (w0 + k) % n_workers, so a crashed worker's jobs
+        migrate off it.  Accounting (virtual clocks, per-worker counts)
+        records only the attempt that completed — the failure-free path
+        is step-for-step identical to the pre-retry pool.  Returns None
+        once the attempt cap is exhausted (the REJECT path)."""
+        for attempt in range(PREFILL_MAX_ATTEMPTS):
+            w = (w0 + attempt) % self.n_workers
+            try:
+                if (self.failpoints is not None
+                        and self.failpoints.prefill_attempt_fails(
+                            req.rid, attempt)):
+                    raise PrefillFault(
+                        f"injected prefill fault: rid {req.rid} "
+                        f"attempt {attempt} on worker {w}")
+                res = self.workers[w].prefill(req)
+            except Exception:
+                self.stats["retries"] += 1
+                continue
+            self.stats["wait_units"] += self._busy[w] - base
+            self._busy[w] += float(req.prompt_len)
+            self.stats["per_worker"][w] += 1
+            self.stats["jobs"] += 1
+            return res
+        self.stats["rejects"] += 1
+        return None
+
+    def drain(self) -> List[Optional[Tuple[object, int]]]:
         """Dispatch every queued job FIFO to the earliest-available
-        worker; returns (caches, first_token) per job in submit order."""
+        worker; returns (caches, first_token) per job in submit order —
+        None for a job whose every attempt failed."""
         out = []
         base = max(self._busy) if self._fifo else 0.0
         # a fresh burst starts all workers at the same origin: only the
@@ -154,15 +200,12 @@ class PrefillPool:
         self._busy = [base] * self.n_workers
         for req in self._fifo:
             w = min(range(self.n_workers), key=lambda i: (self._busy[i], i))
-            self.stats["wait_units"] += self._busy[w] - base
-            self._busy[w] += float(req.prompt_len)
-            self.stats["per_worker"][w] += 1
-            self.stats["jobs"] += 1
-            out.append(self.workers[w].prefill(req))
+            out.append(self._attempt(req, w, base))
         self._fifo = []
         return out
 
-    def prefill_all(self, reqs: List[Request]) -> List[Tuple[object, int]]:
+    def prefill_all(self, reqs: List[Request]
+                    ) -> List[Optional[Tuple[object, int]]]:
         for r in reqs:
             self.submit(r)
         return self.drain()
@@ -190,7 +233,8 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  max_len: int, topk: int = 8,
                  eos_id: Optional[int] = None, dist=None,
-                 prefill_workers: int = 1):
+                 prefill_workers: int = 1,
+                 failpoints: Optional[FailPlan] = None):
         if not Engine.supports(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: continuous batching serves decoder-only "
@@ -203,8 +247,10 @@ class Engine:
         self.max_len = max_len
         self.topk = topk
         self.eos_id = eos_id
+        self.failpoints = failpoints if failpoints else None
         self.prefill_pool = PrefillPool(cfg, params, topk=topk, dist=dist,
-                                        n_workers=prefill_workers)
+                                        n_workers=prefill_workers,
+                                        failpoints=self.failpoints)
         # the pool is donated through every decode/insert: the host loop
         # never reuses the previous tree, so XLA (where supported) updates
         # the multi-GB cache in place instead of allocating a second pool
@@ -253,7 +299,12 @@ class Engine:
         """Prefill one request (B=1, exact prompt length — bit-identical
         to serving it alone) and write its caches into its slot."""
         assert_request_fits(req, self.max_len)
-        (small, first), = self.prefill_pool.prefill_all([req])
+        res, = self.prefill_pool.prefill_all([req])
+        assert res is not None, (
+            f"request {req.rid}: prefill permanently failed on the "
+            "static path (no REJECT protocol there — serve it via the "
+            "continuous engine)")
+        small, first = res
         caches = self._insert(caches, small, jnp.int32(req.slot))
         return caches, first
 
@@ -285,7 +336,15 @@ class Engine:
             # order (token- and schedule-identical for any worker count)
             prefilled = (self.prefill_pool.prefill_all(admitted)
                          if admitted else [])
-            for req, (small, first) in zip(admitted, prefilled):
+            for req, res in zip(admitted, prefilled):
+                if res is None:
+                    # every prefill attempt failed: REJECT — free the
+                    # slot instead of hanging the pool on a request that
+                    # can never start
+                    stats.rejects += 1
+                    sched.reject(req.slot, now)
+                    continue
+                small, first = res
                 caches = self._insert(caches, small, jnp.int32(req.slot))
                 req.tokens.append(first)
                 stats.prefills += 1

@@ -117,3 +117,14 @@ def mixed_length_workload(vocab: int, n_requests: int = 12,
         n_requests=n_requests, vocab=vocab, rate=2.0,
         prompt_lens=(6, 10, 14), gen_lens=(3, 6, 20),
         gen_weights=(0.5, 0.3, 0.2), seed=seed))
+
+
+def arrival_span(per_host: list[list[Request]]) -> tuple[int, int]:
+    """(first, last) arrival step across per-host streams.  The chaos
+    paths (sim_multihost, bench_serving) use it to place a host kill
+    mid-traffic — strictly after the first arrival, before the last —
+    so the kill is guaranteed to find in-flight work for ANY seed."""
+    arrivals = [r.arrival_step for reqs in per_host for r in reqs]
+    if not arrivals:
+        return (0, 0)
+    return (min(arrivals), max(arrivals))

@@ -42,9 +42,10 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving import control as control_lib
-from repro.serving.control import (ARRIVE, RELEASE, ControlState, Delta,
-                                   EventLog, HostShard, SimTransport,
-                                   Transport)
+from repro.serving.control import (ARRIVE, HOST_DOWN, RELEASE,
+                                   ControlState, Delta, EventLog,
+                                   HostShard, SimTransport, Transport)
+from repro.serving.failpoints import FailPlan, PREFILL_MAX_ATTEMPTS
 
 
 @dataclasses.dataclass
@@ -62,6 +63,8 @@ class Request:
     admitted_step: int = -1
     finish_step: int = -1
     slot: int = -1
+    rejected: bool = False             # prefill permanently failed
+    requeues: int = 0                  # times reclaimed by a HOST_DOWN
 
     @property
     def prompt_len(self) -> int:
@@ -85,6 +88,12 @@ class ServeStats:
     prefills: int = 0
     tokens_out: int = 0
     compactions: int = 0             # COMPACT events executed
+    # failure path (all zero on a fault-free run; as_row() omits them on
+    # purpose — the committed bench baselines only carry them on rows
+    # that exercise the failure model)
+    host_downs: int = 0              # HOST_DOWN deltas applied
+    requeued: int = 0                # in-flight requests reclaimed
+    rejects: int = 0                 # prefill-exhausted REJECTs
     wall_s: float = 0.0
 
     @property
@@ -165,6 +174,10 @@ class Scheduler:
     def compactions(self):
         return self.log.compactions
 
+    @property
+    def rejects(self):
+        return self.log.rejects
+
     # ------------------------------------------------------------------
     @property
     def free_slots(self) -> List[int]:
@@ -205,6 +218,18 @@ class Scheduler:
         self.log.release(now, slot, req.rid)
         return req
 
+    def reject(self, slot: int, now: int) -> Request:
+        """Free a slot whose prefill permanently failed (REJECT event):
+        the request finishes unserved instead of hanging the pool."""
+        req = self._occupant[slot]
+        if req is None:
+            raise RuntimeError(f"slot {slot} rejected while free")
+        req.finish_step = now
+        req.rejected = True
+        self._occupant[slot] = None
+        self.log.reject(now, slot, req.rid)
+        return req
+
 
 # ---------------------------------------------------------------------------
 # Sharded (multi-host) admission: transport-carried replicated state machine
@@ -235,7 +260,8 @@ class ShardedScheduler:
     def __init__(self, n_hosts: int, slots_per_host: int,
                  gossip_delay: int = 1, *,
                  transport: Optional[Transport] = None,
-                 compact_threshold: Optional[float] = None):
+                 compact_threshold: Optional[float] = None,
+                 failpoints: Optional[FailPlan] = None):
         assert n_hosts >= 1 and slots_per_host >= 1 and gossip_delay >= 0
         self.n_hosts = n_hosts
         self.slots_per_host = slots_per_host
@@ -246,12 +272,28 @@ class ShardedScheduler:
         assert self.gossip_delay == gossip_delay, (
             "transport delay must match gossip_delay")
         self.compact_threshold = compact_threshold
+        self.failpoints = failpoints if failpoints else None
+        # one plan drives scheduler AND transport (kills here; arrival
+        # delays / round hangs / digest corruption in the transport) so a
+        # single spec replays the identical failure schedule everywhere
+        if (self.failpoints is not None
+                and getattr(self.transport, "failpoints", None) is None):
+            self.transport.failpoints = self.failpoints
+        if getattr(self.transport, "n_hosts", None) is None:
+            self.transport.n_hosts = n_hosts
         self.state = ControlState.fresh(n_hosts, slots_per_host)
         self.log = EventLog(n_hosts, slots_per_host)
         self._occupant: List[Optional[Request]] = [None] * self.n_slots
         self._requests: Dict[int, Request] = {}   # pushed, not admitted
         self._unsent: Dict[int, Request] = {}     # ARRIVE delta not sent
         self._stepped_at = -1
+        # membership: physically-dead hosts (local knowledge, applied the
+        # instant the kill lands) vs the replicated live view mirrored at
+        # the last apply (reclaims run when the two diverge)
+        self._dead_local: set = set()
+        self._applied_live = [True] * n_hosts
+        self._new_kills: List[int] = []
+        self._new_host_downs: List[Tuple[int, List[Request]]] = []
 
     # ------------------------------------------------------------------
     @property
@@ -265,6 +307,18 @@ class ShardedScheduler:
     @property
     def compactions(self):
         return self.log.compactions
+
+    @property
+    def rejects(self):
+        return self.log.rejects
+
+    @property
+    def reclaims(self):
+        return self.log.reclaims
+
+    @property
+    def host_downs(self):
+        return self.log.host_downs
 
     @property
     def hosts(self) -> List[HostShard]:
@@ -291,7 +345,7 @@ class ShardedScheduler:
     # ------------------------------------------------------------------
     @property
     def n_active(self) -> int:
-        return sum(r is not None for r in self._occupant)
+        return len(self.active)
 
     @property
     def n_pending(self) -> int:
@@ -299,33 +353,83 @@ class ShardedScheduler:
 
     @property
     def active(self) -> Dict[int, Request]:
-        return {s: r for s, r in enumerate(self._occupant) if r is not None}
+        """Slots actually decoding: a physically-dead host's slots drop
+        out the moment the kill lands (the hardware is gone), even though
+        the replicated state reclaims them only at HOST_DOWN visibility."""
+        return {s: r for s, r in enumerate(self._occupant)
+                if r is not None
+                and self.host_of(s) not in self._dead_local}
+
+    @property
+    def recovery_pending(self) -> bool:
+        """True while a HOST_DOWN delta is still in flight — the run loop
+        must keep ticking so the reclaim (and re-admission) can land."""
+        return bool(self.transport.pending_recovery_vis())
 
     def host_of(self, gslot: int) -> int:
         return gslot // self.slots_per_host
 
+    def is_dead_slot(self, gslot: int) -> bool:
+        """True when the slot's host died physically — its assignments
+        are zombies until the HOST_DOWN reclaim re-queues them."""
+        return self.host_of(gslot) in self._dead_local
+
+    @property
+    def live_hosts(self) -> List[int]:
+        return [h for h in range(self.n_hosts)
+                if h not in self._dead_local]
+
     # ------------------------------------------------------------------
     def _flush_arrivals(self, now: int) -> None:
-        due = sorted((r for r in self._unsent.values()
-                      if r.arrival_step <= now),
-                     key=lambda r: (r.arrival_step, r.home, r.rid))
+        due = [r for r in self._unsent.values() if r.arrival_step <= now]
         for r in due:
+            if r.home in self._dead_local:
+                # the front door never routes new arrivals to a dead
+                # host: reroute deterministically to the lowest survivor
+                r.home = self.live_hosts[0]
+        for r in sorted(due, key=lambda r: (r.arrival_step, r.home,
+                                            r.rid)):
             self.transport.send(Delta(ARRIVE, r.arrival_step, r.home,
                                       r.rid))
             del self._unsent[r.rid]
 
+    def kill_host(self, host: int, now: int) -> None:
+        """Host ``host`` dies physically at ``now``: its slots stop
+        decoding immediately (``active`` excludes them from this step
+        on), and the lowest surviving host reports a HOST_DOWN delta —
+        every replica reclaims the dead range identically when the delta
+        becomes visible.  The victim cannot report its own death."""
+        assert host not in self._dead_local, f"host {host} killed twice"
+        survivors = [h for h in self.live_hosts if h != host]
+        if not survivors:
+            raise RuntimeError("cannot kill the last live host")
+        self._dead_local.add(host)
+        self._new_kills.append(host)
+        self.transport.send(Delta(HOST_DOWN, now, survivors[0], host))
+
     def begin_step(self, now: int) -> Optional[List[int]]:
-        """Advance the replicated state to ``now``: flush due arrivals
-        into the transport, apply every delta that has become visible,
-        then (with compaction enabled) evaluate the compaction plan.
-        Returns the remap permutation when this step compacts — the data
-        plane must apply it BEFORE this step's admissions/decode.  Safe
-        to call more than once per step (polling is idempotent; a second
-        compaction check sees the already-packed state)."""
+        """Advance the replicated state to ``now``: execute any planned
+        host kills, flush due arrivals into the transport, run the
+        digest-checked exchange, apply every delta that has become
+        visible (reconciling membership — reclaims + re-queues — when a
+        HOST_DOWN lands), then (with compaction enabled) evaluate the
+        compaction plan.  Returns the remap permutation when this step
+        compacts — the data plane must apply it BEFORE this step's
+        admissions/decode.  Safe to call more than once per step (kills
+        are once-only, polling is idempotent, a second compaction check
+        sees the already-packed state)."""
+        if self.failpoints is not None:
+            for h in self.failpoints.kills_at(now):
+                if h not in self._dead_local:
+                    self.kill_host(h, now)
         self._flush_arrivals(now)
-        delivered = self.transport.poll(now)
+        # digest of the pre-exchange state: every replica reports it into
+        # the round, so divergence crashes before it can schedule anything
+        digest = control_lib.control_digest(self.state)
+        delivered = self.transport.poll(now, digest=digest)
         if delivered:
             self.state = control_lib.apply_deltas(self.state, delivered)
+            self._reconcile_membership(now)
         self._stepped_at = now
         if self.compact_threshold is None:
             return None
@@ -336,6 +440,45 @@ class ShardedScheduler:
             return None
         self._execute_compaction(now, perm)
         return perm
+
+    def _reconcile_membership(self, now: int) -> None:
+        """Replicated deaths became visible: mirror the reclaim that
+        ``apply_deltas`` already performed on ``state`` into the
+        authoritative request map — log one reclaim per seized slot,
+        reset each seized request's generation (its partial tokens died
+        with the host; the decode contract regenerates them bit-identical
+        on re-admission) and return it to the pending pool under its
+        original arrival key."""
+        for h in range(self.n_hosts):
+            if not self._applied_live[h] or self.state.live[h]:
+                continue
+            self._applied_live[h] = False
+            self._dead_local.add(h)   # remote-reported death (no-op here)
+            reclaimed: List[Request] = []
+            for gslot in range(h * self.slots_per_host,
+                               (h + 1) * self.slots_per_host):
+                req = self._occupant[gslot]
+                if req is None:
+                    continue
+                self._occupant[gslot] = None
+                self.log.reclaim(now, gslot, req.rid)
+                req.slot = -1
+                req.admitted_step = -1
+                req.tokens = []
+                req.requeues += 1
+                assert req.rid not in self._requests
+                self._requests[req.rid] = req
+                reclaimed.append(req)
+            self.log.host_down(now, h, self.state.epoch)
+            self._new_host_downs.append((h, reclaimed))
+
+    def drain_kills(self) -> List[int]:
+        out, self._new_kills = self._new_kills, []
+        return out
+
+    def drain_host_downs(self) -> List[Tuple[int, List[Request]]]:
+        out, self._new_host_downs = self._new_host_downs, []
+        return out
 
     def _execute_compaction(self, now: int, perm: List[int]) -> None:
         # replicated state and the authoritative occupant map remap with
@@ -385,23 +528,44 @@ class ShardedScheduler:
                                   req.rid, gslot))
         return req
 
+    def reject(self, gslot: int, now: int) -> Request:
+        """Free a slot whose prefill permanently failed: a REJECT event
+        locally, a plain RELEASE delta to the replicated pool (the slot
+        is free either way — only the local log knows the request ended
+        unserved instead of retired)."""
+        req = self._occupant[gslot]
+        if req is None:
+            raise RuntimeError(f"slot {gslot} rejected while free")
+        req.finish_step = now
+        req.rejected = True
+        self._occupant[gslot] = None
+        self.log.reject(now, gslot, req.rid)
+        self.transport.send(Delta(RELEASE, now, self.host_of(gslot),
+                                  req.rid, gslot))
+        return req
+
     # ------------------------------------------------------------------
     def next_event_time(self, now: int) -> Optional[int]:
         """Earliest step >= now at which an admission could become
-        possible (a pending request or an in-flight release gossips into
-        visibility) — the engine fast-forwards the clock here when the
-        pool is empty.  Returns ``now`` itself when a slot freed during
-        this step's admissions is already visible (gossip_delay=0) while
-        a visible-ready request waits: the driver re-admits without a
-        clock tick instead of dropping the request."""
+        possible (a pending request gossips into visibility, an in-flight
+        release frees a slot, or an in-flight HOST_DOWN re-queues its
+        victims) — the engine fast-forwards the clock here when the pool
+        is empty.  Returns ``now`` itself when a slot freed during this
+        step's admissions is already visible (gossip_delay=0) while a
+        visible-ready request waits: the driver re-admits without a clock
+        tick instead of dropping the request."""
+        evs = (self.transport.pending_release_vis()
+               + self.transport.pending_recovery_vis())
         if not self._requests:
-            return None
-        ready_at = min(r.arrival_step
-                       for r in self._requests.values()) + self.gossip_delay
-        rel_vis = self.transport.pending_release_vis()
-        if ready_at <= now and any(v <= now for v in rel_vis):
+            # nothing queued, but an in-flight HOST_DOWN will re-queue
+            # its victims at visibility — the clock must reach it
+            cands = [c for c in evs if c > now]
+            return min(cands) if cands else None
+        ready_at = min(self.transport.arrive_visibility(r.arrival_step)
+                       for r in self._requests.values())
+        if ready_at <= now and any(v <= now for v in evs):
             return now
-        cands = [c for c in [ready_at] + rel_vis if c > now]
+        cands = [c for c in [ready_at] + evs if c > now]
         return min(cands) if cands else None
 
 
@@ -416,8 +580,10 @@ class ScheduleClient:
     loop is what makes the engine's event log equal the simulation's by
     construction — compaction decisions included."""
 
-    def prefill(self, reqs: List[Request]) -> List[int]:
-        """Admitted requests (in admission order) -> first token ids."""
+    def prefill(self, reqs: List[Request]) -> List[Optional[int]]:
+        """Admitted requests (in admission order) -> first token ids.
+        ``None`` for a request whose prefill permanently failed (every
+        retry exhausted): the loop REJECTs it instead of hanging."""
         raise NotImplementedError
 
     def stopped(self, req: Request, tok: int) -> bool:
@@ -440,6 +606,14 @@ class ScheduleClient:
     def compact(self, perm: List[int]) -> None:
         """Apply the COMPACT remap to the data plane (perm[new]=old)."""
 
+    def host_killed(self, host: int) -> None:
+        """``host`` died physically this step: its slot range must stop
+        decoding NOW (before HOST_DOWN visibility)."""
+
+    def host_down(self, host: int, reqs: List[Request]) -> None:
+        """``host``'s death became visible; ``reqs`` were reclaimed and
+        re-queued.  The data plane may scrub the dead range."""
+
 
 def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
                  stats: Optional[ServeStats] = None) -> ServeStats:
@@ -450,14 +624,31 @@ def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
     stats = stats or ServeStats()
     stalls = 0
     now = 0
-    while sched.n_pending or sched.n_active:
+    while sched.n_pending or sched.n_active or sched.recovery_pending:
         perm = sched.begin_step(now)
+        for host in sched.drain_kills():
+            client.host_killed(host)
+        for host, reqs in sched.drain_host_downs():
+            stats.host_downs += 1
+            stats.requeued += len(reqs)
+            client.host_down(host, reqs)
         if perm is not None:
             stats.compactions += 1
             client.compact(perm)
         admitted = sched.admit(now)
-        firsts = client.prefill(admitted) if admitted else []
-        for req, first in zip(admitted, firsts):
+        # an admission may land on a host that died physically while its
+        # HOST_DOWN is still in flight — the replicated assignment cannot
+        # know yet, and a dead host can neither prefill nor release.  The
+        # slot sits as a zombie (excluded from `active`) until the
+        # HOST_DOWN reclaim re-queues the request under its original key.
+        live_admits = [r for r in admitted
+                       if not sched.is_dead_slot(r.slot)]
+        firsts = client.prefill(live_admits) if live_admits else []
+        for req, first in zip(live_admits, firsts):
+            if first is None:
+                stats.rejects += 1
+                sched.reject(req.slot, now)
+                continue
             req.tokens.append(first)
             stats.prefills += 1
             stats.tokens_out += 1
@@ -502,28 +693,56 @@ def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
 class _SimClient(ScheduleClient):
     """Model-free placeholders: every request occupies its slot for
     exactly ``max_gen`` emitted tokens (1 at prefill/admission +
-    max_gen - 1 decode steps; no EOS), every token is -1."""
+    max_gen - 1 decode steps; no EOS).  Token i of request rid is the
+    pure function ``rid * _TOKEN_BASE + i`` — the same shape of contract
+    the real engine's greedy row-independent decode satisfies — so a
+    request reclaimed by a HOST_DOWN regenerates the bit-identical
+    stream on re-admission and the chaos properties can assert token
+    equality on the model-free sim too.  With a ``FailPlan``, prefill
+    mirrors the pool's retry loop via the shared pure predicate
+    ``FailPlan.prefill_rejects``."""
+
+    _TOKEN_BASE = 100_000
+
+    def __init__(self, failpoints: Optional[FailPlan] = None):
+        self.failpoints = failpoints if failpoints else None
+
+    def _tok(self, req):
+        return req.rid * self._TOKEN_BASE + len(req.tokens)
 
     def prefill(self, reqs):
-        return [-1] * len(reqs)
+        out = []
+        for r in reqs:
+            if (self.failpoints is not None
+                    and self.failpoints.prefill_rejects(
+                        r.rid, PREFILL_MAX_ATTEMPTS)):
+                out.append(None)
+            else:
+                out.append(self._tok(r))
+        return out
 
     def decode(self, active):
-        return {gslot: -1 for gslot in active}
+        return {gslot: self._tok(req) for gslot, req in active.items()}
 
 
 def simulate_sharded_schedule(per_host: List[List[Request]],
                               slots_per_host: int, gossip_delay: int = 1,
                               *, transport: Optional[Transport] = None,
                               compact_threshold: Optional[float] = None,
+                              failpoints: Optional[FailPlan] = None,
                               ) -> Tuple[ShardedScheduler, ServeStats]:
     """Model-free replay of the sharded engine's schedule — the SAME
     ``run_schedule`` loop over placeholder tokens, so the engine's event
-    log must match this one exactly, COMPACT events included (asserted by
-    tests/test_serving_multihost.py).  Deterministic integers only:
-    bench_serving.py commits its outputs as a CI baseline."""
+    log must match this one exactly, COMPACT / reclaim / reject events
+    included (asserted by tests/test_serving_multihost.py).
+    Deterministic integers only: bench_serving.py commits its outputs as
+    a CI baseline.  ``failpoints`` replays a failure schedule against
+    the placeholders — same kills, same requeues, same rejects as the
+    engine run with the same plan."""
     sched = ShardedScheduler(len(per_host), slots_per_host, gossip_delay,
                              transport=transport,
-                             compact_threshold=compact_threshold)
+                             compact_threshold=compact_threshold,
+                             failpoints=failpoints)
     sched.push_workloads(per_host)
-    stats = run_schedule(sched, _SimClient())
+    stats = run_schedule(sched, _SimClient(failpoints))
     return sched, stats

@@ -82,12 +82,18 @@ class _PoolClient(ScheduleClient):
         self.active = np.zeros((engine.n_slots,), bool)
         self.caches = engine._fresh_pool()
 
-    def prefill(self, reqs: List[Request]) -> List[int]:
+    def prefill(self, reqs: List[Request]) -> List[Optional[int]]:
         for req in reqs:
             engine_lib.assert_request_fits(req, self.e.max_len)
         firsts = []
-        for req, (small, first) in zip(
-                reqs, self.e.prefill_pool.prefill_all(reqs)):
+        for req, res in zip(reqs,
+                            self.e.prefill_pool.prefill_all(reqs)):
+            if res is None:
+                # attempt cap exhausted: no caches to insert — the loop
+                # REJECTs the slot, which stays inactive
+                firsts.append(None)
+                continue
+            small, first = res
             self.caches = self.e._insert(self.caches, small,
                                          jnp.int32(req.slot))
             firsts.append(first)
@@ -127,6 +133,25 @@ class _PoolClient(ScheduleClient):
         self.pos = self.pos[p]
         self.active = self.active[p]
 
+    def host_killed(self, host: int) -> None:
+        # the dead range stops decoding THIS step: clearing the active
+        # mask is the data plane's entire epoch change — decode is the
+        # occupancy-prefetched row-skipping grid, so surviving rows
+        # neither recompile (same shapes) nor change values (row
+        # independence); ≤1 recompile per epoch is trivially met at 0
+        lo = host * self.e.slots_per_host
+        self.active[lo:lo + self.e.slots_per_host] = False
+
+    def host_down(self, host: int, reqs: List[Request]) -> None:
+        # death is visible cluster-wide: scrub the dead range's host-side
+        # state so the next occupant starts from the same zeros a fresh
+        # pool would (cache rows are overwritten by insert at admission)
+        lo = host * self.e.slots_per_host
+        hi = lo + self.e.slots_per_host
+        self.tokens[lo:hi] = 0
+        self.pos[lo:hi] = 0
+        self.active[lo:hi] = False
+
 
 class ShardedEngine:
     """Continuous batching over a data-axis-sharded slot pool.
@@ -137,10 +162,14 @@ class ShardedEngine:
     (``loadgen.sharded_workload``) through the transported admission
     protocol.  Eligibility mirrors ``Engine.supports``.
 
-    ``transport`` / ``compact_threshold`` set the run defaults (both
-    overridable per ``run`` call): ``"sim"`` + ``None`` is exactly PR 3's
-    behavior; ``"collective"`` exchanges the same deltas over a real
-    device all_gather; a float threshold enables slot compaction.
+    ``transport`` / ``compact_threshold`` / ``failpoints`` set the run
+    defaults (all overridable per ``run`` call): ``"sim"`` + ``None`` is
+    exactly PR 3's behavior; ``"collective"`` exchanges the same deltas
+    over a real device all_gather; a float threshold enables slot
+    compaction; a ``FailPlan`` replays a deterministic failure schedule
+    (host kills, prefill faults, transport hangs, digest corruption)
+    against the run — recovery is part of the replicated schedule, so
+    the engine's event log still equals the model-free sim's.
     ``prefill_workers`` sizes the prefill pool over single-device slices
     of the mesh (worker i on device i mod n_devices) — the recovered
     tokens are identical for any worker count.
@@ -152,7 +181,8 @@ class ShardedEngine:
                  prefill_device=None, prefill_workers: int = 1,
                  transport: Union[str, Transport] = "sim",
                  compact_threshold: Optional[float] = None,
-                 collective_capacity: int = 8):
+                 collective_capacity: int = 8,
+                 failpoints=None):
         if not Engine.supports(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: sharded serving covers the same decoder-only "
@@ -171,6 +201,7 @@ class ShardedEngine:
         self.transport = transport
         self.compact_threshold = compact_threshold
         self.collective_capacity = collective_capacity
+        self.failpoints = failpoints if failpoints else None
 
         # decode-pool weights: explicitly replicated across the mesh so
         # every per-step input is committed and the step compiles once
@@ -249,21 +280,30 @@ class ShardedEngine:
     def run(self, per_host_requests: List[List[Request]], *,
             transport: Union[str, Transport, None] = None,
             compact_threshold: Union[float, None, str] = "default",
+            failpoints="default",
             ) -> Tuple[Dict[int, Request], ServeStats]:
         """Serve per-host arrival streams through the transported pool.
 
         The loop is LITERALLY ``scheduler.run_schedule`` — the same
         driver the model-free ``simulate_sharded_schedule`` runs — so
         with ``eos_id=None`` the engine's event log reproduces the
-        simulation's log integer-for-integer, COMPACT events included.
+        simulation's log integer-for-integer, COMPACT / reclaim / reject
+        events included: a ``FailPlan`` injects the same kills and
+        prefill faults into both.
         """
+        fp = self.failpoints if failpoints == "default" else (
+            failpoints if failpoints else None)
+        # the prefill pool consults the run's plan (it is engine-owned,
+        # so re-point it per run; None restores fault-free behavior)
+        self.prefill_pool.failpoints = fp
         sched = ShardedScheduler(
             self.n_hosts, self.slots_per_host, self.gossip_delay,
             transport=self._make_transport(
                 self.transport if transport is None else transport),
             compact_threshold=(self.compact_threshold
                                if compact_threshold == "default"
-                               else compact_threshold))
+                               else compact_threshold),
+            failpoints=fp)
         sched.push_workloads(per_host_requests)
         client = _PoolClient(self)
         t0 = time.perf_counter()

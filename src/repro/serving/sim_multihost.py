@@ -26,6 +26,20 @@ compile count across the WHOLE matrix (the single-compiled-step
 invariant must survive transports and compaction), and the prefill
 pool's dispatch stats.
 
+``chaos`` — the host-failure recovery drill (DESIGN.md §10): a 4-host
+mesh on the same 8-device topology serves the seeded workload while a
+committed ``FailPlan`` kills one host mid-traffic.  Engine runs through
+BOTH transports plus the model-free sim replay of the same plan, and
+``_verify_chaos`` asserts *in this process* (so the CI chaos job fails
+loudly, not just the pytest wrapper): every request completes, recovered
+tokens are BIT-identical to the fault-free twin, re-admissions preserve
+FIFO order, the engine log equals the sim log integer-for-integer
+(RECLAIM / HOST_DOWN events included), the slot log replays soundly, the
+drill actually requeued work (non-vacuous), and decode still compiled
+exactly once across the fault-free + kill runs (the dead range is an
+active-mask change, not a new executable).  ``--failpoints`` overrides
+the committed schedule.
+
 Usage:  python -m repro.serving.sim_multihost --out report.json
 """
 from __future__ import annotations
@@ -44,9 +58,11 @@ import jax
 from repro import configs
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_serving_mesh
-from repro.serving import (Engine, LoadSpec, ShardedEngine,
+from repro.serving import (Engine, FailPlan, LoadSpec, ShardedEngine,
                            merge_workloads, sharded_workload,
                            simulate_sharded_schedule)
+from repro.serving.control import replay_slot_log
+from repro.serving.loadgen import arrival_span
 
 ARCH = "qwen1.5-0.5b"
 N_HOSTS = 8
@@ -57,6 +73,12 @@ GOSSIP_DELAY = 1
 PREFILL_WORKERS = 2
 COMPACT_THRESHOLD = 0.25  # frag 0.5 (1 hole of 2 slots) crosses it
 
+# -- chaos drill (committed schedule; --failpoints overrides) -----------
+CHAOS_N_HOSTS = 4         # 4 of the 8 forced devices; kill 1 of 4 hosts
+CHAOS_KILL_HOST = 1
+CHAOS_KILL_STEP = 3       # inside arrival_span at seed 0: reclaims 2
+CHAOS_FAILPOINTS = f"kill_host:{CHAOS_KILL_HOST}@{CHAOS_KILL_STEP}"
+
 
 def _log_of(sched) -> dict:
     return {
@@ -64,10 +86,15 @@ def _log_of(sched) -> dict:
         "releases": sched.releases,
         "compactions": [(step, list(perm), seq)
                         for step, perm, seq in sched.compactions],
+        "rejects": sched.rejects,
+        "reclaims": sched.reclaims,
+        "host_downs": sched.host_downs,
         "per_host": [{"admissions": h.admissions,
                       "releases": h.releases,
                       "compactions": [(s, list(p), q)
-                                      for s, p, q in h.compactions]}
+                                      for s, p, q in h.compactions],
+                      "rejects": h.rejects,
+                      "reclaims": h.reclaims}
                      for h in sched.hosts],
     }
 
@@ -143,15 +170,151 @@ def run(seed: int = 0) -> dict:
     }
 
 
+def _verify_chaos(chaos: dict, arrival_key: dict) -> None:
+    """Hard asserts on the recovery drill — run in THIS process so the
+    CI chaos job fails on its own, without the pytest wrapper.
+    `arrival_key[rid]` is the original (arrival_step, home, rid) FIFO
+    key of each request."""
+    base = chaos["base"]
+    assert all(base["done"].values()), "fault-free twin did not finish"
+    for tname in ("sim", "collective"):
+        kr = chaos["kill_runs"][tname]
+        # 1. no request lost or rejected under a pure kill plan
+        assert all(kr["done"].values()), f"{tname}: lost requests"
+        assert kr["stats"]["rejects"] == 0, f"{tname}: spurious rejects"
+        # 2. the drill is non-vacuous: the kill reclaimed live work
+        assert kr["stats"]["host_downs"] == 1, f"{tname}: no HOST_DOWN"
+        assert kr["stats"]["requeued"] >= 1, (
+            f"{tname}: kill at step {chaos['kill_step']} reclaimed "
+            "nothing — move it inside the arrival span")
+        # 3. recovered tokens are BIT-identical to the fault-free twin
+        #    (greedy decode is pure in the prompt, so a re-prefilled
+        #    request regenerates its exact stream)
+        assert kr["tokens"] == base["tokens"], f"{tname}: token drift"
+        # 4. re-admissions preserve FIFO order among requeued requests:
+        #    each reclaimed rid's LAST admission is its re-admission;
+        #    within one HOST_DOWN wave the re-admissions must follow the
+        #    original (arrival_step, home, rid) keys (custom --failpoints
+        #    plans may kill several hosts at different steps — no global
+        #    order exists across waves)
+        last_adm = {}
+        wave = {}                      # rid -> its LAST reclaim step
+        for step, _, rid, _ in kr["log"]["reclaims"]:
+            wave[rid] = step
+        for _, _, rid, seq in kr["log"]["admissions"]:
+            if rid in wave:
+                last_adm[rid] = seq
+        assert set(last_adm) == set(wave), (
+            f"{tname}: reclaimed request never re-admitted")
+        for w in set(wave.values()):
+            order = sorted((rid for rid, s in wave.items() if s == w),
+                           key=last_adm.get)
+            keys = [arrival_key[rid] for rid in order]
+            assert keys == sorted(keys), (
+                f"{tname}: re-admissions out of FIFO order: {order}")
+        # 5. slot log replays soundly with RECLAIM events
+        replay_slot_log(kr["log"]["admissions"], kr["log"]["releases"],
+                        [(s, list(p), q) for s, p, q
+                         in kr["log"]["compactions"]],
+                        chaos["n_hosts"] * chaos["slots_per_host"],
+                        rejects=kr["log"]["rejects"],
+                        reclaims=kr["log"]["reclaims"])
+    # 6. engine log == model-free sim log, integer-for-integer
+    assert chaos["kill_runs"]["sim"]["log"] == chaos["kill_sim"]["log"], \
+        "engine/sim log divergence under kill"
+    assert (chaos["kill_runs"]["collective"]["log"]
+            == chaos["kill_sim"]["log"]), \
+        "collective transport log divergence under kill"
+    # 7. ONE compiled decode step across fault-free + both kill runs:
+    #    host death is an active-mask change, never a new executable
+    assert chaos["decode_compiles"] == 1, (
+        f"decode recompiled under host death: "
+        f"{chaos['decode_compiles']} executables")
+
+
+def run_chaos(seed: int = 0, failpoints: str | None = None) -> dict:
+    spec_str = CHAOS_FAILPOINTS if failpoints is None else failpoints
+    plan = FailPlan.parse(spec_str)
+    cfg = configs.get_smoke_config(ARCH)
+    params = steps_lib.cast_params_for_compute(
+        steps_lib.init_fn_for(cfg)(jax.random.PRNGKey(0)), cfg)
+    spec = LoadSpec(n_requests=2, vocab=cfg.vocab, rate=1.0,
+                    prompt_lens=(6, 10), gen_lens=(3, 6, 12), seed=seed)
+
+    def wl():
+        return sharded_workload(spec, CHAOS_N_HOSTS)
+
+    first, last = arrival_span(wl())
+    arrival_key = {r.rid: (r.arrival_step, r.home, r.rid)
+                   for reqs in wl() for r in reqs}
+
+    mesh = make_serving_mesh(n_hosts=CHAOS_N_HOSTS)
+    engine = ShardedEngine(cfg, params, mesh=mesh,
+                           slots_per_host=SLOTS_PER_HOST, max_len=MAX_LEN,
+                           topk=TOPK, gossip_delay=GOSSIP_DELAY,
+                           prefill_workers=PREFILL_WORKERS)
+
+    def pack(res, stats, sched) -> dict:
+        return {
+            "tokens": {r.rid: r.tokens for r in res.values()},
+            "done": {rid: r.done for rid, r in res.items()},
+            "stats": {**stats.as_row(), "host_downs": stats.host_downs,
+                      "requeued": stats.requeued,
+                      "rejects": stats.rejects},
+            "log": _log_of(sched),
+        }
+
+    base_res, base_stats = engine.run(wl(), transport="sim",
+                                      failpoints=None)
+    base = pack(base_res, base_stats, engine._sched)
+
+    kill_runs = {}
+    for tname in ("sim", "collective"):
+        res, stats = engine.run(wl(), transport=tname, failpoints=plan)
+        kill_runs[tname] = pack(res, stats, engine._sched)
+
+    kill_sim_sched, kill_sim_stats = simulate_sharded_schedule(
+        wl(), SLOTS_PER_HOST, GOSSIP_DELAY, failpoints=plan)
+    kill_sim = {"stats": {**kill_sim_stats.as_row(),
+                          "host_downs": kill_sim_stats.host_downs,
+                          "requeued": kill_sim_stats.requeued,
+                          "rejects": kill_sim_stats.rejects},
+                "log": _log_of(kill_sim_sched)}
+
+    chaos = {
+        "failpoints": spec_str,
+        "kill_step": plan.kill_steps()[0] if plan.kill_steps() else None,
+        "arrival_span": [first, last],
+        "n_hosts": CHAOS_N_HOSTS,
+        "slots_per_host": SLOTS_PER_HOST,
+        "gossip_delay": GOSSIP_DELAY,
+        "decode_compiles": engine._decode._cache_size(),
+        "base": base,
+        "kill_runs": kill_runs,
+        "kill_sim": kill_sim,
+    }
+    if plan.kill_steps():          # custom plans may inject other faults
+        _verify_chaos(chaos, arrival_key)
+        chaos["verified"] = True
+    return chaos
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", required=True, help="JSON report path")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--failpoints", default=None,
+                    help="chaos failpoint spec (default: "
+                         f"{CHAOS_FAILPOINTS!r})")
     args = ap.parse_args()
     report = run(seed=args.seed)
+    report["chaos"] = run_chaos(seed=args.seed,
+                                failpoints=args.failpoints)
     with open(args.out, "w") as f:
         json.dump(report, f)
     print("wrote", args.out)
+    print("chaos: verified" if report["chaos"].get("verified")
+          else "chaos: ran (no kill in plan — checks skipped)")
 
 
 if __name__ == "__main__":

@@ -116,13 +116,22 @@ class Trainer:
     def __init__(self, loss_fn, init_params, tc: TrainConfig,
                  data_iter, checkpoint_dir: Optional[str] = None,
                  make_batch=None, eval_fn=None,
-                 fault_hook: Optional[Callable[[int], None]] = None):
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 failpoints=None):
         self.tc = tc
         self.optimizer = make_optimizer(tc)
         self.loss_fn = loss_fn
         self.data_iter = data_iter
         self.make_batch = make_batch or (lambda arrays: arrays)
         self.eval_fn = eval_fn
+        if fault_hook is None and failpoints is not None:
+            # Train faults come from the same seeded registry the serving
+            # stack injects from (serving/failpoints.py, FailPlan or spec
+            # string) — one grammar for train and serve chaos.
+            from repro.serving.failpoints import FailPlan
+            plan = (failpoints if isinstance(failpoints, FailPlan)
+                    else FailPlan.parse(failpoints))
+            fault_hook = plan.train_hook()
         self.fault_hook = fault_hook
         self.step_fn = make_train_step(loss_fn, self.optimizer,
                                        tc.microbatch)

@@ -29,11 +29,15 @@ def assert_slot_log_sound(sched, n_slots):
     wrapper over THE replay helper (serving/control.replay_slot_log):
     admissions/releases per slot alternate with matching rids through any
     COMPACT remaps, i.e. no slot ever hosts two live requests and no
-    live request is dropped by a compaction.  Used by the deterministic
-    sim test and the hypothesis property suite."""
+    live request is dropped by a compaction.  REJECT (prefill exhausted)
+    and RECLAIM (HOST_DOWN) events vacate slots like releases and are
+    replayed under the same invariant.  Used by the deterministic sim
+    tests, the chaos twins, and the hypothesis property suite."""
     from repro.serving.control import replay_slot_log
     replay_slot_log(sched.admissions, sched.releases,
-                    getattr(sched, "compactions", []), n_slots)
+                    getattr(sched, "compactions", []), n_slots,
+                    rejects=getattr(sched, "rejects", []),
+                    reclaims=getattr(sched, "reclaims", []))
 
 
 @pytest.fixture

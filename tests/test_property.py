@@ -238,8 +238,8 @@ def test_gossiped_queue_invariants_under_random_traffic(
     assert merged == from_hosts
 
     # slot conservation in aggregate
-    assert stats["slot_steps_active"] <= stats["slot_steps_total"]
-    assert stats["tokens_out"] == sum(r.max_gen for r in reqs)
+    assert stats.slot_steps_active <= stats.slot_steps_total
+    assert stats.tokens_out == sum(r.max_gen for r in reqs)
 
 
 @given(
@@ -398,6 +398,112 @@ def test_compaction_invariants_under_random_traffic(
     assert (s1.admissions, s1.releases, s1.compactions) == \
         (s2.admissions, s2.releases, s2.compactions)
     assert st1 == st2
+
+
+@given(
+    n_hosts=st.integers(2, 4),
+    slots_per_host=st.integers(1, 3),
+    gossip_delay=st.integers(0, 2),
+    kill_seed=st.integers(0, 10_000),
+    n_kills=st.integers(1, 2),
+    extra_delay=st.integers(0, 2),
+    arrivals=st.lists(
+        st.tuples(st.integers(0, 15),      # arrival step
+                  st.integers(0, 3),       # home host (mod n_hosts)
+                  st.integers(1, 6)),      # lifetime (max_gen)
+        min_size=1, max_size=16),
+)
+@settings(max_examples=50, deadline=None)
+def test_chaos_recovery_under_random_kills(
+        n_hosts, slots_per_host, gossip_delay, kill_seed, n_kills,
+        extra_delay, arrivals):
+    """ISSUE 6 chaos sweep — for ANY topology, gossip delay, seeded
+    kill schedule (1-2 hosts die mid-traffic, always ≥1 survivor) and
+    arrival-gossip slowdown:
+
+    * no request is lost or spuriously rejected — survivors reclaim the
+      dead hosts' slots and finish everything;
+    * every token stream is BIT-identical to the fault-free twin (the
+      placeholder stream is pure in (rid, index), exactly like the
+      engine's greedy row-independent decode);
+    * re-admissions preserve FIFO order: requests reclaimed by the same
+      HOST_DOWN wave re-enter in their original (arrival, home, rid)
+      order (across waves no global order exists — a first-wave requeue
+      may legitimately re-admit before a later kill even happens);
+    * the slot log replays soundly through RECLAIM events;
+    * the collective transport replays the IDENTICAL recovery schedule
+      (merged log, per-host logs, stats) as the simulated gossip.
+    """
+    from repro.serving.control import CollectiveTransport, replay_slot_log
+    from repro.serving.failpoints import FailPlan
+    from repro.serving.scheduler import Request, simulate_sharded_schedule
+
+    def workload():
+        per_host = [[] for _ in range(n_hosts)]
+        for i, (a, h, life) in enumerate(arrivals):
+            per_host[h % n_hosts].append(
+                Request(rid=i, prompt=np.zeros((2,), np.int32),
+                        max_gen=life, arrival_step=a, home=h % n_hosts))
+        return per_host
+
+    lo = min(a for a, _, _ in arrivals)
+    hi = max(a for a, _, _ in arrivals) + 2
+    n_kills = min(n_kills, n_hosts - 1)
+    plan = FailPlan.sample_kills(kill_seed, n_hosts, lo, hi + 1, n_kills)
+    if extra_delay:
+        plan = plan.merge(
+            FailPlan.parse(f"delay_arrivals:{extra_delay}@{lo + 1}"))
+
+    base_wl = workload()
+    simulate_sharded_schedule(base_wl, slots_per_host, gossip_delay)
+    base_tokens = {r.rid: r.tokens for reqs in base_wl for r in reqs}
+
+    kill_wl = workload()
+    sk, stk = simulate_sharded_schedule(kill_wl, slots_per_host,
+                                        gossip_delay, failpoints=plan)
+
+    # no request lost, none rejected (a pure kill/delay plan never
+    # exhausts prefill attempts), and recovered tokens are bit-identical
+    kill_reqs = [r for reqs in kill_wl for r in reqs]
+    assert all(r.done and not r.rejected for r in kill_reqs)
+    assert stk.rejects == 0
+    assert {r.rid: r.tokens for r in kill_reqs} == base_tokens
+    # one requeue per RECLAIM event (a rid may be reclaimed twice if its
+    # second host also dies)
+    assert stk.requeued == len(sk.reclaims)
+
+    # FIFO among survivors: reclaimed rids re-admit in original order
+    reclaimed = {rid for _, _, rid, _ in sk.reclaims}
+    last_adm = {}
+    for _, _, rid, seq in sk.admissions:
+        if rid in reclaimed:
+            last_adm[rid] = seq
+    assert set(last_adm) == reclaimed      # every reclaim re-admitted
+    key = {r.rid: (r.arrival_step, r.home, r.rid) for r in kill_reqs}
+    wave = {}                              # rid -> its LAST reclaim step
+    for step, _, rid, _ in sk.reclaims:
+        wave[rid] = step
+    for w in set(wave.values()):
+        order = sorted((rid for rid, s in wave.items() if s == w),
+                       key=last_adm.get)
+        assert [key[r] for r in order] == sorted(key[r] for r in order)
+
+    # slot log replays soundly through RECLAIM/REJECT events
+    from conftest import assert_slot_log_sound
+    assert_slot_log_sound(sk, sk.n_slots)
+
+    # transport equivalence survives the failure schedule
+    sc, stc = simulate_sharded_schedule(
+        workload(), slots_per_host, gossip_delay,
+        transport=CollectiveTransport(n_hosts, gossip_delay, capacity=4),
+        failpoints=plan)
+    assert (sk.admissions, sk.releases, sk.reclaims, sk.rejects,
+            sk.host_downs) == (sc.admissions, sc.releases, sc.reclaims,
+                               sc.rejects, sc.host_downs)
+    assert stk == stc
+    for ha, hb in zip(sk.hosts, sc.hosts):
+        assert (ha.admissions, ha.releases, ha.reclaims) == \
+            (hb.admissions, hb.releases, hb.reclaims)
 
 
 @given(

@@ -155,6 +155,47 @@ def test_prefill_pool_is_schedule_and_token_invariant(served):
     assert pool3["wait_units"] < pool1["wait_units"]
 
 
+def test_engine_prefill_retry_and_reject_via_failpoints(served):
+    """Failure-model satellite on the REAL engine: a prefill fault below
+    the attempt cap is retried on another worker and every token stays
+    bit-identical; AT the cap the victim is REJECTed (slot freed, logged)
+    while every other request is served untouched."""
+    from repro.serving import FailPlan, PREFILL_MAX_ATTEMPTS
+
+    cfg = served["cfg"]
+    baseline = served["solo_tokens"]
+    victim = max(baseline, key=lambda r: len(baseline[r]))
+
+    # below the cap: retries absorb the fault — schedule/token invariant
+    engine = Engine(cfg, served["engine"].params, n_slots=N_SLOTS,
+                    max_len=MAX_LEN, topk=4, prefill_workers=2,
+                    failpoints=FailPlan.parse(
+                        f"fail_prefill:{victim}:{PREFILL_MAX_ATTEMPTS - 1}"))
+    results, st = engine.run(mixed_length_workload(cfg.vocab, 10, seed=0))
+    assert st.rejects == 0
+    assert engine.prefill_pool.stats["retries"] == PREFILL_MAX_ATTEMPTS - 1
+    assert engine.prefill_pool.stats["rejects"] == 0
+    for rid, req in results.items():
+        assert req.tokens == baseline[rid]
+
+    # at the cap: REJECT — the victim ends unserved, everyone else is
+    # bit-identical to the fault-free baseline
+    engine = Engine(cfg, served["engine"].params, n_slots=N_SLOTS,
+                    max_len=MAX_LEN, topk=4, prefill_workers=2,
+                    failpoints=FailPlan.parse(
+                        f"fail_prefill:{victim}:{PREFILL_MAX_ATTEMPTS}"))
+    results, st = engine.run(mixed_length_workload(cfg.vocab, 10, seed=0))
+    assert st.rejects == 1
+    assert engine.prefill_pool.stats["rejects"] == 1
+    assert results[victim].rejected and results[victim].tokens == []
+    for rid, req in results.items():
+        if rid != victim:
+            assert not req.rejected
+            assert req.tokens == baseline[rid]
+    from conftest import assert_slot_log_sound
+    assert_slot_log_sound(engine._sched, N_SLOTS)
+
+
 def test_loadgen_is_deterministic():
     spec = LoadSpec(n_requests=20, vocab=128, rate=0.7, seed=123)
     a, b = make_workload(spec), make_workload(spec)

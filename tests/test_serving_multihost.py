@@ -39,7 +39,8 @@ import pytest
 
 from conftest import subprocess_env
 
-from repro.serving import (CollectiveTransport, LoadSpec, Request,
+from repro.serving import (CollectiveTransport, FailPlan, LoadSpec,
+                           ReplicaDivergence, Request, TransportTimeout,
                            host_stream, merge_workloads, replay_slot_log,
                            sharded_workload, simulate_sharded_schedule)
 
@@ -335,6 +336,147 @@ def test_compaction_is_schedule_invariant_and_sound():
         final = replay_slot_log(s1.admissions, s1.releases,
                                 s1.compactions, n_hosts * spp)
         assert all(o is None for o in final)
+
+
+def test_chaos_drill_recovers_from_mid_traffic_host_kill(report):
+    """ISSUE 6 acceptance on the REAL engine (8-device subprocess): a
+    committed FailPlan kills 1 of 4 hosts mid-traffic; the drill's own
+    in-process asserts already proved FIFO re-admission, log equality
+    with the model-free sim and slot-log soundness — this test pins the
+    headline numbers into the pytest report too."""
+    chaos = report["chaos"]
+    assert chaos["verified"] is True
+    first, last = chaos["arrival_span"]
+    assert first < chaos["kill_step"] <= last     # genuinely mid-traffic
+    base_tokens = chaos["base"]["tokens"]
+    for tname in ("sim", "collective"):
+        kr = chaos["kill_runs"][tname]
+        assert kr["done"] and all(kr["done"].values())
+        assert kr["stats"]["host_downs"] == 1
+        assert kr["stats"]["requeued"] >= 1       # non-vacuous drill
+        assert kr["stats"]["rejects"] == 0
+        assert kr["tokens"] == base_tokens        # bit-identical recovery
+        assert len(kr["log"]["reclaims"]) == kr["stats"]["requeued"]
+    # engine log == model-free sim log under the kill, both transports
+    assert chaos["kill_runs"]["sim"]["log"] == chaos["kill_sim"]["log"]
+    assert (chaos["kill_runs"]["collective"]["log"]
+            == chaos["kill_sim"]["log"])
+    # host death never creates a new decode executable
+    assert chaos["decode_compiles"] == 1
+
+
+def test_kill_recovery_deterministic_twins():
+    """No-hypothesis twins of the chaos property (CI also runs the
+    hypothesis sweep): across fixed (topology, gossip delay, kill
+    schedule) cases — single kill, double kill, kill + arrival-gossip
+    slowdown — no request is lost, recovered tokens equal the fault-free
+    twin's bit-for-bit, the slot log replays soundly through RECLAIMs,
+    and the collective transport replays the identical recovery."""
+    cases = [(2, 1, 0, "kill_host:0@2"),
+             (4, 2, 1, "kill_host:1@3"),
+             (3, 2, 2, "kill_host:2@4,kill_host:0@8"),
+             (4, 1, 1, "kill_host:3@2,delay_arrivals:2@3")]
+    for n_hosts, spp, gd, spec_str in cases:
+        plan = FailPlan.parse(spec_str)
+        spec = LoadSpec(n_requests=3, vocab=64, rate=1.5,
+                        gen_lens=(2, 4, 7), seed=9)
+        base_wl = sharded_workload(spec, n_hosts)
+        simulate_sharded_schedule(base_wl, spp, gd)
+        base_tokens = {r.rid: r.tokens for reqs in base_wl for r in reqs}
+
+        kill_wl = sharded_workload(spec, n_hosts)
+        sk, stk = simulate_sharded_schedule(kill_wl, spp, gd,
+                                            failpoints=plan)
+        reqs = [r for rs in kill_wl for r in rs]
+        assert all(r.done and not r.rejected for r in reqs), spec_str
+        assert {r.rid: r.tokens for r in reqs} == base_tokens, spec_str
+        assert stk.host_downs == len(plan.kill_steps()), spec_str
+        assert stk.requeued == len(sk.reclaims) >= 1, spec_str
+        replay_slot_log(sk.admissions, sk.releases, sk.compactions,
+                        sk.n_slots, rejects=sk.rejects,
+                        reclaims=sk.reclaims)
+
+        sc, stc = simulate_sharded_schedule(
+            sharded_workload(spec, n_hosts), spp, gd,
+            transport=CollectiveTransport(n_hosts, gd, capacity=4),
+            failpoints=plan)
+        assert (sk.admissions, sk.releases, sk.reclaims, sk.rejects,
+                sk.host_downs) == \
+            (sc.admissions, sc.releases, sc.reclaims, sc.rejects,
+             sc.host_downs), spec_str
+        assert stk == stc, spec_str
+
+
+def test_sim_prefill_reject_at_cap_and_retry_below_cap():
+    """fail_prefill below PREFILL_MAX_ATTEMPTS is invisible to the
+    schedule (the pool retries another worker); AT the cap the victim is
+    REJECTed — slot freed, logged, everyone else token-identical."""
+    from repro.serving import PREFILL_MAX_ATTEMPTS
+
+    spec = LoadSpec(n_requests=3, vocab=64, rate=1.0,
+                    gen_lens=(2, 4), seed=4)
+    base_wl = sharded_workload(spec, 2)
+    simulate_sharded_schedule(base_wl, 2, 1)
+    base_tokens = {r.rid: r.tokens for reqs in base_wl for r in reqs}
+    victim = sorted(base_tokens)[1]
+
+    # below the cap: nothing observable in the model-free schedule
+    wl = sharded_workload(spec, 2)
+    s_ok, st_ok = simulate_sharded_schedule(
+        wl, 2, 1, failpoints=FailPlan.parse(
+            f"fail_prefill:{victim}:{PREFILL_MAX_ATTEMPTS - 1}"))
+    assert st_ok.rejects == 0 and not s_ok.rejects
+    assert {r.rid: r.tokens for rs in wl for r in rs} == base_tokens
+
+    # at the cap: REJECT — victim unserved, others complete untouched
+    wl = sharded_workload(spec, 2)
+    s_rj, st_rj = simulate_sharded_schedule(
+        wl, 2, 1, failpoints=FailPlan.parse(
+            f"fail_prefill:{victim}:{PREFILL_MAX_ATTEMPTS}"))
+    assert st_rj.rejects == 1
+    assert [rid for _, _, rid, _ in s_rj.rejects] == [victim]
+    for r in (r for rs in wl for r in rs):
+        if r.rid == victim:
+            assert r.rejected and r.tokens == [] and r.done
+        else:
+            assert not r.rejected and r.tokens == base_tokens[r.rid]
+    replay_slot_log(s_rj.admissions, s_rj.releases, s_rj.compactions,
+                    s_rj.n_slots, rejects=s_rj.rejects,
+                    reclaims=s_rj.reclaims)
+
+
+def test_corrupted_replica_raises_within_one_round():
+    """Digest satellite: a replica whose reported state digest diverges
+    crashes the exchange round it reports in — BOTH transports, and the
+    raise names the disagreeing host and the step."""
+    spec = LoadSpec(n_requests=3, vocab=64, rate=1.0, seed=2)
+    plan = FailPlan.parse("corrupt_digest:1@2")
+    for transport in (None,
+                      CollectiveTransport(3, 1, capacity=4)):
+        with pytest.raises(ReplicaDivergence, match=r"step 2.*\[1\]"):
+            simulate_sharded_schedule(sharded_workload(spec, 3), 2, 1,
+                                      transport=transport,
+                                      failpoints=plan)
+
+
+def test_hung_round_past_deadline_raises_timeout():
+    """Deadline satellite: an injected hang longer than the per-round
+    deadline raises TransportTimeout instead of stalling the pool."""
+    spec = LoadSpec(n_requests=3, vocab=64, rate=1.0, seed=2)
+    plan = FailPlan.parse("hang_round:99@2")
+    for transport in (None,
+                      CollectiveTransport(3, 1, capacity=4)):
+        with pytest.raises(TransportTimeout, match="step 2"):
+            simulate_sharded_schedule(sharded_workload(spec, 3), 2, 1,
+                                      transport=transport,
+                                      failpoints=plan)
+    # a hang UNDER the deadline is survivable and schedule-invariant
+    base_wl = sharded_workload(spec, 3)
+    s0, _ = simulate_sharded_schedule(base_wl, 2, 1)
+    wl = sharded_workload(spec, 3)
+    s1, _ = simulate_sharded_schedule(
+        wl, 2, 1, failpoints=FailPlan.parse("hang_round:4@2"))
+    assert (s0.admissions, s0.releases) == (s1.admissions, s1.releases)
 
 
 def test_delay0_same_step_release_readmits_instead_of_dropping():
