@@ -30,13 +30,19 @@ import jax
 
 from repro import configs
 from repro.launch import steps as steps_lib
-from repro.serving import (Engine, FailPlan, LoadSpec, mean_latency,
-                           mixed_length_workload, sharded_workload,
-                           simulate_sharded_schedule)
+from repro.serving import (Engine, FailPlan, LoadSpec, RetrievalEngine,
+                           RetrievalLoadSpec, assert_fresh_instances,
+                           init_retrieval_params, mean_latency,
+                           mixed_length_workload, retrieval_workload,
+                           sharded_workload, simulate_sharded_schedule)
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serving.json"
 MIN_SPEEDUP = 1.5
+# retrieval.* rows: the streaming decode must model at least this many
+# times fewer HBM bytes than the dense-table oracle (ISSUE-7 acceptance
+# bar at d=1M; the actual ratios are orders of magnitude above it)
+MIN_RETRIEVAL_BYTES_RATIO = 3.0
 
 # (arch, n_slots, n_requests, seed): one dense and one attention-free SSM
 # arch — the slot pool covers KV caches and conv/ssm state alike.
@@ -75,6 +81,18 @@ SHARDED_KILL_CASES = [
     (4, 2, 4, 1, 0, None, "kill_host:1@3"),
 ]
 
+# (retrieval config, n_slots, n_requests, seed): the web-scale one-shot
+# retrieval scenario (DESIGN.md §11) — Zipf item lookups through the
+# slot pool with the streaming Eq. 3 decode, at a CI-friendly 1M-item
+# catalog and the dense-table-cannot-fit 10M acceptance scale.  Each
+# case runs TWICE from fresh request copies and asserts bit-identical
+# top-k ids; only analytic bytes + schedule integers are committed (the
+# float id scores never touch the baseline).
+RETRIEVAL_CASES = [
+    ("web1m", 8, 12, 0),
+    ("web10m", 8, 8, 0),
+]
+
 
 def _run_case(arch: str, n_slots: int, n_requests: int, seed: int):
     cfg = configs.get_smoke_config(arch)
@@ -83,10 +101,15 @@ def _run_case(arch: str, n_slots: int, n_requests: int, seed: int):
     engine = Engine(cfg, params, n_slots=n_slots, max_len=MAX_LEN,
                     topk=TOPK)
 
-    res_c, st_c = engine.run(
-        mixed_length_workload(cfg.vocab, n_requests, seed=seed))
-    res_s, st_s = engine.run_static(
-        mixed_length_workload(cfg.vocab, n_requests, seed=seed))
+    # one workload, two engines: the A/B replays must never share
+    # Request instances (engine-filled bookkeeping would leak run to
+    # run) — each path serves its own fresh copies
+    wl = mixed_length_workload(cfg.vocab, n_requests, seed=seed)
+    wl_c = [r.fresh_copy() for r in wl]
+    wl_s = [r.fresh_copy() for r in wl]
+    assert_fresh_instances(wl_c, wl_s)
+    res_c, st_c = engine.run(wl_c)
+    res_s, st_s = engine.run_static(wl_s)
     assert all(r.done for r in res_c.values())
 
     rows = []
@@ -176,10 +199,55 @@ def _run_sharded_case(n_hosts: int, slots_per_host: int, n_requests: int,
     return row
 
 
+def _run_retrieval_case(name: str, n_slots: int, n_requests: int,
+                        seed: int):
+    rcfg = configs.get_retrieval_config(name)
+    load = RetrievalLoadSpec(n_requests=n_requests, catalog=rcfg.d,
+                             c_max=rcfg.c_max, rate=2.0, seed=seed)
+    wl = retrieval_workload(load)
+    engine = RetrievalEngine(rcfg, init_retrieval_params(rcfg),
+                             n_slots=n_slots)
+    wl_a = [r.fresh_copy() for r in wl]
+    wl_b = [r.fresh_copy() for r in wl]
+    assert_fresh_instances(wl_a, wl_b)
+    res_a, st = engine.run(wl_a)
+    res_b, _ = engine.run(wl_b)
+    assert all(r.done and not r.rejected for r in res_a.values())
+    for rid, ra in res_a.items():
+        assert ra.topk_ids == res_b[rid].topk_ids, (
+            f"retrieval.{name}: rid {rid} top-k ids drifted across "
+            "replays — the streaming decode is not deterministic")
+    mb = engine.modeled_bytes
+    ratio = round(mb["dense_oracle_bytes"]
+                  / max(mb["streaming_bytes"], 1), 1)
+    return {
+        "bench": "serving", "name": f"retrieval.{name}",
+        "d": rcfg.d, "m": rcfg.m, "k": rcfg.k, "topk": rcfg.topk,
+        "impl": rcfg.resolved_impl,
+        "n_slots": n_slots, "n_requests": n_requests, "seed": seed,
+        "decode_steps": st.decode_steps,
+        "slot_steps_total": st.slot_steps_total,
+        "slot_steps_active": st.slot_steps_active,
+        "utilization": round(st.utilization, 4),
+        "tokens_out": st.tokens_out,
+        "mean_latency_steps": round(mean_latency(res_a), 4),
+        # analytic decode-bytes model (deterministic integers): the
+        # streaming path at the run's actual per-step occupancy vs the
+        # dense (d, m)-table oracle over the same steps
+        "streaming_bytes": mb["streaming_bytes"],
+        "dense_oracle_bytes": mb["dense_oracle_bytes"],
+        "bytes_ratio": ratio,
+        # informational only (CPU wall time — never checked)
+        "wall_s": round(st.wall_s, 3),
+    }
+
+
 def run():
     rows = []
     for arch, n_slots, n_requests, seed in CASES:
         rows.extend(_run_case(arch, n_slots, n_requests, seed))
+    for case in RETRIEVAL_CASES:
+        rows.append(_run_retrieval_case(*case))
     for case in SHARDED_CASES:
         rows.append(_run_sharded_case(*case))
     for case in SHARDED_KILL_CASES:
@@ -224,7 +292,8 @@ CHECKED_FIELDS = ("decode_steps", "slot_steps_total", "slot_steps_active",
                   "utilization", "tokens_out", "mean_latency_steps",
                   "decode_step_speedup", "utilization_gain", "compactions",
                   "host_downs", "requeued", "rejects",
-                  "recovery_overhead_steps")
+                  "recovery_overhead_steps",
+                  "streaming_bytes", "dense_oracle_bytes", "bytes_ratio")
 
 
 def write_json(rows, path=JSON_PATH):
@@ -291,6 +360,13 @@ def check_against(rows, path=JSON_PATH) -> list[str]:
                 f"{r['decode_step_speedup']:.2f} < {MIN_SPEEDUP} — "
                 "continuous batching no longer pays on the mixed-length "
                 "workload")
+        if name.startswith("retrieval.") \
+                and r.get("bytes_ratio", 0.0) < MIN_RETRIEVAL_BYTES_RATIO:
+            failures.append(
+                f"{name}: streaming-vs-dense modeled-bytes ratio "
+                f"{r.get('bytes_ratio')} < {MIN_RETRIEVAL_BYTES_RATIO} — "
+                "the streaming decode no longer pays over the "
+                "dense-table oracle")
     return failures
 
 

@@ -23,6 +23,11 @@ from repro.configs import (
     qwen3_4b,
     whisper_small,
 )
+from repro.configs.retrieval import (  # noqa: F401
+    RETRIEVAL_CONFIGS,
+    RetrievalConfig,
+    get_retrieval_config,
+)
 from repro.configs.base import (  # noqa: F401
     BloomConfig,
     MambaConfig,

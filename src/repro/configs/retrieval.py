@@ -1,0 +1,90 @@
+"""Web-scale Bloom retrieval scenario configs (DESIGN.md §11).
+
+The retrieval scenario is NOT a ModelConfig architecture: there is no
+token LM, no KV cache, no autoregressive loop.  A request carries a
+padded item-id set, prefill Bloom-encodes it (core.bloom.encode, Eq. 1)
+and runs a small FF tower (models/recommender.py) to an m-dim output,
+and the single recover step streams the Eq. 3 top-k over the d-item
+catalog — so the scenario gets its own frozen config describing exactly
+those pieces.
+
+Scale notes that drive the presets:
+  * ``on_the_fly=True`` always: at d=10M a precomputed (d, k) int32 hash
+    matrix is ~80 MB per k=2 spec (160 MB at k=4) and
+    ``core.bloom.cached_hash_matrix`` retains up to 8 of them
+    (lru_cache) — the double-hash recomputes indices in-graph instead,
+    which is exactly what the streaming decode wants.
+  * the streaming decode's working set is (B, m) + one (chunk, k) index
+    block; the dense-table oracle it replaces needs the full (d, m)
+    table plus a (B, d) score matrix — the modeled-bytes gap
+    bench_serving.py gates on (retrieval.* rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.bloom import BloomSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalConfig:
+    """Static description of one retrieval serving scenario."""
+
+    name: str = "retrieval"
+    d: int = 1_000_000        # item-catalog size
+    m: int = 4096             # Bloom-compressed output dimensionality
+    k: int = 2                # hash projections (paper: 2..4 best)
+    c_max: int = 8            # input items per request (padded, -1)
+    hidden: Tuple[int, ...] = (64, 64)   # FF tower widths
+    topk: int = 10            # retrieved items per request
+    seed: int = 0             # hash seed AND tower-init seed
+    impl: str = "auto"        # "auto" | "xla" | "pallas" decode path
+    chunk: int = 65536        # streaming-oracle vocab chunk (xla path)
+    b_tile: int = 8           # kernel row-block (pallas path + bytes model)
+
+    def __post_init__(self):
+        if not (0 < self.m <= self.d):
+            raise ValueError(f"need 0 < m <= d, got m={self.m} d={self.d}")
+        if not (1 <= self.topk <= self.d):
+            raise ValueError(f"need 1 <= topk <= d, got topk={self.topk}")
+        if self.c_max < 1:
+            raise ValueError(f"need c_max >= 1, got {self.c_max}")
+        if self.impl not in ("auto", "xla", "pallas"):
+            raise ValueError(f"unknown decode impl {self.impl!r}")
+
+    def spec(self) -> BloomSpec:
+        """The Bloom IO spec; on_the_fly on purpose (see module doc)."""
+        return BloomSpec(d=self.d, m=self.m, k=self.k, seed=self.seed,
+                         on_the_fly=True)
+
+    @property
+    def resolved_impl(self) -> str:
+        """``auto`` resolves per backend: the fused Pallas kernel on TPU,
+        the jitted streaming oracle (core.bloom.decode_topk) elsewhere —
+        interpret-mode Pallas at a 10M-item grid is CI-infeasible, and
+        the two paths share the tie-break contract (DESIGN.md §11) so
+        the recovered ids are identical."""
+        if self.impl != "auto":
+            return self.impl
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# Presets: web1m fits CI wall-clock comfortably; web10m is the "dense
+# table cannot fit" acceptance scale (d*m*4 = 320 GB dense vs an 8 MB
+# streaming working set); smoke keeps full-score eval affordable.
+RETRIEVAL_CONFIGS: Dict[str, RetrievalConfig] = {
+    "web1m": RetrievalConfig(name="web1m", d=1_000_000, m=4096, k=2),
+    "web10m": RetrievalConfig(name="web10m", d=10_000_000, m=8192, k=2),
+    "smoke": RetrievalConfig(name="smoke", d=50_000, m=256, k=2,
+                             hidden=(32,), topk=8, chunk=8192),
+}
+
+
+def get_retrieval_config(name: str, **overrides) -> RetrievalConfig:
+    if name not in RETRIEVAL_CONFIGS:
+        raise KeyError(f"unknown retrieval config {name!r}; known: "
+                       f"{tuple(RETRIEVAL_CONFIGS)}")
+    cfg = RETRIEVAL_CONFIGS[name]
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

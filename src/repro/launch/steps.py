@@ -291,6 +291,48 @@ def make_slot_decode_step(cfg: ModelConfig, topk: int = 16, dist=None):
     return step
 
 
+def make_retrieval_prefill_step(rcfg):
+    """One-shot retrieval prefill (DESIGN.md §11).
+
+    (params, items (B, c_max) int32, -1-padded) -> (B, m) tower logits:
+    Bloom-encode the item set (core.bloom.encode, Eq. 1 — on-the-fly
+    hashing, no (d, k) matrix at 10M-item catalogs) and run the FF tower
+    (models/recommender.ff_apply).  No caches, no first token — the
+    payload a ``oneshot`` slot holds is this logits row.
+    """
+    from repro.models import recommender as rec_lib
+    spec = rcfg.spec()
+
+    def step(params, items):
+        u = bloom_lib.encode(spec, items)            # (B, m) multi-hot
+        return rec_lib.ff_apply(params, u)
+
+    return step
+
+
+def make_retrieval_decode_step(rcfg):
+    """The single recover step of a ``oneshot`` slot pool.
+
+    (pool (n_slots, m) logits, active (n_slots,)) -> (scores, ids) of
+    shape (n_slots, topk): log_softmax then the occupancy-aware
+    streaming Eq. 3 top-k over the d-item catalog
+    (io.recover_topk_spec) — never materializing (n_slots, d) scores.
+    ``active`` masks retired slots to scores=-inf / ids=0 and, on the
+    pallas path, drives the kernel's row-skipping occupancy grid.
+    """
+    spec = rcfg.spec()
+    impl = rcfg.resolved_impl
+    if impl == "pallas":
+        bloom_lib.cached_hash_matrix(spec)
+
+    def step(pool, active):
+        return io_lib.recover_topk_spec(spec, pool, topk=rcfg.topk,
+                                        impl=impl, chunk=rcfg.chunk,
+                                        active=active)
+
+    return step
+
+
 def init_caches_for(cfg: ModelConfig, shape: ShapeConfig):
     if cfg.family == "audio":
         return functools.partial(encdec_lib.init_encdec_cache, cfg,

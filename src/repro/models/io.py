@@ -106,17 +106,38 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
     blocks.
     """
     spec = vocab_spec(cfg)
+    return recover_topk_spec(spec, logits, topk, impl=cfg.io_impl,
+                             chunk=chunk, active=active,
+                             unroll=cfg.unroll_for_analysis)
+
+
+def recover_topk_spec(spec: Optional[BloomSpec], logits: jnp.ndarray,
+                      topk: int = 16, *, impl: str = "xla",
+                      chunk: int = 8192,
+                      active: Optional[jnp.ndarray] = None,
+                      unroll: bool = False):
+    """``recover_topk`` keyed by a BloomSpec instead of a ModelConfig —
+    the shared recovery core for the LM head AND the retrieval scenario
+    (serving/retrieval.py), which has no ModelConfig to hand.
+
+    All three paths follow the SAME tie-break contract (DESIGN.md §11):
+    equal Eq. 3 scores resolve to the lowest item id, exactly like
+    ``jax.lax.top_k`` on a materialized score vector — the streaming
+    oracle seeds each chunk merge with the running best (earlier = lower
+    ids first in the concat), and the Pallas kernel folds tiles in
+    ascending vocab order with strictly-greater replacement.
+    """
     if spec is None:
         scores, ids = jax.lax.top_k(logits, topk)
     else:
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        if cfg.io_impl == "pallas":
+        if impl == "pallas":
             from repro.kernels import ops
             scores, ids = ops.bloom_decode_topk(logp, spec, topk,
                                                 active=active)
         else:
             scores, ids = decode_topk(spec, logp, topk, chunk=chunk,
-                                      unroll=cfg.unroll_for_analysis)
+                                      unroll=unroll)
     if active is not None:
         live = active[..., None]
         scores = jnp.where(live, scores, -jnp.inf)

@@ -17,10 +17,15 @@ scheduler.py    — JAX-free RequestQueue/Scheduler (slot admission policy),
 loadgen.py      — deterministic Poisson arrival + length-mix workloads,
                   per-host streams pure in (seed, host_id)
 engine.py       — the slot-pool engine, the disaggregated PrefillPool
-                  (FIFO over N mesh-slice workers), and the
-                  static-batching A/B baseline
+                  (FIFO over N mesh-slice workers), the SlotProgram
+                  per-slot program protocol, and the static-batching
+                  A/B baseline
 sharded_pool.py — data plane: data-axis-sharded slot pool, ShardedEngine,
                   slot compaction
+retrieval.py    — web-scale one-shot Bloom retrieval over the same slot
+                  pool: Zipf item lookups, streaming Eq. 3 top-k over a
+                  10M+-item catalog, modeled-bytes audit vs the
+                  dense-table oracle (DESIGN.md §11)
 """
 from repro.serving.control import (CollectiveTransport, ControlState,
                                    Delta, EventLog, SimTransport,
@@ -29,20 +34,30 @@ from repro.serving.control import (CollectiveTransport, ControlState,
                                    replay_slot_log)
 from repro.serving.control import (HOST_DOWN, ReplicaDivergence,
                                    TransportTimeout, control_digest)
-from repro.serving.engine import Engine, PrefillFault, PrefillPool, \
-    PrefillWorker, ServeStats, mean_latency
+from repro.serving.engine import Engine, LMSlotProgram, PrefillFault, \
+    PrefillPool, PrefillWorker, ServeStats, SlotProgram, mean_latency
 from repro.serving.failpoints import (FailPlan, Failpoint,
                                       PREFILL_MAX_ATTEMPTS)
-from repro.serving.loadgen import LoadSpec, burst_workload, host_stream, \
-    make_workload, merge_workloads, mixed_length_workload, sharded_workload
+from repro.serving.loadgen import (LoadSpec, RetrievalLoadSpec,
+                                   assert_fresh_instances, burst_workload,
+                                   host_stream, make_workload,
+                                   merge_workloads, mixed_length_workload,
+                                   retrieval_workload, sharded_workload)
+from repro.serving.retrieval import (RetrievalEngine, RetrievalProgram,
+                                     evaluate_retrieval,
+                                     init_retrieval_params)
 from repro.serving.scheduler import Request, RequestQueue, ScheduleClient, \
     Scheduler, ShardedScheduler, run_schedule, simulate_sharded_schedule
 from repro.serving.sharded_pool import ShardedEngine
 
 __all__ = ["Engine", "PrefillPool", "PrefillWorker", "ServeStats",
-           "mean_latency", "LoadSpec", "burst_workload", "host_stream",
+           "SlotProgram", "LMSlotProgram", "mean_latency", "LoadSpec",
+           "burst_workload", "host_stream", "assert_fresh_instances",
            "make_workload", "merge_workloads", "mixed_length_workload",
-           "sharded_workload", "Request", "RequestQueue", "ScheduleClient",
+           "sharded_workload", "RetrievalLoadSpec", "retrieval_workload",
+           "RetrievalEngine", "RetrievalProgram", "evaluate_retrieval",
+           "init_retrieval_params",
+           "Request", "RequestQueue", "ScheduleClient",
            "Scheduler", "ShardedEngine", "ShardedScheduler",
            "run_schedule", "simulate_sharded_schedule",
            "CollectiveTransport", "ControlState", "Delta", "EventLog",

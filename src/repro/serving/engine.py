@@ -65,39 +65,89 @@ def assert_request_fits(req: Request, max_len: int) -> None:
         f"{req.max_gen} exceeds pool max_len {max_len}")
 
 
-class PrefillWorker:
-    """Disaggregated prefill: owns the jitted prefill step + first-token
-    recovery, optionally pinned to a dedicated device (a 1-device mesh
-    slice of the serving topology — DESIGN.md §8).
+def assert_kind(requests, kind: str, engine: str) -> None:
+    """Engines serve exactly one request kind; a mixed workload is a
+    routing bug upstream, not something to half-serve."""
+    for r in requests:
+        if r.kind != kind:
+            raise NotImplementedError(
+                f"request {r.rid}: kind={r.kind!r} — {engine} serves "
+                f"kind={kind!r} only; oneshot retrieval requests go "
+                "through serving/retrieval.RetrievalEngine and LM "
+                "requests through serving/engine.Engine (DESIGN.md §11)")
 
-    Prefill is always B=1 at the exact prompt length — bit-identical to
-    serving the request alone — and emits ``(caches, first_token)``; the
-    caller inserts the caches into its decode pool (for the sharded pool
-    that insert is the device-to-device transfer out of the prefill
-    slice).  Splitting prefill out of the engine is what lets the sharded
-    engine place it on its own slice while the decode pool spans the data
-    axis; the single-host Engine uses the same worker unpinned, so both
-    paths run the very same jitted callables.
+
+class SlotProgram:
+    """Arch-agnostic per-slot program: WHAT one slot computes, decoupled
+    from WHEN the engine/scheduler runs it (groundwork for the ROADMAP
+    "continuous batching for every architecture" refactor; DESIGN.md
+    §11).  A program's ``prefill`` turns a request into the payload its
+    slot will hold — (caches, first_token) for the autoregressive LM
+    program below, a (m,) logits row (and no first token) for the
+    one-shot retrieval program in serving/retrieval.py.  ``kind`` names
+    the Request.kind the program serves; ``oneshot`` programs take
+    exactly one recover step after prefill and retire.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, topk: int,
-                 dist=None, device=None):
-        self.device = device
-        if device is not None:
-            params = jax.device_put(params, device)
-        self.params = params
+    kind = "lm"
+    oneshot = False
+
+    def prefill(self, params, req: Request, device=None):
+        raise NotImplementedError
+
+
+class LMSlotProgram(SlotProgram):
+    """The autoregressive token-LM program: jitted prefill + first-token
+    Eq. 3 recovery.  Prefill is always B=1 at the exact prompt length —
+    bit-identical to serving the request alone."""
+
+    kind = "lm"
+    oneshot = False
+
+    def __init__(self, cfg: ModelConfig, *, topk: int, dist=None):
         self._prefill = jax.jit(steps_lib.make_prefill_step(cfg, dist))
         self._recover = jax.jit(
             lambda logits: io_lib.recover_topk(cfg, logits, topk=topk))
 
-    def prefill(self, req: Request):
+    def prefill(self, params, req: Request, device=None):
         """req -> (caches at prompt length, greedy first token id)."""
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        if self.device is not None:
-            prompt = jax.device_put(prompt, self.device)
-        pre = self._prefill(self.params, {"tokens": prompt})
+        if device is not None:
+            prompt = jax.device_put(prompt, device)
+        pre = self._prefill(params, {"tokens": prompt})
         _, ids = self._recover(pre["last_logits"])
         return pre["caches"], int(np.asarray(ids)[0, 0])
+
+
+class PrefillWorker:
+    """Disaggregated prefill: owns a ``SlotProgram``'s jitted callables,
+    optionally pinned to a dedicated device (a 1-device mesh slice of
+    the serving topology — DESIGN.md §8).
+
+    The worker emits whatever its program's prefill emits — (caches,
+    first_token) for the LM program (default), (logits_row, None) for
+    the one-shot retrieval program; the caller inserts the payload into
+    its decode pool (for the sharded pool that insert is the
+    device-to-device transfer out of the prefill slice).  Splitting
+    prefill out of the engine is what lets the sharded engine place it
+    on its own slice while the decode pool spans the data axis; the
+    single-host engines use the same worker unpinned, so both paths run
+    the very same jitted callables.
+    """
+
+    def __init__(self, cfg: Optional[ModelConfig], params, *, topk: int,
+                 dist=None, device=None,
+                 program: Optional[SlotProgram] = None):
+        self.device = device
+        if device is not None:
+            params = jax.device_put(params, device)
+        self.params = params
+        self.program = (program if program is not None
+                        else LMSlotProgram(cfg, topk=topk, dist=dist))
+
+    def prefill(self, req: Request):
+        """req -> the program's slot payload (see class doc)."""
+        return self.program.prefill(self.params, req, device=self.device)
 
 
 class PrefillPool:
@@ -130,22 +180,27 @@ class PrefillPool:
     raise at the same point a real crash would.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, topk: int,
+    def __init__(self, cfg: Optional[ModelConfig], params, *, topk: int,
                  n_workers: int = 1, devices=None, dist=None,
-                 failpoints: Optional[FailPlan] = None):
+                 failpoints: Optional[FailPlan] = None,
+                 program: Optional[SlotProgram] = None):
         assert n_workers >= 1
         if devices is None:
             devices = [None]
         # one PrefillWorker (and thus one set of jitted callables) per
         # DISTINCT device: pool slots landing on the same device share
-        # it, so a same-device pool never re-traces the prefill step
+        # it, so a same-device pool never re-traces the prefill step.
+        # A shared `program` (the retrieval path) keeps one set of jitted
+        # callables for the whole pool — jit re-specializes per device
+        # placement on its own.
         by_device = {}
         self.workers = []
         for i in range(n_workers):
             dev = devices[i % len(devices)]
             if dev not in by_device:
                 by_device[dev] = PrefillWorker(cfg, params, topk=topk,
-                                               dist=dist, device=dev)
+                                               dist=dist, device=dev,
+                                               program=program)
             self.workers.append(by_device[dev])
         self.n_workers = n_workers
         self.failpoints = failpoints if failpoints else None
@@ -318,6 +373,7 @@ class Engine:
             ) -> Tuple[Dict[int, Request], ServeStats]:
         """Continuous batching: admit into freed slots every step, retire
         on per-slot stop conditions.  Mutates and returns the requests."""
+        assert_kind(requests, "lm", "the token-LM engine")
         queue = RequestQueue(requests)
         sched = Scheduler(self.n_slots)
         stats = ServeStats()
@@ -407,6 +463,7 @@ class Engine:
         longest request stops — retired slots keep burning decode steps,
         which is exactly the utilization gap continuous batching closes.
         """
+        assert_kind(requests, "lm", "the token-LM engine")
         stats = ServeStats()
         reqs = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
         caches = self._fresh_pool()

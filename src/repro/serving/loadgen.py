@@ -31,6 +31,23 @@ class LoadSpec:
     gen_weights: Tuple[float, ...] = ()  # uniform when empty
     seed: int = 0
 
+    def __post_init__(self):
+        # rate=0 used to surface as a ZeroDivisionError deep inside
+        # _draw_stream's exponential draw; a weights/lens length mismatch
+        # as an opaque numpy error inside rng.choice — validate both at
+        # construction with messages that name the fields
+        if not self.rate > 0:
+            raise ValueError(
+                f"LoadSpec.rate must be > 0 arrivals/step (got "
+                f"{self.rate}); the arrival process draws exponential "
+                "gaps at 1/rate")
+        if self.gen_weights and len(self.gen_weights) != len(self.gen_lens):
+            raise ValueError(
+                f"LoadSpec.gen_weights has {len(self.gen_weights)} "
+                f"entries for {len(self.gen_lens)} gen_lens; the "
+                "categorical mix needs one weight per length (or an "
+                "empty tuple for uniform)")
+
 
 def _draw_stream(rng: np.random.Generator, spec: LoadSpec,
                  rid_of, home: int) -> list[Request]:
@@ -101,11 +118,38 @@ def burst_workload(spec: LoadSpec, step: int = 0) -> list[Request]:
     faster in prefill-time while the step-clock schedule (and every
     recovered token) is unchanged.  Prompt/generation mixes draw exactly
     like ``make_workload`` (same seeded stream), only the arrival steps
-    are collapsed onto ``step``."""
-    reqs = make_workload(spec)
-    for r in reqs:
-        r.arrival_step = step
-    return reqs
+    are collapsed onto ``step``.
+
+    Fresh instances on purpose: the old in-place ``r.arrival_step =
+    step`` mutated the very Requests make_workload returned, and Request
+    also carries engine-filled bookkeeping (tokens, admitted_step, ...)
+    that must start virgin — replaying one workload list through two
+    engines would silently leak the first run's state into the second
+    (fresh_copy resets nothing because there is nothing to reset)."""
+    return [r.fresh_copy(arrival_step=step) for r in make_workload(spec)]
+
+
+def assert_fresh_instances(*workloads) -> None:
+    """Guard for A/B drivers: workload lists replayed through different
+    engines must not share Request instances (engine-filled bookkeeping
+    would leak between runs) and every request must still be virgin — no
+    tokens, no admission — i.e. built by loadgen / ``fresh_copy``, not
+    recycled from a previous run."""
+    seen: set = set()
+    for wl in workloads:
+        for r in wl:
+            if id(r) in seen:
+                raise AssertionError(
+                    f"request rid={r.rid} is the SAME instance in two "
+                    "workload replays — engine-filled state would leak "
+                    "between runs; build each replay via fresh_copy()")
+            seen.add(id(r))
+            if r.tokens or r.topk_ids or r.admitted_step >= 0 \
+                    or r.finish_step >= 0 or r.slot >= 0:
+                raise AssertionError(
+                    f"request rid={r.rid} carries engine-filled state "
+                    "(already served?) — replay fresh_copy()s, not the "
+                    "previous run's objects")
 
 
 def mixed_length_workload(vocab: int, n_requests: int = 12,
@@ -117,6 +161,89 @@ def mixed_length_workload(vocab: int, n_requests: int = 12,
         n_requests=n_requests, vocab=vocab, rate=2.0,
         prompt_lens=(6, 10, 14), gen_lens=(3, 6, 20),
         gen_weights=(0.5, 0.3, 0.2), seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval traffic (DESIGN.md §11): Zipf-skewed one-shot item lookups
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalLoadSpec:
+    """Web-scale retrieval traffic over a d-item catalog: each request
+    carries a padded set of input item ids (the user's history, Bloom-
+    encoded on admit) plus held-out target items for offline ranking
+    eval.  Item popularity is Zipf(1)-skewed — the DLRM traffic shape
+    (Naumov et al., 2019): a few head items dominate, the tail is huge."""
+
+    n_requests: int = 16
+    catalog: int = 1 << 20               # d — item-catalog size
+    c_max: int = 8                       # input items per request
+    n_targets: int = 2                   # held-out eval items per request
+    rate: float = 2.0                    # mean arrivals per decode step
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.rate > 0:
+            raise ValueError(
+                f"RetrievalLoadSpec.rate must be > 0 (got {self.rate})")
+        if self.c_max < 1 or self.n_targets < 0:
+            raise ValueError(
+                f"need c_max >= 1 and n_targets >= 0, got c_max="
+                f"{self.c_max} n_targets={self.n_targets}")
+        if self.catalog < 4 * (self.c_max + self.n_targets):
+            raise ValueError(
+                f"catalog {self.catalog} too small to draw "
+                f"{self.c_max + self.n_targets} distinct items per "
+                "request with a skewed popularity law")
+
+
+def _zipf_items(rng: np.random.Generator, catalog: int,
+                size: int) -> np.ndarray:
+    """Zipf(s=1)-skewed item draws over [0, catalog), head at id 0.
+
+    Inverse-CDF of the log-uniform density (pdf ∝ 1/(x+1)): item i draws
+    with probability ∝ ln((i+2)/(i+1)) ≈ 1/(i+1) — the bounded Zipf(1)
+    law — in O(size) numpy work with NO d-length probability vector, so
+    the generator stays cheap at 10M-item catalogs."""
+    u = rng.random(size)
+    return np.floor(np.exp(u * np.log(float(catalog) + 1.0))
+                    ).astype(np.int64) - 1
+
+
+def retrieval_workload(spec: RetrievalLoadSpec, host: int = 0,
+                       n_hosts: int = 1) -> list[Request]:
+    """One host's Zipf-skewed retrieval stream — the same pure-function-
+    of ``(seed, host)`` contract as ``host_stream`` (DESIGN.md §8/§11):
+    independent per-host rngs via the (seed, host) entropy pair, rids
+    globally unique and host-tagged (``i * n_hosts + host``), so any
+    subset of hosts replays bit-identically.
+
+    Every request is ``kind="oneshot"``: prompt = ``c_max`` distinct
+    item ids (popularity-skewed, deduped in first-draw order), max_gen=1
+    (prefill -> one recover step -> retire), targets = ``n_targets``
+    further distinct held-out items for offline MAP/RR eval.  Draw order
+    (gaps, then per-request item sets) is part of the committed-bench
+    contract — do not reorder."""
+    rng = np.random.default_rng([spec.seed, host])
+    n, want = spec.n_requests, spec.c_max + spec.n_targets
+    gaps = rng.exponential(1.0 / spec.rate, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(np.int64)
+    reqs = []
+    for i in range(n):
+        draw = _zipf_items(rng, spec.catalog, size=4 * want + 16)
+        items = list(dict.fromkeys(draw.tolist()))[:want]
+        while len(items) < want:          # head-heavy small catalogs can
+            extra = rng.integers(0, spec.catalog, size=want)  # collide out
+            items.extend(v for v in dict.fromkeys(extra.tolist())
+                         if v not in set(items))
+            items = items[:want]
+        items_arr = np.asarray(items, np.int32)
+        reqs.append(Request(
+            rid=i * n_hosts + host,
+            prompt=items_arr[:spec.c_max],
+            max_gen=1, arrival_step=int(arrivals[i]), home=host,
+            kind="oneshot", targets=items_arr[spec.c_max:]))
+    return reqs
 
 
 def arrival_span(per_host: list[list[Request]]) -> tuple[int, int]:

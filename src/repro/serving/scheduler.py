@@ -53,13 +53,23 @@ class Request:
     """One serving request, plus the bookkeeping the engine fills in."""
 
     rid: int
-    prompt: np.ndarray                 # (S,) int32 token ids
+    prompt: np.ndarray                 # (S,) int32 token / item ids
     max_gen: int                       # generation budget (incl. 1st token)
     arrival_step: int = 0              # decode-step clock of arrival
     home: int = 0                      # host shard the request arrived at
+    # request kind (DESIGN.md §11): "lm" loops the autoregressive decode
+    # step until a stop condition; "oneshot" takes exactly one recover
+    # step after prefill and retires (the retrieval scenario's shape)
+    kind: str = "lm"
+    # held-out relevant item ids for offline ranking eval (-1-padded);
+    # never read by the engines — carried so the eval path needs no side
+    # table keyed by rid
+    targets: Optional[np.ndarray] = None
 
     # engine-filled results
     tokens: List[int] = dataclasses.field(default_factory=list)
+    topk_ids: List[int] = dataclasses.field(default_factory=list)
+    topk_scores: List[float] = dataclasses.field(default_factory=list)
     admitted_step: int = -1
     finish_step: int = -1
     slot: int = -1
@@ -73,6 +83,24 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish_step >= 0
+
+    def fresh_copy(self, *, arrival_step: Optional[int] = None) -> "Request":
+        """A new Request carrying ONLY the workload-defined fields.
+
+        The engine-filled bookkeeping (tokens, admitted_step, slot, ...)
+        is an *output* of one engine run, not an input; replaying a
+        workload list through two engines (every A/B driver) must not
+        share instances or the second run starts from the first run's
+        state.  burst_workload and the A/B benches build their replays
+        from fresh copies (see loadgen.assert_fresh_instances)."""
+        return Request(
+            rid=self.rid, prompt=np.array(self.prompt, copy=True),
+            max_gen=self.max_gen,
+            arrival_step=(self.arrival_step if arrival_step is None
+                          else arrival_step),
+            home=self.home, kind=self.kind,
+            targets=(None if self.targets is None
+                     else np.array(self.targets, copy=True)))
 
 
 @dataclasses.dataclass

@@ -15,7 +15,11 @@ def average_precision(scores: np.ndarray, relevant: np.ndarray,
     if exclude is not None:
         ex = [int(i) for i in exclude if i >= 0 and int(i) not in rel]
         s[ex] = -np.inf
-    order = np.argsort(-s)
+    # stable sort: ties rank in ascending item-id order — the SAME
+    # tie-break every top-k decode path follows (DESIGN.md §11), and
+    # deterministic (the default introsort permutes ties arbitrarily,
+    # which made MAP on tied scores platform-dependent)
+    order = np.argsort(-s, kind="stable")
     hits, ap = 0, 0.0
     for rank, item in enumerate(order, start=1):
         if int(item) in rel:
@@ -38,15 +42,33 @@ def mean_average_precision(scores: np.ndarray, relevants: np.ndarray,
     return float(np.mean(aps)) if aps else 0.0
 
 
-def reciprocal_rank(scores: np.ndarray, target: np.ndarray) -> float:
-    """Mean RR of the single correct item. scores (B, d), target (B,)."""
+def reciprocal_rank(scores: np.ndarray, target: np.ndarray,
+                    exclude: np.ndarray | None = None) -> float:
+    """Mean RR of the single correct item. scores (B, d), target (B,).
+
+    Tie handling is mid-rank: ``rank = greater + ties/2 + 1`` where
+    ``ties`` counts the OTHER items scoring exactly scores[t].  The old
+    ``greater + 1`` rank was optimistic — an untrained model emitting
+    constant scores got RR = 1.0 for every target; mid-rank gives the
+    honest expectation over random tie orders (RR ~ 2/d for d-way ties).
+
+    ``exclude`` (B, c) -1-padded masks e.g. the user's input items from
+    the ranking, mirroring average_precision.
+    """
+    scores = np.asarray(scores, np.float64)
     rrs = []
     for i in range(scores.shape[0]):
         t = int(target[i])
         if t < 0:
             continue
-        rank = int((scores[i] > scores[i, t]).sum()) + 1
-        rrs.append(1.0 / rank)
+        s = scores[i]
+        if exclude is not None:
+            s = s.copy()
+            ex = [int(j) for j in exclude[i] if j >= 0 and int(j) != t]
+            s[ex] = -np.inf
+        greater = int((s > s[t]).sum())
+        ties = int((s == s[t]).sum()) - 1   # items tied with the target
+        rrs.append(1.0 / (greater + ties / 2.0 + 1.0))
     return float(np.mean(rrs)) if rrs else 0.0
 
 

@@ -39,6 +39,41 @@ def test_reciprocal_rank():
     assert rr == pytest.approx((1.0 + 0.5) / 2)
 
 
+def test_reciprocal_rank_midrank_ties():
+    # constant scores over d=5: rank = 0 greater + 4/2 ties + 1 = 3 —
+    # the old optimistic `greater + 1` reported RR = 1.0 here
+    scores = np.ones((1, 5))
+    assert M.reciprocal_rank(scores, np.array([2])) == pytest.approx(1 / 3)
+    # partial tie: one item above, one tied -> rank 1 + 0.5 + 1 = 2.5
+    scores = np.array([[0.9, 0.5, 0.5, 0.1]])
+    assert M.reciprocal_rank(scores, np.array([2])) \
+        == pytest.approx(1 / 2.5)
+
+
+def test_reciprocal_rank_exclude_mirrors_average_precision():
+    scores = np.array([[0.9, 0.8, 0.7]])
+    # item 0 excluded (an input) -> target 1 ranks first
+    assert M.reciprocal_rank(scores, np.array([1]),
+                             exclude=np.array([[0, -1]])) == 1.0
+    # the exclude mask never drops the target itself
+    assert M.reciprocal_rank(scores, np.array([1]),
+                             exclude=np.array([[1, -1]])) \
+        == pytest.approx(0.5)
+
+
+def test_average_precision_tied_scores_index_order():
+    # MAP's tie-break is the stable sort's: ascending item id — the same
+    # lowest-id-wins contract every top-k decode path follows
+    # (DESIGN.md §11), and deterministic (the old unstable argsort
+    # permuted ties arbitrarily per platform)
+    scores = np.ones(6)
+    assert M.average_precision(scores, np.array([0])) == pytest.approx(1.0)
+    assert M.average_precision(scores, np.array([3])) \
+        == pytest.approx(1 / 4)
+    assert M.average_precision(scores, np.array([2, 4])) \
+        == pytest.approx((1 / 3 + 2 / 5) / 2)
+
+
 def test_accuracy():
     scores = np.array([[0.9, 0.1], [0.2, 0.8], [0.7, 0.3]])
     target = np.array([0, 1, 1])

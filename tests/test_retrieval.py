@@ -1,0 +1,253 @@
+"""Web-scale one-shot retrieval serving (DESIGN.md §11): the Zipf
+workload contract, the RetrievalEngine slot-pool schedule + replay
+determinism, the top-k tie-break contract shared by all three decode
+paths, and the loadgen/metrics bugfixes the scenario smoked out."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_retrieval_config
+from repro.core import bloom
+from repro.kernels.bloom_decode_topk import bloom_decode_topk_pallas
+from repro.models import io as io_lib
+from repro.serving import (Engine, LoadSpec, Request, RetrievalEngine,
+                           RetrievalLoadSpec, assert_fresh_instances,
+                           burst_workload, evaluate_retrieval,
+                           init_retrieval_params, make_workload,
+                           retrieval_workload)
+from repro.serving.engine import assert_kind
+from repro.train import metrics as M
+
+from conftest import assert_slot_log_sound
+
+
+# ---------------------------------------------------------------------------
+# loadgen: the Zipf retrieval stream + LoadSpec validation + fresh copies
+# ---------------------------------------------------------------------------
+
+def test_retrieval_workload_pure_in_seed_and_host():
+    spec = RetrievalLoadSpec(n_requests=12, catalog=200_000, seed=3)
+    a = retrieval_workload(spec, host=1, n_hosts=4)
+    b = retrieval_workload(spec, host=1, n_hosts=4)
+    for i, (ra, rb) in enumerate(zip(a, b)):
+        assert ra.rid == rb.rid == i * 4 + 1
+        assert np.array_equal(ra.prompt, rb.prompt)
+        assert np.array_equal(ra.targets, rb.targets)
+        assert ra.arrival_step == rb.arrival_step
+    # different host -> a different stream (independent entropy pairs)
+    c = retrieval_workload(spec, host=2, n_hosts=4)
+    assert any(not np.array_equal(ra.prompt, rc.prompt)
+               for ra, rc in zip(a, c))
+
+
+def test_retrieval_workload_shape_and_skew():
+    spec = RetrievalLoadSpec(n_requests=32, catalog=1_000_000, c_max=8,
+                             n_targets=2, seed=0)
+    reqs = retrieval_workload(spec)
+    all_items = []
+    for r in reqs:
+        assert r.kind == "oneshot" and r.max_gen == 1
+        assert r.prompt_len == 8 and len(r.targets) == 2
+        items = np.concatenate([r.prompt, r.targets])
+        assert len(set(items.tolist())) == 10      # distinct per request
+        assert items.min() >= 0 and items.max() < spec.catalog
+        all_items.extend(items.tolist())
+    # Zipf(1) skew: the median drawn item sits around sqrt(catalog),
+    # nowhere near the uniform-law median of catalog/2
+    assert np.median(all_items) < spec.catalog / 50
+
+
+def test_loadspec_validation():
+    with pytest.raises(ValueError, match="rate"):
+        LoadSpec(rate=0.0)
+    with pytest.raises(ValueError, match="rate"):
+        LoadSpec(rate=-1.0)
+    with pytest.raises(ValueError, match="gen_weights"):
+        LoadSpec(gen_lens=(4, 8, 24), gen_weights=(0.5, 0.5))
+    with pytest.raises(ValueError, match="rate"):
+        RetrievalLoadSpec(rate=0.0)
+    with pytest.raises(ValueError, match="catalog"):
+        RetrievalLoadSpec(catalog=16, c_max=8, n_targets=2)
+
+
+def test_burst_workload_leaves_source_requests_alone():
+    spec = LoadSpec(n_requests=6, vocab=128, rate=1.0, seed=0)
+    base = make_workload(spec)
+    arrivals = [r.arrival_step for r in base]
+    burst = burst_workload(spec, step=5)
+    # the old in-place mutation rewrote base's arrival steps to 5
+    assert [r.arrival_step for r in base] == arrivals
+    assert all(r.arrival_step == 5 for r in burst)
+    assert not (set(map(id, base)) & set(map(id, burst)))
+
+
+def test_fresh_copy_and_fresh_instance_guard():
+    r = Request(rid=7, prompt=np.arange(4, dtype=np.int32), max_gen=3,
+                kind="oneshot", targets=np.array([9], np.int32))
+    r.tokens.append(11)
+    r.admitted_step = 2
+    r.slot = 1
+    c = r.fresh_copy(arrival_step=4)
+    assert c.rid == 7 and c.kind == "oneshot" and c.arrival_step == 4
+    assert c.tokens == [] and c.admitted_step == -1 and c.slot == -1
+    assert c.prompt is not r.prompt and np.array_equal(c.prompt, r.prompt)
+    # served instances (or shared ones) must be refused by A/B drivers
+    with pytest.raises(AssertionError, match="engine-filled"):
+        assert_fresh_instances([r])
+    with pytest.raises(AssertionError, match="SAME instance"):
+        assert_fresh_instances([c], [c])
+    assert_fresh_instances([c], [r.fresh_copy()])
+
+
+# ---------------------------------------------------------------------------
+# the retrieval engine: one-shot schedule, replay determinism, kind guard
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    rcfg = get_retrieval_config("smoke")
+    load = RetrievalLoadSpec(n_requests=10, catalog=rcfg.d,
+                             c_max=rcfg.c_max, rate=2.0, seed=0)
+    wl = retrieval_workload(load)
+    params = init_retrieval_params(rcfg)
+    engine = RetrievalEngine(rcfg, params, n_slots=4)
+    res_a, st_a = engine.run([r.fresh_copy() for r in wl])
+    res_b, st_b = engine.run([r.fresh_copy() for r in wl])
+    return rcfg, params, engine, res_a, st_a, res_b, st_b
+
+
+def test_retrieval_engine_serves_all_oneshot(served):
+    rcfg, _, engine, res, st, _, _ = served
+    assert all(r.done and not r.rejected for r in res.values())
+    for r in res.values():
+        assert len(r.topk_ids) == rcfg.topk
+        assert all(0 <= i < rcfg.d for i in r.topk_ids)
+        assert len(set(r.topk_ids)) == rcfg.topk    # distinct items
+        # one-shot: exactly one recover step per request
+        assert r.finish_step == r.admitted_step + 1
+        assert r.tokens == [r.topk_ids[0]]
+    assert st.prefills == len(res) and st.tokens_out == len(res)
+    assert_slot_log_sound(engine._sched, engine.n_slots)
+
+
+def test_retrieval_replay_bit_identical(served):
+    _, _, _, res_a, st_a, res_b, st_b = served
+    for rid, ra in res_a.items():
+        assert ra.topk_ids == res_b[rid].topk_ids
+        assert ra.topk_scores == res_b[rid].topk_scores
+    assert st_a.decode_steps == st_b.decode_steps
+    assert st_a.slot_steps_active == st_b.slot_steps_active
+
+
+def test_retrieval_bytes_model(served):
+    rcfg, _, engine, _, st, _, _ = served
+    mb = engine.modeled_bytes
+    # streaming never exceeds the full-occupancy model and the dense
+    # oracle pays the (d, m) table per step regardless of occupancy
+    full = (rcfg.d * rcfg.k * 4 + rcfg.b_tile * rcfg.m * 4) \
+        * (engine.n_slots // rcfg.b_tile + 1) * st.decode_steps \
+        + engine.n_slots * rcfg.topk * 8 * st.decode_steps
+    assert 0 < mb["streaming_bytes"] <= full
+    assert mb["dense_oracle_bytes"] >= st.decode_steps * rcfg.d * rcfg.m * 4
+    assert mb["dense_oracle_bytes"] > 3 * mb["streaming_bytes"]
+
+
+def test_kind_guards():
+    lm = Request(rid=0, prompt=np.arange(3, dtype=np.int32), max_gen=2)
+    oneshot = Request(rid=1, prompt=np.arange(3, dtype=np.int32),
+                      max_gen=1, kind="oneshot")
+    with pytest.raises(NotImplementedError, match="oneshot"):
+        assert_kind([lm, oneshot], "lm", "the token-LM engine")
+    rcfg = get_retrieval_config("smoke")
+    engine = RetrievalEngine(rcfg, init_retrieval_params(rcfg), n_slots=2)
+    with pytest.raises(NotImplementedError, match="kind='lm'"):
+        engine.run([lm])
+
+
+def test_retrieval_rejects_oversized_item_sets():
+    rcfg = get_retrieval_config("smoke")
+    engine = RetrievalEngine(rcfg, init_retrieval_params(rcfg), n_slots=2)
+    big = Request(rid=0, prompt=np.arange(rcfg.c_max + 1, dtype=np.int32),
+                  max_gen=1, kind="oneshot")
+    with pytest.raises(AssertionError, match="c_max"):
+        engine.run([big])
+
+
+# ---------------------------------------------------------------------------
+# tie-aware ranking eval (the acceptance sanity: untrained << 1.0)
+# ---------------------------------------------------------------------------
+
+def test_untrained_eval_far_below_one(served):
+    rcfg, params, _, res, _, _, _ = served
+    ev = evaluate_retrieval(rcfg, params, list(res.values()))
+    assert ev["n_evaluated"] == len(res)
+    assert 0.0 <= ev["map"] < 0.1 and 0.0 <= ev["rr"] < 0.1
+
+
+def test_constant_scores_rr_is_midrank_not_one(served):
+    # a zeroed tower emits constant logits -> every catalog score ties;
+    # the old optimistic rank reported RR = 1.0 here, mid-rank gives
+    # ~2/d (the honest expectation over random tie orders)
+    rcfg, params, _, res, _, _, _ = served
+    zero = jax.tree.map(jnp.zeros_like, params)
+    ev = evaluate_retrieval(rcfg, zero, list(res.values()))
+    assert ev["rr"] < 0.01
+    assert ev["rr"] == pytest.approx(2.0 / rcfg.d, rel=0.5)
+
+
+# ---------------------------------------------------------------------------
+# the top-k tie-break contract (DESIGN.md §11): equal Eq. 3 scores
+# resolve lowest-item-id first on ALL THREE decode paths, even when the
+# tie group straddles chunk (streaming oracle) or v_tile (pallas) edges
+# ---------------------------------------------------------------------------
+
+def _tie_reference(spec, logp, topk):
+    """One-shot XLA reference: materialize every Eq. 3 score, take
+    jax.lax.top_k — whose tie-break is lowest index wins."""
+    scores = bloom.decode_scores(spec, logp)
+    return jax.lax.top_k(scores, topk)
+
+
+@pytest.mark.parametrize("logp_kind", ["constant", "collision"])
+def test_topk_tiebreak_contract_three_paths(logp_kind):
+    # d >> number of distinct (k=2, m=16) hash sets => massive score
+    # ties, guaranteed to straddle the chunk=64 / v_tile=64 boundaries
+    spec = bloom.BloomSpec(d=256, m=16, k=2, seed=1, on_the_fly=True)
+    topk = 12
+    if logp_kind == "constant":
+        logits = jnp.zeros((3, spec.m))            # ALL d scores equal
+    else:
+        logits = jax.random.normal(jax.random.PRNGKey(0), (3, spec.m))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    ref_v, ref_i = _tie_reference(spec, logp, topk)
+    if logp_kind == "constant":
+        # the contract made concrete: a full tie returns items 0..topk-1
+        assert np.array_equal(np.asarray(ref_i),
+                              np.tile(np.arange(topk), (3, 1)))
+
+    # path 2: streaming oracle, small chunk so ties cross merges
+    s_v, s_i = bloom.decode_topk(spec, logp, topk, chunk=64)
+    np.testing.assert_array_equal(np.asarray(s_i), np.asarray(ref_i))
+    np.testing.assert_allclose(np.asarray(s_v), np.asarray(ref_v),
+                               rtol=1e-6)
+
+    # path 3: the Pallas kernel, small v_tile so ties cross tiles
+    H = bloom.cached_hash_matrix(spec)
+    p_v, p_i = bloom_decode_topk_pallas(logp, H, topk, b_tile=2,
+                                        v_tile=64)
+    np.testing.assert_array_equal(np.asarray(p_i), np.asarray(ref_i))
+    np.testing.assert_allclose(np.asarray(p_v), np.asarray(ref_v),
+                               rtol=1e-6)
+
+    # and the shared serving entrypoint (io.recover_topk_spec) follows
+    # the same contract on its xla path, with inactive rows masked
+    active = jnp.array([True, False, True])
+    r_v, r_i = io_lib.recover_topk_spec(spec, logits, topk, impl="xla",
+                                        chunk=64, active=active)
+    np.testing.assert_array_equal(np.asarray(r_i)[0], np.asarray(ref_i)[0])
+    assert np.all(np.asarray(r_i)[1] == 0)
+    assert np.all(np.isneginf(np.asarray(r_v)[1]))
