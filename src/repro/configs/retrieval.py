@@ -79,6 +79,13 @@ RETRIEVAL_CONFIGS: Dict[str, RetrievalConfig] = {
     "web10m": RetrievalConfig(name="web10m", d=10_000_000, m=8192, k=2),
     "smoke": RetrievalConfig(name="smoke", d=50_000, m=256, k=2,
                              hidden=(32,), topk=8, chunk=8192),
+    # training/eval scale (train/retrieval_trainer.py): small enough
+    # that the full-score (B, d) ranking eval and a CPU training drill
+    # fit CI wall-clock, big enough that an untrained tower's MAP is
+    # ~1/d-noise — the compression sweep replaces m per point
+    # (m = d/ratio for ratio in {1, 2, 5, 10})
+    "eval2k": RetrievalConfig(name="eval2k", d=2_000, m=400, k=2,
+                              hidden=(32,), topk=10, chunk=2048),
 }
 
 

@@ -36,6 +36,7 @@ recorded but never asserted on.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -79,36 +80,148 @@ def assert_kind(requests, kind: str, engine: str) -> None:
 
 class SlotProgram:
     """Arch-agnostic per-slot program: WHAT one slot computes, decoupled
-    from WHEN the engine/scheduler runs it (groundwork for the ROADMAP
-    "continuous batching for every architecture" refactor; DESIGN.md
-    §11).  A program's ``prefill`` turns a request into the payload its
-    slot will hold — (caches, first_token) for the autoregressive LM
-    program below, a (m,) logits row (and no first token) for the
-    one-shot retrieval program in serving/retrieval.py.  ``kind`` names
-    the Request.kind the program serves; ``oneshot`` programs take
-    exactly one recover step after prefill and retire.
+    from WHEN the engine/scheduler runs it (the ROADMAP "continuous
+    batching for every architecture" refactor; DESIGN.md §11–12).
+
+    The protocol has two halves:
+
+      * **prefill half** — ``prefill`` turns a request into the payload
+        its slot will hold: (caches, first_token) for the autoregressive
+        LM program below, a (m,) logits row (and no first token) for the
+        one-shot retrieval program in serving/retrieval.py.  This is the
+        half ``PrefillWorker``/``PrefillPool`` run, possibly on their own
+        mesh slice — a prefill-only program never builds decode state.
+      * **decode half** — the program OWNS its slot-pool state and the
+        jitted callables that advance it.  ``init_state`` allocates the
+        device-resident pool; ``insert`` consumes a prefill payload into
+        a slot (returning whether the slot went live); ``step`` runs ONE
+        jitted decode over the whole pool and returns host-side outputs;
+        ``emit`` writes one slot's outputs into its request (returning
+        whether the slot retires).  ``run_slot_loop`` below drives any
+        program through the Scheduler/RequestQueue machinery — the LM
+        engine and the retrieval engine are the same loop with a
+        different program plugged in.
+
+    ``kind`` names the Request.kind the program serves; ``oneshot``
+    programs take exactly one recover step after prefill and retire.
     """
 
     kind = "lm"
     oneshot = False
+    engine_label = "a slot-program engine"
 
+    # -- prefill half --------------------------------------------------
     def prefill(self, params, req: Request, device=None):
         raise NotImplementedError
+
+    # -- decode half ---------------------------------------------------
+    def check_admit(self, req: Request) -> None:
+        """Per-request capacity precondition, asserted at admission."""
+        raise NotImplementedError
+
+    def init_state(self, n_slots: int):
+        """Allocate the program's device-resident slot-pool state."""
+        raise NotImplementedError
+
+    def reset_slots(self, state) -> None:
+        """Reset per-slot occupancy for a fresh static group (persistent
+        pool buffers survive; only the who-is-live state clears)."""
+        raise NotImplementedError
+
+    def insert(self, state, req: Request, payload, stats: ServeStats
+               ) -> bool:
+        """Consume ``payload`` (what ``prefill`` emitted) into
+        ``req.slot``; record any prefill-time output on the request.
+        Returns True if the slot is now live (needs decode steps),
+        False if the request finished at prefill time."""
+        raise NotImplementedError
+
+    def step(self, params, state):
+        """ONE jitted decode step over the whole pool; advances
+        ``state`` in place and returns host-side outputs for ``emit``."""
+        raise NotImplementedError
+
+    def emit(self, state, req: Request, slot: int, out,
+             stats: ServeStats) -> bool:
+        """Write slot ``slot``'s share of ``out`` into ``req``.
+        Returns True if the slot retires (the loop releases it)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class _LMState:
+    """Device-resident LM slot-pool state: the KV-cache pool plus the
+    (tokens, pos, active) slot vectors that stay on device for the whole
+    run (host writes only on admit/retire events — see module doc)."""
+    caches: object
+    tokens: object
+    pos: object
+    active: object
 
 
 class LMSlotProgram(SlotProgram):
     """The autoregressive token-LM program: jitted prefill + first-token
-    Eq. 3 recovery.  Prefill is always B=1 at the exact prompt length —
-    bit-identical to serving the request alone."""
+    Eq. 3 recovery, and (when constructed with ``max_len``) the decode
+    half — slot KV-cache pool, one jitted pool-decode step, device-side
+    (tokens, pos, active) advance.  Prefill is always B=1 at the exact
+    prompt length — bit-identical to serving the request alone.
+
+    A prefill-only instance (``PrefillWorker``'s default; the sharded
+    engine's disaggregated prefill slice) omits ``max_len`` and never
+    builds the decode-side jits or the pool template."""
 
     kind = "lm"
     oneshot = False
+    engine_label = "the token-LM engine"
 
-    def __init__(self, cfg: ModelConfig, *, topk: int, dist=None):
+    def __init__(self, cfg: ModelConfig, *, topk: int, dist=None,
+                 n_slots: Optional[int] = None,
+                 max_len: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.topk = topk
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
         self._prefill = jax.jit(steps_lib.make_prefill_step(cfg, dist))
         self._recover = jax.jit(
             lambda logits: io_lib.recover_topk(cfg, logits, topk=topk))
+        if max_len is None:
+            return                      # prefill-only program
+        assert n_slots is not None and n_slots >= 1 and max_len >= 2
+        # the pool is donated through every decode/insert: the loop
+        # never reuses the previous tree, so XLA (where supported)
+        # updates the multi-GB cache in place instead of allocating a
+        # second pool and copying per step
+        self._decode = jax.jit(steps_lib.make_slot_decode_step(
+            cfg, topk=topk, dist=dist), donate_argnums=(2,))
+        self._insert = jax.jit(steps_lib.insert_cache_slot,
+                               donate_argnums=(0,))
+        self._pool_template = tf.init_lm_cache(
+            cfg, n_slots, max_len, dtype=jnp.dtype(cfg.dtype))
+        # (tokens, pos, active) live ON DEVICE for the whole run: the
+        # old loop rebuilt them host-side and re-uploaded all three
+        # every decode step (3 h2d transfers per token).  Steady-state
+        # decode advances them from the step's own outputs (_advance —
+        # next token and pos+1 for every slot that decoded, exactly
+        # what the host wrote back); the host touches them only on
+        # admit (_set_slot) and retire (_drop_slot) events.  Values are
+        # bit-identical to the host-side bookkeeping, so tokens are too.
+        self._advance = jax.jit(
+            lambda ids, tokens, pos, active: (
+                jnp.where(active[:, None], ids[:, :1], tokens),
+                pos + active.astype(pos.dtype)),
+            donate_argnums=(1, 2))
+        self._set_slot = jax.jit(
+            lambda tokens, pos, active, slot, tok, p: (
+                tokens.at[slot, 0].set(tok), pos.at[slot].set(p),
+                active.at[slot].set(True)),
+            donate_argnums=(0, 1, 2))
+        self._drop_slot = jax.jit(lambda active, slot:
+                                  active.at[slot].set(False),
+                                  donate_argnums=(0,))
 
+    # -- prefill half --------------------------------------------------
     def prefill(self, params, req: Request, device=None):
         """req -> (caches at prompt length, greedy first token id)."""
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -117,6 +230,67 @@ class LMSlotProgram(SlotProgram):
         pre = self._prefill(params, {"tokens": prompt})
         _, ids = self._recover(pre["last_logits"])
         return pre["caches"], int(np.asarray(ids)[0, 0])
+
+    # -- decode half ---------------------------------------------------
+    def check_admit(self, req: Request) -> None:
+        assert_request_fits(req, self.max_len)
+
+    def stopped(self, req: Request, tok: int) -> bool:
+        if self.eos_id is not None and tok == self.eos_id:
+            return True
+        return len(req.tokens) >= req.max_gen
+
+    def init_state(self, n_slots: int) -> _LMState:
+        assert n_slots == self.n_slots
+        # copy, not alias: the first donated insert/decode consumes its
+        # input buffers, and the template must survive across runs
+        return _LMState(
+            caches=jax.tree.map(jnp.copy, self._pool_template),
+            tokens=jnp.zeros((self.n_slots, 1), jnp.int32),
+            pos=jnp.zeros((self.n_slots,), jnp.int32),
+            active=jnp.zeros((self.n_slots,), bool))
+
+    def reset_slots(self, state: _LMState) -> None:
+        state.tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        state.pos = jnp.zeros((self.n_slots,), jnp.int32)
+        state.active = jnp.zeros((self.n_slots,), bool)
+
+    def insert(self, state: _LMState, req: Request, payload,
+               stats: ServeStats) -> bool:
+        small, first = payload
+        state.caches = self._insert(state.caches, small,
+                                    jnp.int32(req.slot))
+        req.tokens.append(first)
+        stats.tokens_out += 1
+        if self.stopped(req, first):
+            return False
+        # admit event: the only h2d update of the slot state
+        state.tokens, state.pos, state.active = self._set_slot(
+            state.tokens, state.pos, state.active, jnp.int32(req.slot),
+            jnp.int32(first), jnp.int32(req.prompt_len))
+        return True
+
+    def step(self, params, state: _LMState):
+        out = self._decode(params, state.tokens, state.caches,
+                           state.pos, state.active)
+        state.caches = out["caches"]
+        # steady-state decode: tokens/pos advance on device from the
+        # step's own outputs — no host round-trip re-upload.  The d2h
+        # token download below is irreducible (the scheduler decides
+        # retirement host-side).
+        state.tokens, state.pos = self._advance(
+            out["topk_ids"], state.tokens, state.pos, state.active)
+        return np.asarray(out["topk_ids"][:, 0])
+
+    def emit(self, state: _LMState, req: Request, slot: int, out,
+             stats: ServeStats) -> bool:
+        tok = int(out[slot])
+        req.tokens.append(tok)
+        stats.tokens_out += 1
+        if self.stopped(req, tok):
+            state.active = self._drop_slot(state.active, jnp.int32(slot))
+            return True
+        return False
 
 
 class PrefillWorker:
@@ -266,11 +440,90 @@ class PrefillPool:
         return self.drain()
 
 
+def run_slot_loop(program: SlotProgram, params, prefill_pool: PrefillPool,
+                  requests: List[Request], n_slots: int,
+                  state=None) -> Tuple[Dict[int, Request], ServeStats,
+                                       Scheduler, object]:
+    """THE continuous-batching serve loop, generic over a SlotProgram.
+
+    Admission, prefill dispatch, rejection, per-step stats, clock
+    fast-forward and retirement are identical for every program; what a
+    slot holds (KV caches vs a logits row), what a decode step computes,
+    and what retires a slot (stop condition vs oneshot) live in the
+    program.  The LM engine's ``run`` and the retrieval engine's ``run``
+    are both thin wrappers over this function — tokens and top-k ids are
+    bit-identical to the pre-refactor per-engine loops (asserted by
+    tests/test_serving.py + tests/test_retrieval.py and the
+    BENCH_serving.json --check gate).
+
+    Mutates and returns the requests; also returns the Scheduler (slot
+    event log) and the program state (e.g. the retrieval program's
+    accumulated modeled bytes).
+    """
+    assert_kind(requests, program.kind, program.engine_label)
+    queue = RequestQueue(requests)
+    sched = Scheduler(n_slots)
+    stats = ServeStats()
+    if state is None:
+        state = program.init_state(n_slots)
+    now = 0
+    t0 = time.perf_counter()
+
+    while len(queue) or sched.n_active:
+        admitted = sched.admit(queue, now)
+        for req in admitted:
+            program.check_admit(req)
+        # the whole admission burst goes through the prefill pool at
+        # once: FIFO dispatch over the workers, results in admission
+        # order (token- and schedule-identical for any worker count)
+        prefilled = (prefill_pool.prefill_all(admitted)
+                     if admitted else [])
+        for req, res in zip(admitted, prefilled):
+            if res is None:
+                # every prefill attempt failed: REJECT — free the slot
+                # instead of hanging the pool on a request that can
+                # never start
+                stats.rejects += 1
+                sched.reject(req.slot, now)
+                continue
+            stats.prefills += 1
+            if not program.insert(state, req, res, stats):
+                # prefill-time retirement (max_gen==1 / first-token EOS)
+                sched.release(req.slot, now)
+
+        if not sched.n_active:
+            nxt = queue.next_arrival()
+            if nxt is None:
+                break
+            if nxt <= now:
+                # a slot was freed at `now` (prefill-time retirement or
+                # reject) while a request is already ready: re-admit
+                # NOW, no clock tick
+                continue
+            # empty pool: fast-forward the clock to the next arrival
+            stats.idle_steps += nxt - now
+            now = nxt
+            continue
+
+        out = program.step(params, state)
+        stats.decode_steps += 1
+        stats.slot_steps_total += n_slots
+        stats.slot_steps_active += sched.n_active
+        now += 1
+        for slot, req in list(sched.active.items()):
+            if program.emit(state, req, slot, out, stats):
+                sched.release(slot, now)
+
+    stats.wall_s = time.perf_counter() - t0
+    return {r.rid: r for r in requests}, stats, sched, state
+
+
 class Engine:
     """Continuous-batching engine over a fixed slot pool.
 
-    One Engine owns the jitted prefill / slot-decode / cache-insert
-    callables and the preallocated pool; ``run`` (continuous) and
+    One Engine owns ONE ``LMSlotProgram`` — the jitted prefill /
+    slot-decode / cache-insert callables and the preallocated pool
+    template; ``run`` (continuous, via ``run_slot_loop``) and
     ``run_static`` (A/B baseline) share them, so any numeric difference
     between the two paths would be a scheduling bug, not a compile
     difference.
@@ -303,155 +556,30 @@ class Engine:
         self.topk = topk
         self.eos_id = eos_id
         self.failpoints = failpoints if failpoints else None
+        self.program = LMSlotProgram(cfg, topk=topk, dist=dist,
+                                     n_slots=n_slots, max_len=max_len,
+                                     eos_id=eos_id)
+        # the pool shares the engine's program: one set of jitted
+        # prefill callables for prefill AND admission (jit
+        # re-specializes per device placement on its own)
         self.prefill_pool = PrefillPool(cfg, params, topk=topk, dist=dist,
                                         n_workers=prefill_workers,
-                                        failpoints=self.failpoints)
-        # the pool is donated through every decode/insert: the host loop
-        # never reuses the previous tree, so XLA (where supported) updates
-        # the multi-GB cache in place instead of allocating a second pool
-        # and copying per step
-        self._decode = jax.jit(steps_lib.make_slot_decode_step(
-            cfg, topk=topk, dist=dist), donate_argnums=(2,))
-        self._insert = jax.jit(steps_lib.insert_cache_slot,
-                               donate_argnums=(0,))
-        self._pool_template = tf.init_lm_cache(
-            cfg, n_slots, max_len, dtype=jnp.dtype(cfg.dtype))
-        # (tokens, pos, active) live ON DEVICE for the whole run: the old
-        # loop rebuilt them host-side and re-uploaded all three every
-        # decode step (3 h2d transfers per token).  Steady-state decode
-        # advances them from the step's own outputs (_advance — next
-        # token and pos+1 for every slot that decoded, exactly what the
-        # host wrote back); the host touches them only on admit
-        # (_set_slot) and retire (_drop_slot) events.  Values are
-        # bit-identical to the host-side bookkeeping, so tokens are too.
-        self._advance = jax.jit(
-            lambda ids, tokens, pos, active: (
-                jnp.where(active[:, None], ids[:, :1], tokens),
-                pos + active.astype(pos.dtype)),
-            donate_argnums=(1, 2))
-        self._set_slot = jax.jit(
-            lambda tokens, pos, active, slot, tok, p: (
-                tokens.at[slot, 0].set(tok), pos.at[slot].set(p),
-                active.at[slot].set(True)),
-            donate_argnums=(0, 1, 2))
-        self._drop_slot = jax.jit(lambda active, slot:
-                                  active.at[slot].set(False),
-                                  donate_argnums=(0,))
-
-    def _fresh_slot_state(self):
-        """Persistent device-side (tokens, pos, active) slot buffers."""
-        return (jnp.zeros((self.n_slots, 1), jnp.int32),
-                jnp.zeros((self.n_slots,), jnp.int32),
-                jnp.zeros((self.n_slots,), bool))
-
-    def _fresh_pool(self):
-        # copy, not alias: the first donated insert/decode consumes its
-        # input buffers, and the template must survive across run() calls
-        return jax.tree.map(jnp.copy, self._pool_template)
-
-    # ------------------------------------------------------------------
-    def _admit_one(self, req: Request, caches):
-        """Prefill one request (B=1, exact prompt length — bit-identical
-        to serving it alone) and write its caches into its slot."""
-        assert_request_fits(req, self.max_len)
-        res, = self.prefill_pool.prefill_all([req])
-        assert res is not None, (
-            f"request {req.rid}: prefill permanently failed on the "
-            "static path (no REJECT protocol there — serve it via the "
-            "continuous engine)")
-        small, first = res
-        caches = self._insert(caches, small, jnp.int32(req.slot))
-        return caches, first
+                                        failpoints=self.failpoints,
+                                        program=self.program)
 
     def _stopped(self, req: Request, tok: int) -> bool:
-        if self.eos_id is not None and tok == self.eos_id:
-            return True
-        return len(req.tokens) >= req.max_gen
+        return self.program.stopped(req, tok)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request]
             ) -> Tuple[Dict[int, Request], ServeStats]:
         """Continuous batching: admit into freed slots every step, retire
         on per-slot stop conditions.  Mutates and returns the requests."""
-        assert_kind(requests, "lm", "the token-LM engine")
-        queue = RequestQueue(requests)
-        sched = Scheduler(self.n_slots)
-        stats = ServeStats()
-
-        tokens, pos, active = self._fresh_slot_state()
-        caches = self._fresh_pool()
-        now = 0
-        t0 = time.perf_counter()
-
-        while len(queue) or sched.n_active:
-            admitted = sched.admit(queue, now)
-            for req in admitted:
-                assert_request_fits(req, self.max_len)
-            # the whole admission burst goes through the prefill pool at
-            # once: FIFO dispatch over the workers, results in admission
-            # order (token- and schedule-identical for any worker count)
-            prefilled = (self.prefill_pool.prefill_all(admitted)
-                         if admitted else [])
-            for req, res in zip(admitted, prefilled):
-                if res is None:
-                    # every prefill attempt failed: REJECT — free the
-                    # slot instead of hanging the pool on a request that
-                    # can never start
-                    stats.rejects += 1
-                    sched.reject(req.slot, now)
-                    continue
-                small, first = res
-                caches = self._insert(caches, small, jnp.int32(req.slot))
-                req.tokens.append(first)
-                stats.prefills += 1
-                stats.tokens_out += 1
-                if self._stopped(req, first):
-                    sched.release(req.slot, now)
-                else:
-                    # admit event: the only h2d update of the slot state
-                    tokens, pos, active = self._set_slot(
-                        tokens, pos, active, jnp.int32(req.slot),
-                        jnp.int32(first), jnp.int32(req.prompt_len))
-
-            if not sched.n_active:
-                nxt = queue.next_arrival()
-                if nxt is None:
-                    break
-                if nxt <= now:
-                    # a slot was freed by a prefill-time retirement
-                    # (max_gen==1 / first-token EOS) while a request is
-                    # already ready: re-admit NOW, no clock tick
-                    continue
-                # empty pool: fast-forward the clock to the next arrival
-                stats.idle_steps += nxt - now
-                now = nxt
-                continue
-
-            out = self._decode(self.params, tokens, caches, pos, active)
-            caches = out["caches"]
-            # steady-state decode: tokens/pos advance on device from the
-            # step's own outputs — no host round-trip re-upload.  The
-            # d2h token download below is irreducible (the scheduler
-            # decides retirement host-side).  `active` at decode time is
-            # exactly sched.active membership, so its sum is host state.
-            tokens, pos = self._advance(out["topk_ids"], tokens, pos,
-                                        active)
-            ids = np.asarray(out["topk_ids"][:, 0])
-            stats.decode_steps += 1
-            stats.slot_steps_total += self.n_slots
-            stats.slot_steps_active += sched.n_active
-            now += 1
-            for slot, req in list(sched.active.items()):
-                tok = int(ids[slot])
-                req.tokens.append(tok)
-                stats.tokens_out += 1
-                if self._stopped(req, tok):
-                    sched.release(slot, now)
-                    active = self._drop_slot(active, jnp.int32(slot))
-
-        stats.wall_s = time.perf_counter() - t0
+        results, stats, sched, _ = run_slot_loop(
+            self.program, self.params, self.prefill_pool, requests,
+            self.n_slots)
         self._sched = sched          # exposed for the simulation tests
-        return {r.rid: r for r in requests}, stats
+        return results, stats
 
     # ------------------------------------------------------------------
     def run_static(self, requests: List[Request]
@@ -464,9 +592,10 @@ class Engine:
         which is exactly the utilization gap continuous batching closes.
         """
         assert_kind(requests, "lm", "the token-LM engine")
+        prog = self.program
         stats = ServeStats()
         reqs = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
-        caches = self._fresh_pool()
+        state = prog.init_state(self.n_slots)
         now = 0
         t0 = time.perf_counter()
 
@@ -476,7 +605,7 @@ class Engine:
             stats.idle_steps += start - now
             now = start
 
-            tokens, pos, active = self._fresh_slot_state()
+            prog.reset_slots(state)
             # host-side mirror of the active mask — scheduling decisions
             # (group drained? which slots still collect?) stay host-side;
             # the device mask is only written on admit/retire events
@@ -484,25 +613,20 @@ class Engine:
             for slot, req in enumerate(group):
                 req.slot = slot
                 req.admitted_step = now
-                caches, first = self._admit_one(req, caches)
-                req.tokens.append(first)
+                prog.check_admit(req)
+                res, = self.prefill_pool.prefill_all([req])
+                assert res is not None, (
+                    f"request {req.rid}: prefill permanently failed on "
+                    "the static path (no REJECT protocol there — serve "
+                    "it via the continuous engine)")
                 stats.prefills += 1
-                stats.tokens_out += 1
-                if self._stopped(req, first):
-                    req.finish_step = now
-                else:
+                if prog.insert(state, req, res, stats):
                     collecting[slot] = True
-                    tokens, pos, active = self._set_slot(
-                        tokens, pos, active, jnp.int32(slot),
-                        jnp.int32(first), jnp.int32(req.prompt_len))
+                else:
+                    req.finish_step = now
 
             while collecting.any():
-                out = self._decode(self.params, tokens, caches, pos,
-                                   active)
-                caches = out["caches"]
-                tokens, pos = self._advance(out["topk_ids"], tokens, pos,
-                                            active)
-                ids = np.asarray(out["topk_ids"][:, 0])
+                out = prog.step(self.params, state)
                 stats.decode_steps += 1
                 # static batching burns every slot of the pool per step
                 stats.slot_steps_total += self.n_slots
@@ -511,13 +635,9 @@ class Engine:
                 for slot, req in enumerate(group):
                     if not collecting[slot]:
                         continue
-                    tok = int(ids[slot])
-                    req.tokens.append(tok)
-                    stats.tokens_out += 1
-                    if self._stopped(req, tok):
+                    if prog.emit(state, req, slot, out, stats):
                         req.finish_step = now
                         collecting[slot] = False
-                        active = self._drop_slot(active, jnp.int32(slot))
 
         stats.wall_s = time.perf_counter() - t0
         return {r.rid: r for r in requests}, stats

@@ -39,8 +39,8 @@ marker the CI job greps for.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -52,12 +52,11 @@ from repro.core import bloom as bloom_lib
 from repro.kernels.bloom_decode_topk import modeled_hbm_bytes
 from repro.launch import steps as steps_lib
 from repro.models import recommender as rec_lib
-from repro.serving.engine import PrefillPool, SlotProgram, assert_kind
+from repro.serving.engine import PrefillPool, SlotProgram, run_slot_loop
 from repro.serving.failpoints import FailPlan
 from repro.serving.loadgen import (RetrievalLoadSpec, assert_fresh_instances,
                                    retrieval_workload)
-from repro.serving.scheduler import (Request, RequestQueue, Scheduler,
-                                     ServeStats)
+from repro.serving.scheduler import Request, ServeStats
 from repro.train import metrics as metrics_lib
 
 # full-score eval materializes (B, d) — fine for the smoke/web1m specs,
@@ -72,18 +71,42 @@ def init_retrieval_params(rcfg: RetrievalConfig, key=None):
     return rec_lib.ff_init(key, rcfg.m, rcfg.hidden, rcfg.m)
 
 
+@dataclasses.dataclass
+class _RetrievalState:
+    """Retrieval slot-pool state: the device-resident (n_slots, m)
+    logits pool, a host mirror of the occupancy mask (the decode step's
+    ``active`` input AND the bytes model's occupancy argument), and the
+    run's accumulated modeled streaming bytes."""
+    pool: object
+    live: np.ndarray
+    streaming_bytes: int = 0
+
+
 class RetrievalProgram(SlotProgram):
     """The one-shot retrieval slot program (see module doc): prefill
     emits ``(logits_row, None)`` — there is no first token, the slot's
-    whole output comes from the single recover step."""
+    whole output comes from the single recover step.  The decode half
+    (constructed with ``n_slots``) owns the (n_slots, m) logits pool and
+    the one occupancy-aware streaming Eq. 3 top-k step over the catalog,
+    after which every served slot retires (``oneshot``)."""
 
     kind = "oneshot"
     oneshot = True
+    engine_label = "the retrieval engine"
 
-    def __init__(self, rcfg: RetrievalConfig):
+    def __init__(self, rcfg: RetrievalConfig,
+                 n_slots: Optional[int] = None):
         self.rcfg = rcfg
+        self.n_slots = n_slots
         self._prefill = jax.jit(steps_lib.make_retrieval_prefill_step(rcfg))
+        if n_slots is None:
+            return                      # prefill-only program
+        self._decode = jax.jit(steps_lib.make_retrieval_decode_step(rcfg))
+        self._insert = jax.jit(
+            lambda pool, row, slot: pool.at[slot].set(row),
+            donate_argnums=(0,))
 
+    # -- prefill half --------------------------------------------------
     def prefill(self, params, req: Request, device=None):
         items = np.full((1, self.rcfg.c_max), -1, np.int32)
         items[0, :req.prompt_len] = np.asarray(req.prompt, np.int32)
@@ -91,6 +114,48 @@ class RetrievalProgram(SlotProgram):
         if device is not None:
             x = jax.device_put(x, device)
         return self._prefill(params, x)[0], None
+
+    # -- decode half ---------------------------------------------------
+    def check_admit(self, req: Request) -> None:
+        assert req.prompt_len <= self.rcfg.c_max, (
+            f"request {req.rid}: {req.prompt_len} input items exceeds "
+            f"c_max {self.rcfg.c_max}")
+
+    def init_state(self, n_slots: int) -> _RetrievalState:
+        assert n_slots == self.n_slots
+        return _RetrievalState(
+            pool=jnp.zeros((n_slots, self.rcfg.m), jnp.float32),
+            live=np.zeros((n_slots,), bool))
+
+    def reset_slots(self, state: _RetrievalState) -> None:
+        state.live[:] = False
+
+    def insert(self, state: _RetrievalState, req: Request, payload,
+               stats: ServeStats) -> bool:
+        row, first = payload
+        assert first is None, "oneshot prefill emits no token"
+        state.pool = self._insert(state.pool, row, jnp.int32(req.slot))
+        state.live[req.slot] = True
+        return True
+
+    def step(self, params, state: _RetrievalState):
+        active = jnp.asarray(state.live)
+        scores, ids = self._decode(state.pool, active)
+        state.streaming_bytes += modeled_hbm_bytes(
+            state.live, self.rcfg.b_tile, m=self.rcfg.m, d=self.rcfg.d,
+            k=self.rcfg.k, topk=self.rcfg.topk)
+        return np.asarray(ids), np.asarray(scores)
+
+    def emit(self, state: _RetrievalState, req: Request, slot: int, out,
+             stats: ServeStats) -> bool:
+        # one-shot: every slot that decoded retires with its top-k
+        ids_np, scores_np = out
+        req.topk_ids = [int(i) for i in ids_np[slot]]
+        req.topk_scores = [float(s) for s in scores_np[slot]]
+        req.tokens.append(int(ids_np[slot, 0]))
+        stats.tokens_out += 1
+        state.live[slot] = False
+        return True
 
 
 class RetrievalEngine:
@@ -117,15 +182,11 @@ class RetrievalEngine:
         self.rcfg = rcfg
         self.params = params
         self.n_slots = n_slots
-        self.program = RetrievalProgram(rcfg)
+        self.program = RetrievalProgram(rcfg, n_slots=n_slots)
         self.prefill_pool = PrefillPool(
             None, params, topk=rcfg.topk, n_workers=prefill_workers,
             failpoints=failpoints if failpoints else None,
             program=self.program)
-        self._decode = jax.jit(steps_lib.make_retrieval_decode_step(rcfg))
-        self._insert = jax.jit(
-            lambda pool, row, slot: pool.at[slot].set(row),
-            donate_argnums=(0,))
         self.modeled_bytes: Dict[str, int] = {}
 
     def _dense_oracle_step_bytes(self) -> int:
@@ -141,83 +202,22 @@ class RetrievalEngine:
 
     def run(self, requests: List[Request]
             ) -> Tuple[Dict[int, Request], ServeStats]:
-        """Serve ``oneshot`` requests; mutates and returns them with
-        ``topk_ids`` / ``topk_scores`` filled (and ``tokens`` holding
-        the top-1 item, so shared latency/throughput accounting works
-        unchanged)."""
-        assert_kind(requests, "oneshot", "the retrieval engine")
-        for r in requests:
-            assert r.prompt_len <= self.rcfg.c_max, (
-                f"request {r.rid}: {r.prompt_len} input items exceeds "
-                f"c_max {self.rcfg.c_max}")
-        queue = RequestQueue(requests)
-        sched = Scheduler(self.n_slots)
-        stats = ServeStats()
-
-        pool = jnp.zeros((self.n_slots, self.rcfg.m), jnp.float32)
-        active = jnp.zeros((self.n_slots,), bool)
-        live = np.zeros((self.n_slots,), bool)   # host mirror of `active`
-        streaming_bytes = 0
-        now = 0
-        t0 = time.perf_counter()
-
-        while len(queue) or sched.n_active:
-            admitted = sched.admit(queue, now)
-            prefilled = (self.prefill_pool.prefill_all(admitted)
-                         if admitted else [])
-            for req, res in zip(admitted, prefilled):
-                if res is None:
-                    stats.rejects += 1
-                    sched.reject(req.slot, now)
-                    continue
-                row, first = res
-                assert first is None, "oneshot prefill emits no token"
-                pool = self._insert(pool, row, jnp.int32(req.slot))
-                live[req.slot] = True
-                stats.prefills += 1
-
-            if not sched.n_active:
-                nxt = queue.next_arrival()
-                if nxt is None:
-                    break
-                if nxt <= now:
-                    # slots freed at `now` (reject path) with a request
-                    # already ready: re-admit NOW, no clock tick
-                    continue
-                # empty pool: fast-forward the clock to the next arrival
-                stats.idle_steps += nxt - now
-                now = nxt
-                continue
-
-            active = jnp.asarray(live)
-            scores, ids = self._decode(pool, active)
-            streaming_bytes += modeled_hbm_bytes(
-                live, self.rcfg.b_tile, m=self.rcfg.m, d=self.rcfg.d,
-                k=self.rcfg.k, topk=self.rcfg.topk)
-            ids_np = np.asarray(ids)
-            scores_np = np.asarray(scores)
-            stats.decode_steps += 1
-            stats.slot_steps_total += self.n_slots
-            stats.slot_steps_active += sched.n_active
-            now += 1
-            # one-shot: every slot that decoded retires with its top-k
-            for slot, req in list(sched.active.items()):
-                req.topk_ids = [int(i) for i in ids_np[slot]]
-                req.topk_scores = [float(s) for s in scores_np[slot]]
-                req.tokens.append(int(ids_np[slot, 0]))
-                stats.tokens_out += 1
-                sched.release(slot, now)
-                live[slot] = False
-
-        stats.wall_s = time.perf_counter() - t0
+        """Serve ``oneshot`` requests through the generic slot loop
+        (engine.run_slot_loop — the SAME function the LM engine runs);
+        mutates and returns them with ``topk_ids`` / ``topk_scores``
+        filled (and ``tokens`` holding the top-1 item, so shared
+        latency/throughput accounting works unchanged)."""
+        results, stats, sched, state = run_slot_loop(
+            self.program, self.params, self.prefill_pool, requests,
+            self.n_slots)
         self._sched = sched          # exposed for the simulation tests
         self.modeled_bytes = {
-            "streaming_bytes": int(streaming_bytes),
+            "streaming_bytes": int(state.streaming_bytes),
             "dense_oracle_bytes": int(self._dense_oracle_step_bytes()
                                       * stats.decode_steps),
             "dense_oracle_step_bytes": self._dense_oracle_step_bytes(),
         }
-        return {r.rid: r for r in requests}, stats
+        return results, stats
 
 
 def evaluate_retrieval(rcfg: RetrievalConfig, params,
@@ -239,7 +239,7 @@ def evaluate_retrieval(rcfg: RetrievalConfig, params,
               if r.done and not r.rejected and r.targets is not None
               and len(r.targets)]
     if not served:
-        return {"map": 0.0, "rr": 0.0, "n_evaluated": 0}
+        return {"map": 0.0, "rr": 0.0, "accuracy": 0.0, "n_evaluated": 0}
     B = len(served)
     prompts = np.full((B, rcfg.c_max), -1, np.int32)
     n_t = max(len(r.targets) for r in served)
@@ -252,11 +252,15 @@ def evaluate_retrieval(rcfg: RetrievalConfig, params,
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     scores = np.asarray(bloom_lib.decode_scores(rcfg.spec(), logp,
                                                 chunk=rcfg.chunk))
+    # RR / accuracy score the FIRST held-out target (the single-correct-
+    # item measures of Sec. 4.1); MAP scores the full held-out set
     return {
         "map": metrics_lib.mean_average_precision(scores, targets,
                                                   excludes=prompts),
         "rr": metrics_lib.reciprocal_rank(scores, targets[:, 0],
                                           exclude=prompts),
+        "accuracy": metrics_lib.accuracy(scores, targets[:, 0],
+                                         exclude=prompts),
         "n_evaluated": B,
     }
 

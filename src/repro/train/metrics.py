@@ -72,7 +72,26 @@ def reciprocal_rank(scores: np.ndarray, target: np.ndarray,
     return float(np.mean(rrs)) if rrs else 0.0
 
 
-def accuracy(scores: np.ndarray, target: np.ndarray) -> float:
+def accuracy(scores: np.ndarray, target: np.ndarray,
+             exclude: np.ndarray | None = None) -> float:
+    """Top-1 accuracy (%) of the single correct item. scores (B, d),
+    target (B,) with -1 = skip the row.
+
+    ``exclude`` (B, c) -1-padded masks e.g. the user's input items from
+    the ranking before the argmax, mirroring average_precision /
+    reciprocal_rank — the paper's Sec. 4.1 accuracy on retrieval evals
+    must not rank items the user already has (the target itself is never
+    masked).  Tied argmax resolves to the LOWEST item id (np.argmax
+    returns the first maximum) — the same tie-break contract every
+    top-k decode path follows (DESIGN.md §11).
+    """
+    scores = np.asarray(scores, np.float64)
+    if exclude is not None:
+        scores = scores.copy()
+        for i in range(scores.shape[0]):
+            t = int(target[i])
+            ex = [int(j) for j in exclude[i] if j >= 0 and int(j) != t]
+            scores[i, ex] = -np.inf
     pred = scores.argmax(-1)
     valid = target >= 0
     if valid.sum() == 0:

@@ -1,0 +1,234 @@
+"""Train the retrieval FF tower on the Zipf stream (DESIGN.md §12).
+
+PR 7 opened the web-scale retrieval serving scenario with an UNTRAINED
+tower; this module closes the paper's accuracy loop: the same
+pure-in-``(seed, host)`` Zipf(1) stream loadgen serves from becomes the
+training distribution — each request's ``c_max`` history items are the
+input set, its ``n_targets`` held-out items the prediction target — and
+the tower is trained with the paper's Bloom multilabel cross-entropy
+(``models/recommender.recommender_loss`` over a ``BloomIO`` whose input
+AND output spec are the serving spec), through the fault-tolerant
+``train.trainer.Trainer`` (checkpoint/resume, ``--failpoints`` chaos).
+
+Spec discipline: serving Bloom-encodes the request with ``rcfg.spec()``
+(launch/steps.make_retrieval_prefill_step) and recovers items through
+the SAME spec (make_retrieval_decode_step), so training must too —
+``BloomIO.build`` would derive a ``seed+1`` output spec and silently
+train a tower whose served rankings decode through the wrong hashes.
+``make_retrieval_loss`` constructs the BloomIO directly with
+``spec_in = spec_out = rcfg.spec()``.
+
+Evaluation is end-to-end THROUGH the serving stack: a fresh eval-seed
+workload is served by ``RetrievalEngine`` with the trained params (the
+slot pool, not an offline matmul), then ranked with the tie-aware
+MAP/RR/accuracy of ``serving/retrieval.evaluate_retrieval``.
+``compression_sweep`` repeats train+serve+eval at m/d ∈ {1/1, 1/2, 1/5,
+1/10} — the paper's Fig. 2 trade-off at serving scale — and
+benchmarks/bench_retrieval.py commits the curve to BENCH_retrieval.json
+with a ``--check`` gate on the trained ≫ untrained margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.retrieval import RetrievalConfig
+from repro.core import bloom as bloom_lib
+from repro.core.alternatives import BloomIO
+from repro.data.pipeline import BatchIterator
+from repro.models import recommender as rec_lib
+from repro.serving.loadgen import RetrievalLoadSpec, retrieval_workload
+from repro.serving.retrieval import (RetrievalEngine, evaluate_retrieval,
+                                     init_retrieval_params)
+from repro.train.trainer import Trainer
+
+# the sweep the paper's headline claim lives on: accuracy holds to ~1/5
+# compression (ratio = d/m)
+SWEEP_RATIOS = (1, 2, 5, 10)
+
+
+def make_retrieval_emb(rcfg: RetrievalConfig) -> BloomIO:
+    """The serving-consistent BloomIO: ONE spec (``rcfg.spec()``) for
+    input encode, training loss and Eq. 3 decode — exactly the hashes
+    the serving prefill/decode steps use (see module doc)."""
+    spec = rcfg.spec()
+    return BloomIO(name="BE", d=rcfg.d, m_in=rcfg.m, m_out=rcfg.m,
+                   spec_in=spec, spec_out=spec)
+
+
+def make_retrieval_dataset(rcfg: RetrievalConfig, n_pairs: int,
+                           seed: int = 0, n_targets: int = 2,
+                           host: int = 0, n_hosts: int = 1
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """(history, held-out) training pairs from the SAME generator the
+    serving workload draws from — ``loadgen.retrieval_workload``, a pure
+    function of ``(seed, host)``.  Returns -1-padded int32 arrays:
+    prompts (n_pairs, c_max) and targets (n_pairs, n_targets)."""
+    load = RetrievalLoadSpec(n_requests=n_pairs, catalog=rcfg.d,
+                             c_max=rcfg.c_max, n_targets=n_targets,
+                             rate=2.0, seed=seed)
+    wl = retrieval_workload(load, host=host, n_hosts=n_hosts)
+    prompts = np.full((n_pairs, rcfg.c_max), -1, np.int32)
+    targets = np.full((n_pairs, n_targets), -1, np.int32)
+    for i, r in enumerate(wl):
+        prompts[i, :r.prompt_len] = np.asarray(r.prompt, np.int32)
+        targets[i, :len(r.targets)] = np.asarray(r.targets, np.int32)
+    return prompts, targets
+
+
+def make_retrieval_loss(rcfg: RetrievalConfig):
+    """loss_fn(params, batch) -> (scalar, metrics) for Trainer.
+
+    batch = {"p": (B, c_max), "q": (B, n_targets)} -1-padded int32.
+    The aux metric ``target_mass`` is the mean softmax probability mass
+    the tower puts on the target set's Bloom bits — a per-example mean,
+    so the grad-accumulation path must AVERAGE it across microbatches to
+    match the microbatch=1 twin (the trainer bug this PR fixed;
+    regression-tested in tests/test_retrieval_train.py)."""
+    emb = make_retrieval_emb(rcfg)
+    spec = rcfg.spec()
+
+    def loss_fn(params, batch):
+        p, q = batch["p"], batch["q"]
+        loss = rec_lib.recommender_loss(params, emb, p, q)
+        logits = rec_lib.ff_apply(params, emb.encode_input(p))
+        code = (bloom_lib.encode(spec, q) > 0).astype(jnp.float32)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        mass = (probs * code).sum(-1).mean()
+        return loss, {"target_mass": mass}
+
+    return loss_fn
+
+
+def default_train_config(steps: int = 300, microbatch: int = 0,
+                         checkpoint_every: int = 0,
+                         learning_rate: float = 3e-2) -> TrainConfig:
+    return TrainConfig(optimizer="adamw", learning_rate=learning_rate,
+                       grad_clip_norm=1.0, steps=steps, warmup_steps=10,
+                       checkpoint_every=checkpoint_every,
+                       microbatch=microbatch)
+
+
+def train_retrieval(rcfg: RetrievalConfig, tc: TrainConfig, *,
+                    n_pairs: int = 512, batch_size: int = 64,
+                    n_targets: int = 2, data_seed: int = 0,
+                    checkpoint_dir: Optional[str] = None,
+                    failpoints=None, log_every: int = 10):
+    """Train the tower; returns (params, run_result).
+
+    Fault tolerance comes for free from the Trainer: checkpoint/resume
+    via ``checkpoint_dir`` and chaos via ``failpoints`` (the same
+    grammar as serving — ``train_fault@S`` kills at step S; rerunning
+    the same call resumes from the last checkpoint)."""
+    prompts, targets = make_retrieval_dataset(
+        rcfg, n_pairs, seed=data_seed, n_targets=n_targets)
+    it = BatchIterator([prompts, targets], batch_size, seed=data_seed)
+
+    def make_batch(arrays):
+        p, q = arrays
+        return {"p": jnp.asarray(p), "q": jnp.asarray(q)}
+
+    trainer = Trainer(make_retrieval_loss(rcfg),
+                      init_retrieval_params(rcfg), tc, it,
+                      checkpoint_dir=checkpoint_dir,
+                      make_batch=make_batch, failpoints=failpoints)
+    result = trainer.run(log_every=log_every)
+    return trainer.state.params, result
+
+
+def serve_and_eval(rcfg: RetrievalConfig, params, *,
+                   n_requests: int = 64, n_slots: int = 8,
+                   eval_seed: int = 1) -> Dict[str, float]:
+    """End-to-end eval THROUGH the serving stack: serve a fresh
+    eval-seed Zipf workload with ``RetrievalEngine`` (the generic slot
+    loop), then rank the served requests with the tie-aware metrics.
+    The eval seed differs from the training seed — fresh users, same
+    popularity law."""
+    load = RetrievalLoadSpec(n_requests=n_requests, catalog=rcfg.d,
+                             c_max=rcfg.c_max, rate=2.0, seed=eval_seed)
+    wl = [r.fresh_copy() for r in retrieval_workload(load)]
+    engine = RetrievalEngine(rcfg, params, n_slots=n_slots)
+    results, stats = engine.run(wl)
+    ev = evaluate_retrieval(rcfg, params, list(results.values()))
+    ev["decode_steps"] = stats.decode_steps
+    return ev
+
+
+def train_and_eval_point(rcfg: RetrievalConfig, tc: TrainConfig, *,
+                         n_pairs: int = 512, batch_size: int = 64,
+                         n_eval: int = 64, n_slots: int = 8,
+                         data_seed: int = 0, eval_seed: int = 1,
+                         checkpoint_dir: Optional[str] = None,
+                         failpoints=None) -> Dict[str, object]:
+    """One sweep point: train, then serve+eval BOTH the trained and the
+    untrained (init) tower on the identical eval workload."""
+    params, result = train_retrieval(
+        rcfg, tc, n_pairs=n_pairs, batch_size=batch_size,
+        data_seed=data_seed, checkpoint_dir=checkpoint_dir,
+        failpoints=failpoints)
+    trained = serve_and_eval(rcfg, params, n_requests=n_eval,
+                             n_slots=n_slots, eval_seed=eval_seed)
+    untrained = serve_and_eval(rcfg, init_retrieval_params(rcfg),
+                               n_requests=n_eval, n_slots=n_slots,
+                               eval_seed=eval_seed)
+    final_loss = (result["history"][-1]["loss"]
+                  if result["history"] else float("nan"))
+    return {
+        "config": rcfg.name, "d": rcfg.d, "m": rcfg.m, "k": rcfg.k,
+        "ratio": round(rcfg.d / rcfg.m, 2), "steps": result["steps"],
+        "n_train_pairs": n_pairs, "n_eval_requests": n_eval,
+        "n_evaluated": trained["n_evaluated"],
+        "decode_steps": trained["decode_steps"],
+        "final_loss": float(final_loss),
+        "map": trained["map"], "rr": trained["rr"],
+        "accuracy": trained["accuracy"],
+        "untrained_map": untrained["map"], "untrained_rr": untrained["rr"],
+    }
+
+
+def compression_sweep(base: RetrievalConfig, tc: TrainConfig, *,
+                      ratios=SWEEP_RATIOS, n_pairs: int = 512,
+                      batch_size: int = 64, n_eval: int = 64,
+                      n_slots: int = 8, data_seed: int = 0,
+                      eval_seed: int = 1) -> List[Dict[str, object]]:
+    """The paper's compression/accuracy trade-off at serving scale:
+    train+serve+eval at m = d/ratio for each ratio.  ``base.m`` is
+    replaced per point; everything else (catalog, hashes count, tower
+    widths, seeds) is held fixed."""
+    rows = []
+    for ratio in ratios:
+        m = base.d // ratio
+        rcfg = dataclasses.replace(base, m=m,
+                                   name=f"{base.name}_r{ratio}")
+        rows.append(train_and_eval_point(
+            rcfg, tc, n_pairs=n_pairs, batch_size=batch_size,
+            n_eval=n_eval, n_slots=n_slots, data_seed=data_seed,
+            eval_seed=eval_seed))
+    return rows
+
+
+def assert_trained_margin(rows: List[Dict[str, object]],
+                          min_ratio_at_5: float = 3.0) -> None:
+    """The hard acceptance gate: the trained tower must beat the
+    untrained one by ``min_ratio_at_5``x MAP at 1/5 compression (and
+    strictly beat it at every point).  Float MAPs are compared on FRESH
+    values only — never exact-matched against a committed file (platform
+    float drift); the committed BENCH_retrieval.json exact-checks the
+    deterministic integers instead."""
+    for row in rows:
+        assert row["map"] > row["untrained_map"], (
+            f"{row['config']}: trained MAP {row['map']:.4f} <= untrained "
+            f"{row['untrained_map']:.4f} — training is not helping")
+    at5 = [r for r in rows if abs(r["ratio"] - 5.0) < 1e-6]
+    assert at5, "sweep has no 1/5-compression point to gate on"
+    r = at5[0]
+    floor = min_ratio_at_5 * max(r["untrained_map"], 1e-12)
+    assert r["map"] >= floor, (
+        f"{r['config']}: trained MAP {r['map']:.4f} < {min_ratio_at_5}x "
+        f"untrained {r['untrained_map']:.4f} at 1/5 compression — the "
+        "paper's headline margin does not hold")

@@ -97,7 +97,12 @@ def make_train_step(loss_fn: Callable, optimizer, microbatch: int = 0,
                 acc_body, (zeros, jnp.zeros((), jnp.float32)), micro)
             g = jax.tree.map(lambda x: x / microbatch, g)
             loss = loss / microbatch
-            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            # scan stacks each metric to (microbatch, ...); average them
+            # like the loss — keeping only the LAST chunk's value made
+            # logged accuracy/aux metrics silently diverge from the
+            # microbatch=1 twin (equal-size chunks, so the mean of the
+            # per-chunk means IS the full-batch mean)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
         else:
             (loss, metrics), g = grads_of(params, batch)
         updates, opt_state = optimizer.update(g, opt_state, params)
@@ -156,12 +161,17 @@ class Trainer:
                                 step=step)
         if "data" in extra and hasattr(self.data_iter, "restore"):
             self.data_iter.restore(extra["data"])
+        # history rides in `extra` (JSON-able floats): without it a
+        # crash-resumed run() returned only the post-crash tail, so any
+        # curve plotted from the result was silently truncated
+        if "history" in extra:
+            self.history = list(extra["history"])
         return True
 
     def save(self, block: bool = True):
         if self.ckpt is None:
             return
-        extra = {}
+        extra = {"history": list(self.history)}
         if hasattr(self.data_iter, "state"):
             extra["data"] = self.data_iter.state()
         self.ckpt.save(self.state.step,

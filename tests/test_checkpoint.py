@@ -67,7 +67,10 @@ def test_no_checkpoint_returns_none(tmp_path):
 def test_trainer_crash_resume_equivalence(tmp_path):
     """Training N steps straight == training k steps, crashing, resuming.
 
-    The core fault-tolerance guarantee: bitwise-identical final params.
+    The core fault-tolerance guarantee: bitwise-identical final params —
+    AND an identical logged history: `history` rides in the checkpoint's
+    `extra`, so a resumed run returns the FULL curve, not just the
+    post-crash tail (the Trainer bug ISSUE 8 fixed).
     """
     from repro.configs.base import TrainConfig
     from repro.data.pipeline import BatchIterator
@@ -94,15 +97,22 @@ def test_trainer_crash_resume_equivalence(tmp_path):
 
     # straight run
     t1 = make(str(tmp_path / "a"), every=100)
-    t1.run(steps=12)
+    r1 = t1.run(steps=12, log_every=2)
     # crashed run: stop at 6 (checkpointed), then resume in a NEW trainer
     t2 = make(str(tmp_path / "b"), every=6)
-    t2.run(steps=6)
+    t2.run(steps=6, log_every=2)
     t3 = make(str(tmp_path / "b"), every=6)
-    t3.run(steps=12)
+    r3 = t3.run(steps=12, log_every=2)
     np.testing.assert_allclose(np.asarray(t1.state.params["w"]),
                                np.asarray(t3.state.params["w"]),
                                rtol=1e-6)
+    # the FULL history survives the kill: pre-crash entries restored
+    # from the checkpoint, post-resume entries appended after them
+    assert [h["step"] for h in r3["history"]] == \
+        [h["step"] for h in r1["history"]] == [2, 4, 6, 8, 10, 12]
+    np.testing.assert_allclose(
+        [h["loss"] for h in r3["history"]],
+        [h["loss"] for h in r1["history"]], rtol=1e-6)
 
 
 def test_elastic_restore_applies_sharding(tmp_path):

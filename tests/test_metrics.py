@@ -78,3 +78,29 @@ def test_accuracy():
     scores = np.array([[0.9, 0.1], [0.2, 0.8], [0.7, 0.3]])
     target = np.array([0, 1, 1])
     assert M.accuracy(scores, target) == pytest.approx(100 * 2 / 3)
+
+
+def test_accuracy_exclude_masks_inputs_not_target():
+    """`exclude` (-1-padded) removes the user's input items from the
+    argmax ranking — but NEVER the target itself, even if listed."""
+    scores = np.array([[3.0, 2.0, 1.0],
+                       [3.0, 2.0, 1.0]])
+    target = np.array([1, 1])
+    # row 0: no exclude -> argmax = 0, miss.  row 1: item 0 excluded ->
+    # argmax = 1, hit.
+    exclude = np.array([[-1, -1], [0, -1]])
+    assert M.accuracy(scores, target) == pytest.approx(0.0)
+    assert M.accuracy(scores, target, exclude=exclude) == pytest.approx(50.0)
+    # the target id in the exclude list is ignored (mirrors AP/RR)
+    assert M.accuracy(np.array([[3.0, 2.0, 1.0]]), np.array([0]),
+                      exclude=np.array([[0, -1]])) == pytest.approx(100.0)
+
+
+def test_accuracy_tied_argmax_lowest_id():
+    """Tied top scores resolve to the LOWEST item id (np.argmax picks
+    the first maximum) — the pinned three-path tie-break contract."""
+    scores = np.array([[1.0, 1.0, 1.0]])
+    assert M.accuracy(scores, np.array([0])) == pytest.approx(100.0)
+    assert M.accuracy(scores, np.array([2])) == pytest.approx(0.0)
+    # -1 target rows are skipped entirely
+    assert M.accuracy(scores, np.array([-1])) == pytest.approx(0.0)

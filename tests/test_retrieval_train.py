@@ -1,0 +1,188 @@
+"""Retrieval-tower training (train/retrieval_trainer.py, DESIGN.md §12):
+serving-consistent loss, grad-accumulation metric parity, the
+hand-computed multi-target eval pin, trained ≫ untrained end-to-end, and
+the generic SlotProgram serve loop both engines share."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.retrieval import get_retrieval_config
+from repro.train import metrics as M
+from repro.train import retrieval_trainer as rt
+from repro.train.trainer import make_optimizer, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Multi-target eval pin (ISSUE 8 satellite): MAP/RR/accuracy on a
+# hand-computed 4-request example — ties, excludes, -1 padding
+# ---------------------------------------------------------------------------
+
+def test_multi_target_eval_pinned_hand_example():
+    """d=6 catalog, 4 requests:
+
+    r0: clean ranking, two targets {0, 2} at ranks 1 and 3
+        -> AP = (1/1 + 2/3)/2 = 5/6;  RR(t=0) = 1;  acc hit.
+    r1: excludes {0, 1} knock out the two best items; target 3 (-1 pad)
+        lands at rank 2 behind item 2 -> AP = 1/2; RR = 1/2; acc miss.
+    r2: 4-way tie at the top, target 2 -> stable sort ranks it 3rd
+        (AP = 1/3), mid-rank RR = 1/(0 + 3/2 + 1) = 2/5, tied argmax
+        resolves to item 0 -> acc miss.
+    r3: 2-way tie {1, 2}, targets {1, 3}: stable order 1,2,0,3 ->
+        AP = (1/1 + 2/4)/2 = 3/4; RR(t=1) mid-rank = 1/1.5 = 2/3;
+        argmax -> item 1 -> acc hit.
+    """
+    scores = np.array([
+        [5.0, 4.0, 3.0, 2.0, 1.0, 0.0],
+        [9.0, 8.0, 7.0, 1.0, 0.0, 0.0],
+        [1.0, 1.0, 1.0, 1.0, 0.0, 0.0],
+        [0.0, 2.0, 2.0, 0.0, 0.0, 0.0],
+    ])
+    targets = np.array([[0, 2], [3, -1], [2, -1], [1, 3]])
+    excludes = np.array([[-1, -1], [0, 1], [-1, -1], [-1, -1]])
+
+    assert M.mean_average_precision(scores, targets, excludes=excludes) \
+        == pytest.approx((5 / 6 + 1 / 2 + 1 / 3 + 3 / 4) / 4)
+    assert M.reciprocal_rank(scores, targets[:, 0], exclude=excludes) \
+        == pytest.approx((1.0 + 1 / 2 + 2 / 5 + 2 / 3) / 4)
+    assert M.accuracy(scores, targets[:, 0], exclude=excludes) \
+        == pytest.approx(50.0)
+
+
+# ---------------------------------------------------------------------------
+# Grad-accumulation metric parity (the trainer bug ISSUE 8 fixed)
+# ---------------------------------------------------------------------------
+
+def test_microbatch_metric_parity():
+    """microbatch=4 must report the SAME step metrics as microbatch=1 on
+    the same effective batch.  The old path kept only the LAST chunk's
+    metrics (loss was averaged, aux metrics were not), so any
+    per-example-mean metric — here the retrieval loss's target_mass —
+    silently diverged from the full-batch twin."""
+    rcfg = get_retrieval_config("eval2k", m=200)
+    loss_fn = rt.make_retrieval_loss(rcfg)
+    prompts, targets = rt.make_retrieval_dataset(rcfg, 16, seed=3)
+    batch = {"p": jnp.asarray(prompts), "q": jnp.asarray(targets)}
+
+    tc = TrainConfig(optimizer="sgd", learning_rate=0.1, momentum=0.0,
+                     grad_clip_norm=0.0, warmup_steps=0)
+    tx = make_optimizer(tc)
+    from repro.serving.retrieval import init_retrieval_params
+    p0 = init_retrieval_params(rcfg)
+
+    full = make_train_step(loss_fn, tx, microbatch=1, donate=False)
+    acc = make_train_step(loss_fn, tx, microbatch=4, donate=False)
+    p1, _, m1 = full(p0, tx.init(p0), batch)
+    p2, _, m2 = acc(p0, tx.init(p0), batch)
+
+    assert set(m1) == set(m2) == {"loss", "grad_norm", "target_mass"}
+    for key in sorted(m1):
+        np.testing.assert_allclose(np.asarray(m1[key]),
+                                   np.asarray(m2[key]),
+                                   rtol=1e-5, atol=1e-6, err_msg=key)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6), p1, p2)
+
+
+# ---------------------------------------------------------------------------
+# Serving-consistent loss + dataset
+# ---------------------------------------------------------------------------
+
+def test_loss_uses_the_serving_spec_on_both_sides():
+    """BloomIO.build would hash the OUTPUT side with seed+1; serving
+    encodes and decodes with ONE spec (rcfg.spec()), so the training
+    embedding must too — otherwise the trained tower's rankings decode
+    through the wrong hashes."""
+    rcfg = get_retrieval_config("eval2k")
+    emb = rt.make_retrieval_emb(rcfg)
+    assert emb.spec_in == emb.spec_out == rcfg.spec()
+
+
+def test_dataset_is_the_seeded_zipf_stream():
+    rcfg = get_retrieval_config("eval2k")
+    p1, q1 = rt.make_retrieval_dataset(rcfg, 32, seed=7)
+    p2, q2 = rt.make_retrieval_dataset(rcfg, 32, seed=7)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(q1, q2)
+    assert p1.shape == (32, rcfg.c_max) and q1.shape == (32, 2)
+    # prompts and held-out targets are disjoint within a request
+    for i in range(32):
+        ps = set(int(v) for v in p1[i] if v >= 0)
+        qs = set(int(v) for v in q1[i] if v >= 0)
+        assert ps and qs and not (ps & qs)
+    assert p1.max() < rcfg.d and p1.min() >= 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: train -> serve through the slot pool -> tie-aware eval
+# ---------------------------------------------------------------------------
+
+def test_trained_tower_beats_untrained_through_serving():
+    """The ISSUE-8 acceptance margin at test scale: a short training run
+    at 1/5 compression, served through RetrievalEngine (the generic slot
+    loop), must beat the untrained tower's MAP by >= 3x."""
+    rcfg = get_retrieval_config("eval2k")          # m=400 = d/5
+    tc = rt.default_train_config(steps=200)
+    row = rt.train_and_eval_point(rcfg, tc, n_pairs=256, batch_size=64,
+                                  n_eval=48, n_slots=8)
+    assert row["n_evaluated"] == 48
+    assert row["map"] >= 3.0 * row["untrained_map"], row
+    assert row["rr"] > row["untrained_rr"], row
+
+
+# ---------------------------------------------------------------------------
+# The generic serve loop (tentpole): one program-driven loop, two engines
+# ---------------------------------------------------------------------------
+
+def test_run_slot_loop_is_the_engine_loop():
+    """Driving the RetrievalProgram through engine.run_slot_loop
+    DIRECTLY reproduces RetrievalEngine.run bit-for-bit — the engine is
+    a thin wrapper over the shared program-driven loop, not a parallel
+    implementation."""
+    from repro.serving.engine import PrefillPool, run_slot_loop
+    from repro.serving.loadgen import (RetrievalLoadSpec,
+                                       assert_fresh_instances,
+                                       retrieval_workload)
+    from repro.serving.retrieval import (RetrievalEngine,
+                                         RetrievalProgram,
+                                         init_retrieval_params)
+
+    rcfg = get_retrieval_config("eval2k")
+    params = init_retrieval_params(rcfg)
+    load = RetrievalLoadSpec(n_requests=12, catalog=rcfg.d,
+                             c_max=rcfg.c_max, rate=2.0, seed=4)
+    wl = retrieval_workload(load)
+
+    engine = RetrievalEngine(rcfg, params, n_slots=4)
+    wl_a = [r.fresh_copy() for r in wl]
+    res_a, st_a = engine.run(wl_a)
+
+    program = RetrievalProgram(rcfg, n_slots=4)
+    pool = PrefillPool(None, params, topk=rcfg.topk, program=program)
+    wl_b = [r.fresh_copy() for r in wl]
+    assert_fresh_instances(wl_b)
+    res_b, st_b, sched, state = run_slot_loop(program, params, pool,
+                                              wl_b, 4)
+
+    assert st_a.decode_steps == st_b.decode_steps
+    assert state.streaming_bytes == engine.modeled_bytes["streaming_bytes"]
+    for rid, ra in res_a.items():
+        rb = res_b[rid]
+        assert ra.topk_ids == rb.topk_ids
+        assert ra.topk_scores == rb.topk_scores
+        assert ra.tokens == rb.tokens
+
+
+def test_slot_programs_implement_the_decode_protocol():
+    """Both programs expose the full decode-side SlotProgram protocol —
+    the contract run_slot_loop (and any future enc-dec/MoE program)
+    relies on."""
+    from repro.serving.engine import LMSlotProgram, SlotProgram
+    from repro.serving.retrieval import RetrievalProgram
+    for prog_cls in (LMSlotProgram, RetrievalProgram):
+        for method in ("prefill", "check_admit", "init_state",
+                       "reset_slots", "insert", "step", "emit"):
+            assert getattr(prog_cls, method) is not getattr(
+                SlotProgram, method, None), (prog_cls, method)
