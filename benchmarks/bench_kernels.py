@@ -22,6 +22,27 @@ embed's includes the grad table's read-modify-write) and
 ``bwd_bytes_ratio`` = bytes / bytes_ideal, which the embed CSR rows
 legitimately push below 1.0 (sorting turns the RMW scatter into
 write-once output runs — see the embed.bwd comment in run()).
+
+The quantized-table acceptance bar (DESIGN.md §13) lives in the
+``*.embed.fwd.{fp32,bf16,int8,fp8}`` and ``*.decode_topk.{bf16,int8,fp8}``
+rows: the int8 rows must model >= MIN_INT8_VS_FP32 fewer total bytes than
+their fp32 twin and >= MIN_INT8_VS_BF16 fewer than bf16 (table stream for
+embed — the activations are bf16 either way; whole row for decode-topk,
+whose quantized path also drops the (d, k) hash stream by re-deriving
+indices in-kernel).  All byte widths are single-sourced from dtype
+itemsize (core.quant.table_itemsize / ndarray.dtype.itemsize) — no bare
+``* 2`` / ``* 4`` literals — so a storage-dtype change cannot silently
+desync the models.
+
+``--measure`` additionally wall-clocks each forward kernel numeric check
+(jit warmup, then best-of-N around jax.block_until_ready) into
+``measured_us`` / ``model_vs_measured`` fields.  On this CPU box the
+kernels execute in interpret mode at the clamped check shapes, so the
+numbers only bound sanity (the model is production-shape HBM time); on a
+real TPU the same flag produces the backing measurement.  The fields are
+informational — ``--check`` never gates on them — and the committed
+baseline is generated WITHOUT ``--measure``.  Run through
+``benchmarks/measure_env.sh`` for a quiet allocator/thread environment.
 """
 from __future__ import annotations
 
@@ -29,11 +50,13 @@ import argparse
 import json
 import pathlib
 import sys
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.core.bloom import BloomSpec
 from repro.kernels import ops, ref
 # M_TILE is single-sourced from the kernels so the bwd bytes models
@@ -67,6 +90,48 @@ MAX_COMPACT_VS_DENSE = 1.1
 # replaces (both at the production shape)
 MIN_EMBED_CSR_RATIO = 3.0
 MIN_DECODE_CSR_RATIO = 10.0
+# quantized-table acceptance (ISSUE 9, DESIGN.md §13): the int8 rows
+# must model >= these factors fewer HBM bytes than their fp32 / bf16
+# twins (embed compares the table stream against bf16 — activations are
+# bf16 on both; decode-topk compares whole rows)
+MIN_INT8_VS_FP32 = 3.0
+MIN_INT8_VS_BF16 = 1.8
+# itemsizes, single-sourced (satellite of ISSUE 9): every bytes model
+# below derives widths from these or from the benched array's own dtype
+IS_F32 = jnp.dtype(jnp.float32).itemsize
+IS_I32 = jnp.dtype(jnp.int32).itemsize
+# fused top-k emits (values f32, ids i32) per kept element
+IS_TOPK_PAIR = IS_F32 + IS_I32
+# quantized embed rows: sub-f32 storage emits bf16 activations (the
+# serving compute dtype); fp32 storage emits fp32
+QUANT_EMBED_SWEEP = (("float32", "fp32"), ("bfloat16", "bf16"),
+                     ("int8", "int8"), ("fp8_e4m3", "fp8"))
+QUANT_TOPK_SWEEP = (("bfloat16", "bf16"), ("int8", "int8"),
+                    ("fp8_e4m3", "fp8"))
+
+
+def _measure_us(fn, repeats: int = 3) -> float:
+    """Best-of-N wall-clock of ``fn()`` in microseconds.
+
+    One untimed call first (jit compile + Bloom cache warmup), then N
+    timed calls around jax.block_until_ready — the informational
+    ``--measure`` numbers (module docstring; never CI-gated).
+    """
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return 1e6 * best
+
+
+def _measured(row: dict, fn) -> dict:
+    """Attach measured_us / model_vs_measured to a bench row in place."""
+    us = _measure_us(fn)
+    row["measured_us"] = round(us, 1)
+    row["model_vs_measured"] = round(row["tpu_us_model"] / us, 6)
+    return row
 
 
 def _cases():
@@ -89,7 +154,7 @@ def _max_err(a, b):
                          - jnp.asarray(b, jnp.float32)).max())
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, measure: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
     for name, d, m, k, D, T in _cases():
@@ -103,13 +168,62 @@ def run(quick: bool = True):
         tokens = jax.random.randint(key, (1, Tc), 0, d)
         idx = spec.indices_for(tokens.reshape(-1))
         n_mtiles = -(-m // M_TILE)   # outer m-tile sweeps of the bwd grids
+        its_tbl = table.dtype.itemsize   # serving table dtype (bf16)
+        its_idx = idx.dtype.itemsize     # int32 hash/index streams
 
         # ---- embed fwd: k rows of D bf16 per token + output write --------
         got = ops.bloom_embed(table, tokens, spec)[0]
         want = ref.bloom_embed_ref(table, idx)
-        bytes_fwd = T * (k * D * 2 + D * 2) + T * k * 4
-        rows.append(_row(f"{name}.embed.fwd", T, bytes_fwd,
-                         _max_err(got, want), check_tokens=Tc))
+        bytes_fwd = T * (k * D * its_tbl + D * its_tbl) + T * k * its_idx
+        row = _row(f"{name}.embed.fwd", T, bytes_fwd,
+                   _max_err(got, want), check_tokens=Tc)
+        if measure:
+            _measured(row, lambda: ops.bloom_embed(table, tokens, spec))
+        rows.append(row)
+
+        # ---- embed fwd, quantized tables (DESIGN.md §13): the same
+        # k-row gather with the table stored narrow in HBM.  int8 adds
+        # the scale stream: one f32 per table row, gathered host-side
+        # into the (T, k) scalar-prefetch operand (written once, read
+        # once by the grid).  fp32/bf16 emit activations in their own
+        # dtype; the sub-f32 dtypes emit bf16 (the serving compute
+        # dtype).  ``table_bytes`` isolates the table+scale stream —
+        # the int8 vs bf16 gate compares it (whole-row totals share the
+        # bf16 activation term, diluting the table win below the bar).
+        # Numeric check: kernel on the narrow table vs the XLA oracle on
+        # the DEQUANTIZED table — identical values by construction (the
+        # kernel dequantizes on the VMEM-resident tile, MXU accumulation
+        # stays f32).
+        tbl_master = table.astype(jnp.float32)
+        qbytes = {}
+        for td, alias in QUANT_EMBED_SWEEP:
+            its = quant.table_itemsize(td)
+            out_is = its if td in ("float32", "bfloat16") else \
+                jnp.dtype(jnp.bfloat16).itemsize
+            table_bytes = T * k * D * its
+            if td == "int8":
+                table_bytes += m * IS_F32 + 2 * T * k * IS_F32
+            bytes_q = table_bytes + T * D * out_is + T * k * its_idx
+            qbytes[alias] = (bytes_q, table_bytes)
+            q, s = quant.quantize_table(tbl_master, td)
+            got = bloom_embed_pallas(tbl_master, idx, table_dtype=td,
+                                     out_dtype=jnp.float32)
+            want = ref.bloom_embed_ref(quant.dequantize_table(q, s), idx)
+            extra = {}
+            if alias != "fp32":
+                extra["vs_fp32_ratio"] = round(
+                    qbytes["fp32"][0] / bytes_q, 4)
+            if alias == "int8":
+                extra["vs_bf16_ratio"] = round(
+                    qbytes["bf16"][1] / table_bytes, 4)
+            row = _row(f"{name}.embed.fwd.{alias}", T, bytes_q,
+                       _max_err(got, want), check_tokens=Tc,
+                       table_dtype=td, table_bytes=table_bytes, **extra)
+            if measure:
+                _measured(row, lambda td=td: bloom_embed_pallas(
+                    tbl_master, idx, table_dtype=td,
+                    out_dtype=jnp.float32))
+            rows.append(row)
 
         # ---- embed bwd: blocked one-hot contraction.  The kernel sweeps
         # the m axis in M_TILE blocks and re-reads g/idx from HBM on every
@@ -131,8 +245,10 @@ def run(quick: bool = True):
             bloom_embed_pallas(t, idx_b, interpret=True) * cot))(tbl32)
         g_ref = jax.grad(lambda t: jnp.sum(
             ref.bloom_embed_ref(t, idx_b) * cot))(tbl32)
-        bytes_bwd = n_mtiles * (T * D * 4 + T * k * 4) + m * D * 4
-        bytes_bwd_ideal = T * D * 4 + 2 * m * D * 4 + T * k * 4
+        bytes_bwd = n_mtiles * (T * D * IS_F32 + T * k * its_idx) \
+            + m * D * IS_F32
+        bytes_bwd_ideal = T * D * IS_F32 + 2 * m * D * IS_F32 \
+            + T * k * its_idx
         rows.append(_row(f"{name}.embed.bwd", T, bytes_bwd,
                          _max_err(g_pal, g_ref),
                          bytes_ideal=bytes_bwd_ideal,
@@ -178,7 +294,7 @@ def run(quick: bool = True):
         got = ops.bloom_ce(logits, labels, spec)
         from repro.core import losses
         want = losses.bloom_xent_label(spec, logits, labels)
-        bytes_ce_fwd = T * m * 4 + T * k * 4 + 2 * T * 4
+        bytes_ce_fwd = T * m * IS_F32 + T * k * its_idx + 2 * T * IS_F32
         rows.append(_row(f"{name}.ce.fwd", T, bytes_ce_fwd,
                          _max_err(got, want), check_tokens=Tc))
 
@@ -194,7 +310,7 @@ def run(quick: bool = True):
         # ce.bwd IS the floor already (ISSUE 5 satellite: emit the ideal
         # + ratio for it too, so every *.bwd row carries the same audit
         # columns): one logits-row read + one dz write is irreducible
-        bytes_ce_bwd = 2 * T * m * 4 + T * (k + 2) * 4
+        bytes_ce_bwd = 2 * T * m * IS_F32 + T * (k + 2) * IS_F32
         rows.append(_row(f"{name}.ce.bwd", T, bytes_ce_bwd,
                          _max_err(g_pal, g_ref),
                          bytes_ideal=bytes_ce_bwd, bwd_bytes_ratio=1.0,
@@ -206,7 +322,7 @@ def run(quick: bool = True):
         scores = ops.bloom_decode(logp, spec)
         H = ops.cached_hash_matrix(spec)
         want_scores = ref.bloom_decode_ref(logp, H)
-        bytes_dec = B * m * 4 + d * k * 4 + B * d * 4
+        bytes_dec = B * m * IS_F32 + d * k * its_idx + B * d * IS_F32
         rows.append(_row(f"{name}.decode", B, bytes_dec,
                          _max_err(scores, want_scores)))
 
@@ -224,8 +340,10 @@ def run(quick: bool = True):
             bloom_decode_pallas(lp, H_chk, interpret=True) * cot))(logp_chk)
         g_ref = jax.grad(lambda lp: jnp.sum(
             ref.bloom_decode_ref(lp, H_chk) * cot))(logp_chk)
-        bytes_dec_bwd = n_mtiles * (B * d * 4 + d * k * 4) + B * m * 4
-        bytes_dec_bwd_ideal = B * d * 4 + d * k * 4 + B * m * 4
+        bytes_dec_bwd = n_mtiles * (B * d * IS_F32 + d * k * its_idx) \
+            + B * m * IS_F32
+        bytes_dec_bwd_ideal = B * d * IS_F32 + d * k * its_idx \
+            + B * m * IS_F32
         rows.append(_row(f"{name}.decode.bwd", B, bytes_dec_bwd,
                          _max_err(g_pal, g_ref),
                          bytes_ideal=bytes_dec_bwd_ideal,
@@ -268,7 +386,8 @@ def run(quick: bool = True):
         # baseline writes the (B, d) score matrix to HBM and reads it back
         # for jax.lax.top_k
         want_v, _ = jax.lax.top_k(want_scores, TOPK)
-        bytes_then = B * m * 4 + d * k * 4 + 2 * B * d * 4 + B * TOPK * 8
+        bytes_then = B * m * IS_F32 + d * k * its_idx \
+            + 2 * B * d * IS_F32 + B * TOPK * IS_TOPK_PAIR
         base_v, _ = jax.lax.top_k(scores, TOPK)
         rows.append(_row(f"{name}.decode_then_topk", B, bytes_then,
                          _max_err(base_v, want_v), topk=TOPK))
@@ -277,9 +396,55 @@ def run(quick: bool = True):
         vals, ids = bloom_decode_topk_pallas(logp, H, TOPK)
         picked = jnp.take_along_axis(want_scores, ids, axis=-1)
         err = max(_max_err(vals, want_v), _max_err(picked, want_v))
-        bytes_fused = B * m * 4 + d * k * 4 + B * TOPK * 8
-        rows.append(_row(f"{name}.decode_topk", B, bytes_fused, err,
-                         topk=TOPK, hbm_ratio=bytes_then / bytes_fused))
+        bytes_fused = B * m * IS_F32 + d * k * its_idx \
+            + B * TOPK * IS_TOPK_PAIR
+        row = _row(f"{name}.decode_topk", B, bytes_fused, err,
+                   topk=TOPK, hbm_ratio=bytes_then / bytes_fused)
+        if measure:
+            _measured(row, lambda: bloom_decode_topk_pallas(logp, H, TOPK))
+        rows.append(row)
+
+        # ---- quantized fused decode-topk (DESIGN.md §13): the logp pool
+        # is stored narrow AND the kernel re-derives the hash indices
+        # in-graph (hash_spec, bit-identical to cached_hash_matrix) — the
+        # (d, k) H stream, the dominant term at production d, disappears
+        # entirely.  int8 adds one f32 scale per pool row, riding the
+        # occupancy prefetch path.  Numeric check runs at the production
+        # (B, m) like the legacy fused row, against the XLA oracle on the
+        # FAKE-QUANTIZED logp (the models/io.py storage contract); int8
+        # ids can legitimately flip on quantization-induced score ties
+        # (XLA's FMA fusion differs per tile shape by 1 ulp), so the err
+        # also scores the RETURNED ids through the oracle's score vector
+        # (``picked``) — a flipped tie contributes 0 error, a wrong id
+        # does not.
+        for td, alias in QUANT_TOPK_SWEEP:
+            q, s = quant.quantize_table(logp, td)
+            want_q = ref.bloom_decode_ref(quant.dequantize_table(q, s), H)
+            want_qv, _ = jax.lax.top_k(want_q, TOPK)
+            vals_q, ids_q = bloom_decode_topk_pallas(
+                logp, None, TOPK, table_dtype=td,
+                hash_spec=(d, k, spec.seed))
+            picked = jnp.take_along_axis(want_q, ids_q, axis=-1)
+            err = max(_max_err(vals_q, want_qv), _max_err(picked, want_qv))
+            bytes_q = modeled_hbm_bytes(
+                np.ones(B, bool), B, m=m, d=d, k=k, topk=TOPK,
+                logp_itemsize=quant.table_itemsize(td),
+                inkernel_hash=True, row_scales=(td == "int8"))
+            extra = {"vs_fp32_ratio": round(bytes_fused / bytes_q, 4)}
+            if td == "int8":
+                bytes_bf16 = modeled_hbm_bytes(
+                    np.ones(B, bool), B, m=m, d=d, k=k, topk=TOPK,
+                    logp_itemsize=quant.table_itemsize("bfloat16"),
+                    inkernel_hash=True)
+                extra["vs_bf16_ratio"] = round(bytes_bf16 / bytes_q, 4)
+            row = _row(f"{name}.decode_topk.{alias}", B, bytes_q, err,
+                       topk=TOPK, table_dtype=td, inkernel_hash=True,
+                       **extra)
+            if measure:
+                _measured(row, lambda td=td: bloom_decode_topk_pallas(
+                    logp, None, TOPK, table_dtype=td,
+                    hash_spec=(d, k, spec.seed)))
+            rows.append(row)
 
         # ---- serving pool: row-skipping decode-topk vs slot occupancy ----
         # At pool size (B_POOL slots, b_tile row blocks) the grid streams
@@ -389,6 +554,10 @@ def write_json(rows, path=JSON_PATH, quick=True):
     if not quick:
         raise ValueError("the committed baseline is generated with --quick "
                          "only; rerun with quick=True")
+    # measured wall-clock is machine-dependent — never committed
+    rows = [{k: v for k, v in r.items()
+             if k not in ("measured_us", "model_vs_measured")}
+            for r in rows]
     payload = {
         "generated_by": "PYTHONPATH=src python -m benchmarks.bench_kernels"
                         " --quick",
@@ -431,6 +600,26 @@ def check_against(rows, path=JSON_PATH, err_slack=1e-3,
             failures.append(
                 f"{r['name']}: fused top-k HBM ratio {r['hbm_ratio']:.2f} "
                 f"< {min_topk_ratio} — serving fusion no longer pays")
+        # quantized-table acceptance bars (ISSUE 9, DESIGN.md §13): the
+        # int8 rows must model >= MIN_INT8_VS_FP32 fewer total bytes
+        # than their fp32 twin (embed.fwd.fp32 / the legacy f32
+        # decode_topk row) and >= MIN_INT8_VS_BF16 fewer than bf16
+        # (table stream for embed, whole row for decode-topk); the fp8
+        # rows ride the same drift check via bytes equality above
+        if r["name"].endswith(".embed.fwd.int8") \
+                or r["name"].endswith(".decode_topk.int8"):
+            if r.get("vs_fp32_ratio", 0.0) < MIN_INT8_VS_FP32:
+                failures.append(
+                    f"{r['name']}: int8/fp32 bytes ratio "
+                    f"{r.get('vs_fp32_ratio', 0.0):.2f} < "
+                    f"{MIN_INT8_VS_FP32} — int8 storage no longer closes "
+                    "the table-stream gap")
+            if r.get("vs_bf16_ratio", 0.0) < MIN_INT8_VS_BF16:
+                failures.append(
+                    f"{r['name']}: int8/bf16 bytes ratio "
+                    f"{r.get('vs_bf16_ratio', 0.0):.2f} < "
+                    f"{MIN_INT8_VS_BF16} — int8 no longer beats plain "
+                    "bf16 storage meaningfully")
         # CSR-binned backward acceptance bars (ISSUE 5): the binned
         # scatter-add must model >= MIN_*_CSR_RATIO fewer HBM bytes than
         # the dense m-tile sweep at the production shape, on the uniform
@@ -488,13 +677,19 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="compare against committed BENCH_kernels.json and "
                          "fail on max_err / hbm_ratio regressions")
+    ap.add_argument("--measure", action="store_true",
+                    help="wall-clock the forward kernels (warmup + "
+                         "block_until_ready, best of 3) into measured_us "
+                         "/ model_vs_measured fields — informational, "
+                         "never gated, never committed; use "
+                         "benchmarks/measure_env.sh for env hygiene")
     args = ap.parse_args()
     if args.check and not args.quick:
         # the committed baseline records --quick check shapes; comparing
         # full-run max_err against it would validate mismatched shapes
         ap.error("--check requires --quick (the baseline is "
                  "--quick-generated)")
-    rows = run(quick=args.quick)
+    rows = run(quick=args.quick, measure=args.measure)
     for row in rows:
         print(row)
     if args.check:

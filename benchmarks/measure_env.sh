@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Env-hygiene wrapper for the --measure modes of bench_kernels.py and
+# bench_serving.py: wall-clock numbers are only comparable run-to-run
+# when the allocator and thread pools are pinned.  Usage:
+#
+#   benchmarks/measure_env.sh python -m benchmarks.bench_kernels \
+#       --quick --measure
+#   benchmarks/measure_env.sh python -m benchmarks.bench_serving --measure
+#
+# measured_us / model_vs_measured are informational only — never gated,
+# never committed (write_json strips them) — so this wrapper exists to
+# make the numbers *stable*, not official.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="${PYTHONPATH:-src}"
+
+# one deterministic CPU thread pool: XLA intra-op + BLAS/OpenMP.  The
+# interpret-mode Pallas kernels are single-stream anyway; unpinned
+# pools add run-to-run jitter without adding speed at bench shapes.
+export XLA_FLAGS="${XLA_FLAGS:-} --xla_cpu_multi_thread_eigen=false"
+export OMP_NUM_THREADS="${OMP_NUM_THREADS:-1}"
+export OPENBLAS_NUM_THREADS="${OPENBLAS_NUM_THREADS:-1}"
+export MKL_NUM_THREADS="${MKL_NUM_THREADS:-1}"
+
+# keep XLA from autotuning differently run-to-run
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-2}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-}"
+
+# tcmalloc, when the image ships it, removes glibc-malloc arena noise
+# from the large table/logit allocations; silently skipped otherwise
+for lib in /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+           /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4; do
+    if [[ -e "$lib" ]]; then
+        export LD_PRELOAD="${LD_PRELOAD:+$LD_PRELOAD:}$lib"
+        break
+    fi
+done
+
+exec "$@"

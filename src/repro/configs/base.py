@@ -97,6 +97,12 @@ class ModelConfig:
     bwd_impl: str = "csr"         # pallas-path backward: csr (CSR-binned
                                   # scatter-add, stream-once) | dense
                                   # (m-tile sweep, oracle-adjacent)
+    table_dtype: str = "auto"     # Bloom table storage dtype (DESIGN.md
+                                  # §13): auto (legacy: cast to `dtype`) |
+                                  # float32 | bfloat16 | int8 (per-row
+                                  # symmetric scales, in-kernel dequant) |
+                                  # fp8_e4m3 — core.quant is the source
+                                  # of truth; grads are straight-through
     # Dry-run analysis mode: unroll inner lax.scans (attention kv chunks,
     # top-k vocab chunks) so XLA cost_analysis counts every iteration —
     # cost_analysis counts a while-loop body exactly once (verified

@@ -42,6 +42,13 @@ class RetrievalConfig:
     impl: str = "auto"        # "auto" | "xla" | "pallas" decode path
     chunk: int = 65536        # streaming-oracle vocab chunk (xla path)
     b_tile: int = 8           # kernel row-block (pallas path + bytes model)
+    table_dtype: str = "auto" # pool-logits storage dtype for the decode
+                              # (DESIGN.md §13): auto (legacy f32) |
+                              # float32 | bfloat16 | int8 | fp8_e4m3; the
+                              # quantized pallas path also re-derives hash
+                              # indices in-kernel (no (d, k) stream), and
+                              # the xla path fake-quantizes so both impls
+                              # rank through identical dequantized scores
 
     def __post_init__(self):
         if not (0 < self.m <= self.d):
@@ -52,6 +59,8 @@ class RetrievalConfig:
             raise ValueError(f"need c_max >= 1, got {self.c_max}")
         if self.impl not in ("auto", "xla", "pallas"):
             raise ValueError(f"unknown decode impl {self.impl!r}")
+        from repro.core import quant
+        quant.resolve_table_dtype(self.table_dtype, allow_auto=True)
 
     def spec(self) -> BloomSpec:
         """The Bloom IO spec; on_the_fly on purpose (see module doc)."""

@@ -116,6 +116,34 @@ def cached_decode_bins(spec: BloomSpec, m_tile: int, e_tile: int):
                        e_tile=e_tile)
 
 
+_QUANT_CACHE: dict = {}
+
+
+def cached_quantized_table(spec: BloomSpec, table: jnp.ndarray,
+                           table_dtype: str):
+    """Quantized ``table`` for a frozen-params caller, cached per spec.
+
+    The serve-time sibling of cached_hash_matrix: eager callers (benches,
+    eval sweeps, anything that calls kernels.ops with concrete params)
+    would otherwise re-run quantize_table per call on a table that never
+    changes.  Keyed on (spec, table_dtype) with an identity check on the
+    table object — params swapped under the same spec (a training step,
+    a checkpoint reload) miss and requantize, so the cache can never
+    serve stale values; the straight-through TRAINING path never lands
+    here at all (tracers quantize in-graph, see kernels.ops).
+    """
+    from repro.core import quant
+    td = quant.resolve_table_dtype(table_dtype)
+    key = (spec, td)
+    hit = _QUANT_CACHE.get(key)
+    if hit is not None and hit[0] is table:
+        return hit[1]
+    with jax.ensure_compile_time_eval():
+        q = quant.quantize_table(table, td)
+    _QUANT_CACHE[key] = (table, q)
+    return q
+
+
 # --------------------------------------------------------------------------
 # Encoding (Eq. 1)
 # --------------------------------------------------------------------------

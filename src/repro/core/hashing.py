@@ -49,6 +49,27 @@ def _salted(ids: jnp.ndarray, salt: int | jnp.ndarray) -> jnp.ndarray:
     return splitmix32(ids.astype(jnp.uint32) ^ splitmix32(s))
 
 
+def double_hash_salts(seed: int) -> tuple[int, int]:
+    """Host-side ``(splitmix32(2*seed), splitmix32(2*seed+1))`` as ints.
+
+    The two mixed salt constants double_hash folds into every id.  Kernels
+    that rehash ids IN-GRAPH (the quantized decode-topk's on-the-fly mode,
+    kernels/bloom_decode_topk.py) bake these in as static scalars so the
+    in-kernel hash is bit-identical to double_hash / cached_hash_matrix
+    without ever streaming the (d, k) matrix from HBM.  Pure-int mirror of
+    splitmix32 (masked 32-bit arithmetic) so it needs no device round-trip.
+    """
+    mask = 0xFFFFFFFF
+
+    def mix(x: int) -> int:
+        z = (x + 0x9E3779B9) & mask
+        z = ((z ^ (z >> 16)) * 0x85EBCA6B) & mask
+        z = ((z ^ (z >> 13)) * 0xC2B2AE35) & mask
+        return z ^ (z >> 16)
+
+    return mix(2 * seed & mask), mix((2 * seed + 1) & mask)
+
+
 def double_hash(
     ids: jnp.ndarray,
     k: int,

@@ -1,0 +1,111 @@
+"""Bitwidth compression for Bloom tables (DESIGN.md §13).
+
+The paper's win is k/m compression of the one-hot I/O layers; bitwidth
+compression composes multiplicatively with it (PAPERS.md: Embedding
+Compression in Recommender Systems survey).  This module is the single
+source of truth for the ``table_dtype`` knob threaded through the kernel
+layer, the configs and the bytes models:
+
+* ``"float32"`` / ``"bfloat16"`` — plain casts, no scales.
+* ``"int8"``     — symmetric per-row quantization: one positive float32
+  scale per table row, ``scale[r] = max|row_r| / 127``, values rounded to
+  [-127, 127].  Per-ROW (not per-tensor) because both Bloom kernels fetch
+  whole rows: the embed forward DMAs ``idx[t, j]`` rows, the Eq. 3 decode
+  reads whole ``logp[b, :]`` rows — so the scale rides the row fetch and
+  dequantization is a single multiply on the VMEM tile.
+* ``"fp8_e4m3"`` — scale-free cast to ``jnp.float8_e4m3fn`` (dynamic
+  range ±448 covers activations/embeddings at init and after training;
+  no scale tensor, dequant is the ``astype(f32)`` the kernels already do).
+
+Quantization error is bounded elementwise by ``scale/2`` for int8 (see
+tests/test_property.py for the hypothesis-checked bound) and the MXU
+matmuls always accumulate in float32 — the knob changes HBM traffic, not
+accumulation precision.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Canonical knob values.  "auto" is the config-layer default meaning
+# "legacy behavior": cast the table to the activation dtype, no
+# quantization and no scales — byte-identical to the pre-quant code path.
+TABLE_DTYPES = ("float32", "bfloat16", "int8", "fp8_e4m3")
+
+_ALIASES = {"fp32": "float32", "bf16": "bfloat16", "fp8": "fp8_e4m3"}
+
+_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1, "fp8_e4m3": 1}
+
+_STORAGE = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "int8": jnp.int8,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+}
+
+
+def resolve_table_dtype(table_dtype: Optional[str],
+                        allow_auto: bool = False) -> Optional[str]:
+    """Normalize/validate a ``table_dtype`` knob value.
+
+    Returns the canonical name from TABLE_DTYPES; passes ``None`` through
+    (kernel-layer "no quantization requested").  ``allow_auto=True`` also
+    accepts the config-layer default ``"auto"``.  Mirrors
+    kernels.common.resolve_bwd_impl: unknown values raise with the full
+    menu so CLI typos fail fast.
+    """
+    if table_dtype is None:
+        return None
+    if allow_auto and table_dtype == "auto":
+        return "auto"
+    td = _ALIASES.get(table_dtype, table_dtype)
+    if td not in TABLE_DTYPES:
+        extra = ("auto", ) if allow_auto else ()
+        raise ValueError(
+            f"table_dtype must be one of {tuple(extra) + TABLE_DTYPES} "
+            f"(aliases: {sorted(_ALIASES)}), got {table_dtype!r}")
+    return td
+
+
+def table_itemsize(table_dtype: Optional[str]) -> int:
+    """Bytes per stored table element — the bytes models' single source."""
+    if table_dtype is None:
+        return 4
+    return _ITEMSIZE[resolve_table_dtype(table_dtype)]
+
+
+def storage_dtype(table_dtype: str) -> jnp.dtype:
+    """The jnp dtype a table with this knob is stored (and DMA'd) in."""
+    return jnp.dtype(_STORAGE[resolve_table_dtype(table_dtype)])
+
+
+def quantize_table(table: jnp.ndarray, table_dtype: str
+                   ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """(m, D) float table -> (stored table, per-row float32 scales | None).
+
+    int8 returns ``(q, scales)`` with ``q[r] = round(row_r / scales[r])``
+    clipped to [-127, 127] and ``scales[r] = max|row_r| / 127`` (clamped
+    to a tiny positive value so all-zero rows stay exactly zero instead
+    of dividing by zero).  Every other dtype is a plain cast with
+    ``scales=None``.  jit-safe: runs in-graph during training (the
+    straight-through estimator path) and eagerly at serve time (see
+    core.bloom.cached_quantized_table).
+    """
+    td = resolve_table_dtype(table_dtype)
+    if td != "int8":
+        return table.astype(_STORAGE[td]), None
+    x = table.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)                       # (m,)
+    scales = jnp.maximum(amax / 127.0, jnp.float32(1e-12))
+    q = jnp.clip(jnp.round(x / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_table(qtable: jnp.ndarray,
+                     scales: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """The XLA oracle the kernels' in-VMEM dequant is tested against."""
+    x = qtable.astype(jnp.float32)
+    if scales is not None:
+        x = x * scales[:, None].astype(jnp.float32)
+    return x

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import quant
 from repro.kernels.common import (BWD_M_TILE, onehot_count, pad_axis,
                                   resolve_bwd_impl, resolve_interpret)
 
@@ -54,25 +55,55 @@ def _fwd_kernel(logp_ref, h_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def _decode_fwd(logp, H, b_tile, v_tile, interpret):
+def _fwd_kernel_scaled(logp_ref, s_ref, h_ref, out_ref):
+    """int8-logp variant (DESIGN.md §13): every gathered element of a
+    batch row shares that row's scale, so the k-gather accumulates in the
+    integer domain's f32 image and dequantizes ONCE on the (Bt, Vt)
+    output tile — one multiply per output, not per gather."""
+    logp = logp_ref[...].astype(jnp.float32)       # (Bt, m) int8 -> f32
+    h = h_ref[...]                                 # (Vt, k)
+    k = h.shape[1]
+    acc = jnp.take(logp, h[:, 0], axis=1)          # (Bt, Vt)
+    for j in range(1, k):
+        acc = acc + jnp.take(logp, h[:, j], axis=1)
+    out_ref[...] = (acc * s_ref[...]).astype(out_ref.dtype)   # s (Bt, 1)
+
+
+def _decode_fwd(logp, H, b_tile, v_tile, interpret, scales=None):
     B, m = logp.shape
     d, k = H.shape
     logp = pad_axis(logp, 0, b_tile)
     H = pad_axis(H, 0, v_tile)
     Bp, dp = logp.shape[0], H.shape[0]
 
+    in_specs = [
+        pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
+        pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
+    ]
+    operands = (logp, H)
+    kernel = _fwd_kernel
+    if scales is not None:
+        sg = pad_axis(scales.astype(jnp.float32)[:, None], 0, b_tile)
+        in_specs.insert(1, pl.BlockSpec((b_tile, 1), lambda b, v: (b, 0)))
+        operands = (logp, sg, H)
+        kernel = _fwd_kernel_scaled
+
     out = pl.pallas_call(
-        _fwd_kernel,
+        kernel,
         grid=(Bp // b_tile, dp // v_tile),
-        in_specs=[
-            pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
-            pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((b_tile, v_tile), lambda b, v: (b, v)),
         out_shape=jax.ShapeDtypeStruct((Bp, dp), jnp.float32),
         interpret=interpret,
-    )(logp, H)
+    )(*operands)
     return out[:B, :d]
+
+
+def _decode_fwd_quant(logp, H, b_tile, v_tile, interpret, table_dtype):
+    if table_dtype is None:
+        return _decode_fwd(logp, H, b_tile, v_tile, interpret)
+    qlogp, scales = quant.quantize_table(logp, table_dtype)
+    return _decode_fwd(qlogp, H, b_tile, v_tile, interpret, scales=scales)
 
 
 # --------------------------------------------------------------------------
@@ -127,19 +158,20 @@ def bloom_decode_bwd_pallas(g: jnp.ndarray, H: jnp.ndarray, m: int,
 # custom_vjp glue + public entry point
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
 def _bloom_decode(logp, H, bins_fn, b_tile, v_tile, interpret, bwd_impl,
-                  m_tile, e_tile):
-    return _decode_fwd(logp, H, b_tile, v_tile, interpret)
+                  m_tile, e_tile, table_dtype):
+    return _decode_fwd_quant(logp, H, b_tile, v_tile, interpret, table_dtype)
 
 
 def _bloom_decode_vjp_fwd(logp, H, bins_fn, b_tile, v_tile, interpret,
-                          bwd_impl, m_tile, e_tile):
-    return _decode_fwd(logp, H, b_tile, v_tile, interpret), (logp, H)
+                          bwd_impl, m_tile, e_tile, table_dtype):
+    return (_decode_fwd_quant(logp, H, b_tile, v_tile, interpret,
+                              table_dtype), (logp, H))
 
 
 def _bloom_decode_vjp_bwd(bins_fn, b_tile, v_tile, interpret, bwd_impl,
-                          m_tile, e_tile, res, g):
+                          m_tile, e_tile, table_dtype, res, g):
     logp, H = res
     if bwd_impl == "csr":
         from repro.kernels.bloom_csr import bloom_decode_bwd_csr_pallas
@@ -155,6 +187,9 @@ def _bloom_decode_vjp_bwd(bins_fn, b_tile, v_tile, interpret, bwd_impl,
         dlogp = bloom_decode_bwd_pallas(g, H, logp.shape[1],
                                         m_tile=m_tile, v_tile=v_tile,
                                         interpret=interpret)
+    # table_dtype != None trains straight-through: the scatter-add is the
+    # exact gradient of the unquantized linear map (the backward kernels
+    # never read logp, so their math is untouched — DESIGN.md §13).
     return dlogp.astype(logp.dtype), None
 
 
@@ -164,14 +199,15 @@ _bloom_decode.defvjp(_bloom_decode_vjp_fwd, _bloom_decode_vjp_bwd)
 @functools.partial(jax.jit,
                    static_argnames=("b_tile", "v_tile", "interpret",
                                     "bwd_impl", "m_tile", "e_tile",
-                                    "bins_fn"))
+                                    "bins_fn", "table_dtype"))
 def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
                         b_tile: int = 8, v_tile: int = 2048,
                         interpret: bool | None = None,
                         bwd_impl: str = "dense",
                         m_tile: int = BWD_M_TILE,
                         e_tile: int | None = None,
-                        bins_fn=None) -> jnp.ndarray:
+                        bins_fn=None,
+                        table_dtype: str | None = None) -> jnp.ndarray:
     """logp (B, m) float; H (d, k) int32 -> scores (B, d) float32.
 
     Differentiable: jax.grad w.r.t. `logp` runs the scatter-add backward
@@ -186,10 +222,16 @@ def bloom_decode_pallas(logp: jnp.ndarray, H: jnp.ndarray,
     so the sort amortizes to zero).  None on the csr path re-bins
     in-graph inside the backward.  All backward tiling knobs
     (``m_tile``, ``e_tile``) are threaded through the custom VJP.
+
+    ``table_dtype`` (DESIGN.md §13) stores the resident (B, m) log-prob
+    block in a narrower dtype: "int8" quantizes per-batch-row symmetric
+    and dequantizes once per output tile in VMEM; "bfloat16"/"fp8_e4m3"
+    cast (the kernel's astype(f32) is the dequant); None is the legacy
+    exact path.  Gradients are straight-through against the f32 logp.
     """
     bwd_impl, e_tile = resolve_bwd_impl(bwd_impl, e_tile)
     b_tile = min(b_tile, logp.shape[0])
     v_tile = min(v_tile, H.shape[0])
     return _bloom_decode(logp, H, bins_fn, b_tile, v_tile,
                          resolve_interpret(interpret), bwd_impl, m_tile,
-                         e_tile)
+                         e_tile, quant.resolve_table_dtype(table_dtype))

@@ -40,6 +40,18 @@ HBM bytes drop from ``nB*(Bt*m*4 + d*k*4)`` to ``nA*(Bt*m*4 + d*k*4)``
 least one live slot — bytes scale with occupancy instead of pool size
 (bench_kernels.py commits the occupancy sweep; CI gates >=1.5x fewer
 bytes at <=50% occupancy).
+
+**Quantized logp + in-kernel hashing (DESIGN.md §13).**  ``table_dtype``
+stores the resident (Bt, m) block in bf16/int8/fp8 — the VMEM gather runs
+on the narrow tile and int8 dequantizes with ONE per-batch-row scale
+multiply on the score tile.  That alone cannot beat the fp32 row by the
+gated 3x: at serving batch sizes the ``d*k*4`` H stream dominates (2.4 MB
+vs 0.24 MB of logp at qwen3-4b/B=8).  So the quantized path also drops H
+entirely: ``hash_spec=(d, k, seed)`` re-derives every vocab tile's hash
+indices IN-KERNEL from the tile's id iota via enhanced double hashing —
+bit-identical to core.hashing.double_hash (and therefore to the cached
+(d, k) matrix for any on-the-fly spec), at zero HBM bytes.  Identity
+specs (m == d, k == 1) keep the explicit-H path.
 """
 from __future__ import annotations
 
@@ -51,22 +63,29 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import hashing, quant
 from repro.kernels.common import pad_axis, resolve_interpret
 
 
 def modeled_hbm_bytes(active, b_tile: int, *, m: int, d: int, k: int,
-                      topk: int) -> int:
+                      topk: int, logp_itemsize: int = 4,
+                      inkernel_hash: bool = False,
+                      row_scales: bool = False) -> int:
     """Analytic HBM bytes of one row-skipping decode-topk call for a
     given slot-occupancy mask — the SINGLE source for the occupancy rows
     in benchmarks/bench_kernels.py and the serving byte audits, so the
     bytes model can never drift from the grid it describes.
 
-    Per VISITED row block the grid streams the (b_tile, m) f32 logp block
-    plus one full (d, k) i32 sweep of H (vocab axis innermost => H is
-    re-streamed per block); blocks with no live slot are pinned to
-    resident blocks and fetch nothing.  The (B, topk) f32+i32 outputs are
-    flushed for every block, live or dead.  A dense (no ``active``) grid
-    is the all-ones mask.
+    Per VISITED row block the grid streams the (b_tile, m) logp block at
+    ``logp_itemsize`` bytes/element (4 = legacy f32; the table_dtype knob
+    sets 2/1/1 for bf16/int8/fp8) plus one full (d, k) i32 sweep of H
+    (vocab axis innermost => H is re-streamed per block) — unless
+    ``inkernel_hash``, where the hash indices are re-derived from the
+    tile iota at zero HBM cost.  ``row_scales`` adds the (b_tile,) f32
+    int8 dequant scales per visited block.  Blocks with no live slot are
+    pinned to resident blocks and fetch nothing.  The (B, topk) f32+i32
+    outputs are flushed for every block, live or dead.  A dense (no
+    ``active``) grid is the all-ones mask.
     """
     act = np.asarray(active, bool).ravel()
     B = act.shape[0]
@@ -74,19 +93,55 @@ def modeled_hbm_bytes(active, b_tile: int, *, m: int, d: int, k: int,
     if pad:
         act = np.concatenate([act, np.zeros(pad, bool)])
     n_visited = int(act.reshape(-1, b_tile).any(axis=1).sum())
-    return int(n_visited * (b_tile * m * 4 + d * k * 4) + B * topk * 8)
+    per_block = b_tile * m * logp_itemsize
+    if not inkernel_hash:
+        per_block += d * k * 4
+    if row_scales:
+        per_block += b_tile * 4
+    return int(n_visited * per_block + B * topk * 8)
 
 
-def _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
-               iv, topk, v_tile, d):
+def _tile_scores(logp, h_ref, iv, v_tile, hash_spec):
+    """(Bt, Vt) raw score tile: k-gather from the resident logp block,
+    indices either streamed from H or re-derived in-kernel."""
+    if hash_spec is None:
+        h = h_ref[...]                              # (Vt, k)
+        k = h.shape[1]
+        scores = jnp.take(logp, h[:, 0], axis=1)    # (Bt, Vt)
+        for j in range(1, k):
+            scores = scores + jnp.take(logp, h[:, j], axis=1)
+        return scores
+    # Enhanced double hashing on the tile's id iota — the exact
+    # arithmetic of core.hashing.double_hash, with the two mixed salts
+    # baked in as static scalars (hashing.double_hash_salts).
+    m, k, c1, c2 = hash_spec
+    vid = (jax.lax.broadcasted_iota(jnp.int32, (1, v_tile), 1)
+           + iv * v_tile).astype(jnp.uint32)
+    h1 = hashing.splitmix32(vid ^ np.uint32(c1)) % np.uint32(m)
+    h2 = hashing.splitmix32(vid ^ np.uint32(c2)) \
+        % np.uint32(max(m - 1, 1)) + np.uint32(1)
+    scores = None
+    for j in range(k):
+        tri = (j ** 3 - j) // 6 % m
+        hj = (h1 + np.uint32(j) * h2 + np.uint32(tri)) % np.uint32(m)
+        hj = hj.astype(jnp.int32).reshape(v_tile)
+        sj = jnp.take(logp, hj, axis=1)
+        scores = sj if scores is None else scores + sj
+    return scores
+
+
+def _fold_tile(logp_ref, h_ref, s_ref, vals_ref, ids_ref, best_v, best_i, *,
+               iv, topk, v_tile, d, hash_spec):
     """One (row-block, vocab-tile) fold of the streaming top-k — shared
     by the dense and the row-skipping grids."""
     logp = logp_ref[...].astype(jnp.float32)        # (Bt, m)
-    h = h_ref[...]                                  # (Vt, k)
-    k = h.shape[1]
-    scores = jnp.take(logp, h[:, 0], axis=1)        # (Bt, Vt)
-    for j in range(1, k):
-        scores = scores + jnp.take(logp, h[:, j], axis=1)
+    if s_ref is not None:
+        # int8 dequant happens HERE, on the VMEM-resident (Bt, m) block:
+        # one per-batch-row scale multiply before the k-gather, so the
+        # gathered f32 values (and thus tie patterns) are bit-identical
+        # to the XLA dequantize-then-decode oracle.
+        logp = logp * s_ref[...]                    # s (Bt, 1)
+    scores = _tile_scores(logp, h_ref, iv, v_tile, hash_spec)
 
     b_tile = scores.shape[0]
     gid = jax.lax.broadcasted_iota(jnp.int32, (b_tile, v_tile), 1) \
@@ -119,28 +174,44 @@ def _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
         ids_ref[...] = best_i[...]
 
 
-def _kernel(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i, *,
-            topk, v_tile, d):
-    _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i,
-               iv=pl.program_id(1), topk=topk, v_tile=v_tile, d=d)
+def _split_refs(refs, has_scales, hash_spec):
+    """(logp[, s][, h], vals, ids, best_v, best_i) positional unpack for
+    the dense/skip kernels' variable operand lists."""
+    refs = list(refs)
+    logp_ref = refs.pop(0)
+    s_ref = refs.pop(0) if has_scales else None
+    h_ref = refs.pop(0) if hash_spec is None else None
+    vals_ref, ids_ref, best_v, best_i = refs
+    return logp_ref, s_ref, h_ref, vals_ref, ids_ref, best_v, best_i
 
 
-def _kernel_skip(occ_ref, pin_ref, logp_ref, h_ref, vals_ref, ids_ref,
-                 best_v, best_i, *, topk, v_tile, d):
+def _kernel(*refs, topk, v_tile, d, has_scales, hash_spec):
+    logp_ref, s_ref, h_ref, vals_ref, ids_ref, best_v, best_i = \
+        _split_refs(refs, has_scales, hash_spec)
+    _fold_tile(logp_ref, h_ref, s_ref, vals_ref, ids_ref, best_v, best_i,
+               iv=pl.program_id(1), topk=topk, v_tile=v_tile, d=d,
+               hash_spec=hash_spec)
+
+
+def _kernel_skip(occ_ref, pin_ref, *refs, topk, v_tile, d, has_scales,
+                 hash_spec):
     """Row-skipping variant: ``occ_ref``/``pin_ref`` are the scalar-
     prefetched per-block occupancy / logp-block pin arrays (also consumed
     by the data-dependent index maps).  Inactive blocks never touch HBM:
     their logp/H block indices revisit resident blocks (no copy), the fold
     is skipped, and the output block — which IS flushed for every b — is
     written as (-inf, 0), matching recover_topk's dead-row masking."""
+    logp_ref, s_ref, h_ref, vals_ref, ids_ref, best_v, best_i = \
+        _split_refs(refs, has_scales, hash_spec)
     ib = pl.program_id(0)
     iv = pl.program_id(1)
     act = occ_ref[ib] > 0
 
     @pl.when(act)
     def _():
-        _fold_tile(logp_ref, h_ref, vals_ref, ids_ref, best_v, best_i,
-                   iv=iv, topk=topk, v_tile=v_tile, d=d)
+        _fold_tile(logp_ref, h_ref, s_ref, vals_ref, ids_ref, best_v,
+                   best_i, iv=iv, topk=topk, v_tile=v_tile, d=d,
+                   hash_spec=hash_spec)
 
     @pl.when(jnp.logical_not(act) & (iv == pl.num_programs(1) - 1))
     def _():
@@ -173,11 +244,15 @@ def block_occupancy(active: jnp.ndarray, b_tile: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("topk", "b_tile", "v_tile", "interpret"))
-def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
+                   static_argnames=("topk", "b_tile", "v_tile", "interpret",
+                                    "table_dtype", "hash_spec"))
+def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray | None,
+                             topk: int,
                              b_tile: int = 8, v_tile: int = 2048,
                              interpret: bool | None = None,
-                             active: jnp.ndarray | None = None):
+                             active: jnp.ndarray | None = None,
+                             table_dtype: str | None = None,
+                             hash_spec: tuple[int, int, int] | None = None):
     """logp (B, m) float; H (d, k) int32 -> (values, ids), each (B, topk).
 
     values[b] are the topk largest Eq. 3 scores over the original vocab,
@@ -190,18 +265,42 @@ def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
     sharing a block with a live slot are computed normally, identical to
     the dense grid (the caller masks dead rows regardless —
     io.recover_topk).
+
+    ``table_dtype`` (DESIGN.md §13) stores the resident logp block in a
+    narrower dtype (int8: per-row symmetric scales, dequantized on the
+    score tile).  ``hash_spec=(d, k, seed)`` drops the H operand and
+    re-derives hash indices in-kernel (bit-identical to
+    core.hashing.double_hash for on-the-fly specs); H may then be None.
     """
     interpret = resolve_interpret(interpret)
     B, m = logp.shape
-    d, k = H.shape
+    if hash_spec is not None:
+        d, k, seed = hash_spec
+        c1, c2 = hashing.double_hash_salts(seed)
+        kern_hash = (m, k, c1, c2)
+        H = None
+    else:
+        d, k = H.shape
+        kern_hash = None
     if not (0 < topk <= d):
         raise ValueError(f"need 0 < topk <= d, got topk={topk} d={d}")
     b_tile = min(b_tile, B)
     v_tile = max(min(v_tile, d), topk)   # first tile seeds the running best
+
+    table_dtype = quant.resolve_table_dtype(table_dtype)
+    scales = None
+    if table_dtype is not None:
+        logp, scales = quant.quantize_table(logp, table_dtype)
+
     logp = pad_axis(logp, 0, b_tile)
-    H = pad_axis(H, 0, v_tile)                 # padded ids masked via d
-    Bp, dp = logp.shape[0], H.shape[0]
+    Bp = logp.shape[0]
+    if H is not None:
+        H = pad_axis(H, 0, v_tile)             # padded ids masked via d
+        dp = H.shape[0]
+    else:
+        dp = d + ((-d) % v_tile)               # iota ids masked via d
     grid = (Bp // b_tile, dp // v_tile)
+    has_scales = scales is not None
 
     out_shape = [
         jax.ShapeDtypeStruct((Bp, topk), jnp.float32),
@@ -211,15 +310,23 @@ def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
         pltpu.VMEM((b_tile, topk), jnp.float32),
         pltpu.VMEM((b_tile, topk), jnp.int32),
     ]
+    kwargs = dict(topk=topk, v_tile=v_tile, d=d, has_scales=has_scales,
+                  hash_spec=kern_hash)
 
     if active is None:
+        in_specs = [pl.BlockSpec((b_tile, m), lambda b, v: (b, 0))]
+        operands = [logp]
+        if has_scales:
+            in_specs.append(pl.BlockSpec((b_tile, 1), lambda b, v: (b, 0)))
+            operands.append(pad_axis(scales.astype(jnp.float32)[:, None],
+                                     0, b_tile))
+        if H is not None:
+            in_specs.append(pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)))
+            operands.append(H)
         vals, ids = pl.pallas_call(
-            functools.partial(_kernel, topk=topk, v_tile=v_tile, d=d),
+            functools.partial(_kernel, **kwargs),
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((b_tile, m), lambda b, v: (b, 0)),
-                pl.BlockSpec((v_tile, k), lambda b, v: (v, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=[
                 pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
                 pl.BlockSpec((b_tile, topk), lambda b, v: (b, 0)),
@@ -227,30 +334,39 @@ def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
             out_shape=out_shape,
             scratch_shapes=scratch_shapes,
             interpret=interpret,
-        )(logp, H)
+        )(*operands)
         return vals[:B], ids[:B]
 
     occ, pin = block_occupancy(active, b_tile)
     nv_last = grid[1] - 1
+    in_specs = [
+        # inactive block: revisit the pinned logp block and the H tile
+        # left resident by the previous sweep (nv_last) — a revisited
+        # block index issues no copy in the Pallas pipeline.  Leading
+        # dead blocks (pin points FORWARD to the first active block)
+        # instead prefetch tile 0, the tile that first live sweep starts
+        # with, so they too fetch nothing the live sweeps would not
+        # fetch anyway.
+        pl.BlockSpec((b_tile, m), lambda b, v, occ, pin: (pin[b], 0)),
+    ]
+    operands = [logp]
+    if has_scales:
+        in_specs.append(pl.BlockSpec((b_tile, 1),
+                                     lambda b, v, occ, pin: (pin[b], 0)))
+        operands.append(pad_axis(scales.astype(jnp.float32)[:, None],
+                                 0, b_tile))
+    if H is not None:
+        in_specs.append(pl.BlockSpec(
+            (v_tile, k),
+            lambda b, v, occ, pin:
+            (jnp.where(occ[b] > 0, v,
+                       jnp.where(pin[b] > b, 0, nv_last)),
+             0)))
+        operands.append(H)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            # inactive block: revisit the pinned logp block and the H
-            # tile left resident by the previous sweep (nv_last) — a
-            # revisited block index issues no copy in the Pallas
-            # pipeline.  Leading dead blocks (pin points FORWARD to the
-            # first active block) instead prefetch tile 0, the tile that
-            # first live sweep starts with, so they too fetch nothing
-            # the live sweeps would not fetch anyway.
-            pl.BlockSpec((b_tile, m),
-                         lambda b, v, occ, pin: (pin[b], 0)),
-            pl.BlockSpec((v_tile, k),
-                         lambda b, v, occ, pin:
-                         (jnp.where(occ[b] > 0, v,
-                                    jnp.where(pin[b] > b, 0, nv_last)),
-                          0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((b_tile, topk), lambda b, v, occ, pin: (b, 0)),
             pl.BlockSpec((b_tile, topk), lambda b, v, occ, pin: (b, 0)),
@@ -258,9 +374,9 @@ def bloom_decode_topk_pallas(logp: jnp.ndarray, H: jnp.ndarray, topk: int,
         scratch_shapes=scratch_shapes,
     )
     vals, ids = pl.pallas_call(
-        functools.partial(_kernel_skip, topk=topk, v_tile=v_tile, d=d),
+        functools.partial(_kernel_skip, **kwargs),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(occ, pin, logp, H)
+    )(occ, pin, logp, *operands[1:])
     return vals[:B], ids[:B]

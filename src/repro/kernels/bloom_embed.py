@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import quant
 from repro.kernels.common import (BWD_M_TILE, onehot_count, pad_axis,
                                   resolve_bwd_impl, resolve_interpret)
 
@@ -67,33 +68,102 @@ def _fwd_kernel(idx_ref, table_ref, out_ref, rows, sems, *, t_tile, k,
     out_ref[...] = r.sum(axis=1).astype(out_ref.dtype)
 
 
-def _embed_fwd(table, idx, t_tile, d_tile, interpret):
+def _fwd_kernel_scaled(idx_ref, s_ref, table_ref, out_ref, rows, sems, *,
+                       t_tile, k, d_tile):
+    """int8-table variant: same row DMAs, plus an in-VMEM dequant.
+
+    The fetched rows stay in their 1-byte storage dtype through the DMA;
+    dequantization is one multiply by the per-row scale on the VMEM tile
+    (DESIGN.md §13).  Scales ride the scalar-prefetch path next to the
+    indices — (T, k) float32 pre-gathered per fetched row, so the kernel
+    reads t_tile*k SMEM scalars, never the (m,) scale vector.
+    """
+    t0 = pl.program_id(0) * t_tile
+    d0 = pl.program_id(1) * d_tile
+    copies = []
+    for tt in range(t_tile):
+        for j in range(k):
+            row = idx_ref[t0 + tt, j]
+            c = pltpu.make_async_copy(
+                table_ref.at[pl.ds(row, 1), pl.ds(d0, d_tile)],
+                rows.at[pl.ds(tt * k + j, 1), :],
+                sems.at[tt * k + j],
+            )
+            c.start()
+            copies.append(c)
+    for c in copies:
+        c.wait()
+    s = jnp.stack([jnp.stack([s_ref[t0 + tt, j] for j in range(k)])
+                   for tt in range(t_tile)])             # (t_tile, k) f32
+    r = rows[...].astype(jnp.float32).reshape(t_tile, k, d_tile)
+    out_ref[...] = (r * s[:, :, None]).sum(axis=1).astype(out_ref.dtype)
+
+
+def _embed_fwd(table, idx, t_tile, d_tile, interpret, scales=None,
+               out_dtype=None):
     m, D = table.shape
     T, k = idx.shape
     t_tile = min(t_tile, T)
     d_tile = min(d_tile, D)
+    out_dtype = table.dtype if out_dtype is None else jnp.dtype(out_dtype)
     table = pad_axis(table, 1, d_tile)
     idx = pad_axis(idx, 0, t_tile)             # pad rows gather row 0: sliced
     Tp, Dp = idx.shape[0], table.shape[1]
     grid = (Tp // t_tile, Dp // d_tile)
 
+    if scales is None:
+        kernel = functools.partial(_fwd_kernel, t_tile=t_tile, k=k,
+                                   d_tile=d_tile)
+        n_prefetch, operands = 1, (idx, table)
+        out_index = lambda t, d, idx_ref: (t, d)
+    else:
+        # Per-fetched-row scales, gathered OUTSIDE the kernel (a (T, k)
+        # float32 gather of the (m,) vector — tiny next to the row DMAs)
+        # so they prefetch alongside the indices.
+        sg = jnp.take(scales.astype(jnp.float32), idx, axis=0)   # (Tp, k)
+        kernel = functools.partial(_fwd_kernel_scaled, t_tile=t_tile, k=k,
+                                   d_tile=d_tile)
+        n_prefetch, operands = 2, (idx, sg, table)
+        out_index = lambda t, d, idx_ref, s_ref: (t, d)
+
     out = pl.pallas_call(
-        functools.partial(_fwd_kernel, t_tile=t_tile, k=k, d_tile=d_tile),
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=n_prefetch,
             grid=grid,
             in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
-            out_specs=pl.BlockSpec((t_tile, d_tile),
-                                   lambda t, d, idx_ref: (t, d)),
+            out_specs=pl.BlockSpec((t_tile, d_tile), out_index),
             scratch_shapes=[
                 pltpu.VMEM((t_tile * k, d_tile), table.dtype),
                 pltpu.SemaphoreType.DMA((t_tile * k,)),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((Tp, Dp), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((Tp, Dp), out_dtype),
         interpret=interpret,
-    )(idx, table)
+    )(*operands)
     return out[:T, :D]
+
+
+def _default_out_dtype(table_dtype, table):
+    """out dtype when the caller leaves it implicit: float storage keeps
+    its own dtype (legacy behavior); sub-byte storage widens to f32."""
+    if table_dtype is None:
+        return table.dtype
+    st = quant.storage_dtype(table_dtype)
+    return st if st in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)) \
+        else jnp.dtype(jnp.float32)
+
+
+def _embed_fwd_quant(table, idx, t_tile, d_tile, interpret, table_dtype,
+                     out_dtype):
+    if table_dtype is None:
+        return _embed_fwd(table, idx, t_tile, d_tile, interpret,
+                          out_dtype=out_dtype)
+    if out_dtype is None:
+        out_dtype = _default_out_dtype(table_dtype, table)
+    qtable, scales = quant.quantize_table(table, table_dtype)
+    return _embed_fwd(qtable, idx, t_tile, d_tile, interpret, scales=scales,
+                      out_dtype=out_dtype)
 
 
 # --------------------------------------------------------------------------
@@ -152,21 +222,24 @@ def bloom_embed_bwd_pallas(g: jnp.ndarray, idx: jnp.ndarray, m: int,
 # custom_vjp glue + public entry point
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10))
 def _bloom_embed(table, idx, t_tile, d_tile, interpret, bwd_impl,
-                 m_tile, bwd_t_tile, e_tile):
-    return _embed_fwd(table, idx, t_tile, d_tile, interpret)
+                 m_tile, bwd_t_tile, e_tile, table_dtype, out_dtype):
+    return _embed_fwd_quant(table, idx, t_tile, d_tile, interpret,
+                            table_dtype, out_dtype)
 
 
 def _bloom_embed_vjp_fwd(table, idx, t_tile, d_tile, interpret, bwd_impl,
-                         m_tile, bwd_t_tile, e_tile):
-    out = _embed_fwd(table, idx, t_tile, d_tile, interpret)
+                         m_tile, bwd_t_tile, e_tile, table_dtype, out_dtype):
+    out = _embed_fwd_quant(table, idx, t_tile, d_tile, interpret,
+                           table_dtype, out_dtype)
     # `table` rides along for shape/dtype only — it is a live param anyway.
     return out, (idx, table)
 
 
 def _bloom_embed_vjp_bwd(t_tile, d_tile, interpret, bwd_impl, m_tile,
-                         bwd_t_tile, e_tile, res, g):
+                         bwd_t_tile, e_tile, table_dtype, out_dtype, res, g):
     idx, table = res
     if bwd_impl == "csr":
         from repro.kernels.bloom_csr import bloom_embed_bwd_csr_pallas
@@ -180,6 +253,12 @@ def _bloom_embed_vjp_bwd(t_tile, d_tile, interpret, bwd_impl, m_tile,
         dtable = bloom_embed_bwd_pallas(
             g, idx, table.shape[0], m_tile=m_tile, d_tile=d_tile,
             t_tile=bwd_t_tile, interpret=interpret)
+    # Quantized tables (table_dtype != None) train straight-through: the
+    # forward ran on quantize(table) but the scatter-add above is the
+    # exact gradient of the UNquantized linear map, accumulated in f32
+    # against the master table — round() has zero gradient, so STE is the
+    # standard estimator (DESIGN.md §13).  The CSR/dense kernels are
+    # unchanged in math; only the forward's fetched-row dtype differs.
     return dtable.astype(table.dtype), None
 
 
@@ -188,15 +267,39 @@ _bloom_embed.defvjp(_bloom_embed_vjp_fwd, _bloom_embed_vjp_bwd)
 
 @functools.partial(jax.jit,
                    static_argnames=("t_tile", "d_tile", "interpret",
+                                    "out_dtype"))
+def bloom_embed_fwd_quantized(qtable: jnp.ndarray,
+                              scales: jnp.ndarray | None,
+                              idx: jnp.ndarray,
+                              t_tile: int = 8, d_tile: int = 512,
+                              interpret: bool | None = None,
+                              out_dtype=jnp.float32) -> jnp.ndarray:
+    """Forward-only gather-sum on a PRE-quantized table.
+
+    The serve-path sibling of bloom_embed_pallas: callers with frozen
+    params pay the quantize cost once (core.bloom.cached_quantized_table)
+    and pass ``(qtable, scales)`` straight to the kernel — no per-call
+    quantize in the graph, no VJP.  ``scales=None`` for the scale-free
+    dtypes (f32/bf16/fp8); (m,) float32 per-row scales for int8.
+    """
+    return _embed_fwd(qtable, idx, t_tile, d_tile,
+                      resolve_interpret(interpret), scales=scales,
+                      out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_tile", "d_tile", "interpret",
                                     "bwd_impl", "m_tile", "bwd_t_tile",
-                                    "e_tile"))
+                                    "e_tile", "table_dtype", "out_dtype"))
 def bloom_embed_pallas(table: jnp.ndarray, idx: jnp.ndarray,
                        t_tile: int = 8, d_tile: int = 512,
                        interpret: bool | None = None,
                        bwd_impl: str = "dense",
                        m_tile: int = BWD_M_TILE,
                        bwd_t_tile: int = 128,
-                       e_tile: int | None = None) -> jnp.ndarray:
+                       e_tile: int | None = None,
+                       table_dtype: str | None = None,
+                       out_dtype=None) -> jnp.ndarray:
     """table (m, D), idx (T, k) int32 -> (T, D) = k-way gather-sum.
 
     Differentiable: jax.grad w.r.t. `table` runs the scatter-add backward
@@ -212,8 +315,18 @@ def bloom_embed_pallas(table: jnp.ndarray, idx: jnp.ndarray,
     All backward tiling knobs are threaded through the custom VJP:
     ``m_tile`` (both impls), ``bwd_t_tile`` (dense token tile) and
     ``e_tile`` (csr entry tile; None = kernels.bloom_csr.CSR_E_TILE).
+
+    ``table_dtype`` (DESIGN.md §13) selects the table's storage dtype on
+    the HBM side of the row DMAs: None leaves the table untouched (legacy
+    path, bit-identical to before the knob existed); "float32"/"bfloat16"
+    cast; "int8" quantizes per-row symmetric in-graph and dequantizes on
+    the VMEM tile; "fp8_e4m3" casts scale-free.  Gradients are
+    straight-through against the master table.  ``out_dtype`` overrides
+    the output dtype (default: the float storage dtype, or float32 for
+    the sub-byte dtypes).
     """
     bwd_impl, e_tile = resolve_bwd_impl(bwd_impl, e_tile)
+    table_dtype = quant.resolve_table_dtype(table_dtype)
     return _bloom_embed(table, idx, t_tile, d_tile,
                         resolve_interpret(interpret), bwd_impl, m_tile,
-                        bwd_t_tile, e_tile)
+                        bwd_t_tile, e_tile, table_dtype, out_dtype)

@@ -17,27 +17,47 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.core.bloom import (BloomSpec, cached_decode_bins,
-                              cached_hash_matrix)
+                              cached_hash_matrix, cached_quantized_table)
 from repro.kernels.common import BWD_M_TILE
 from repro.kernels.bloom_csr import CSR_E_TILE
-from repro.kernels.bloom_embed import bloom_embed_pallas
+from repro.kernels.bloom_embed import (bloom_embed_fwd_quantized,
+                                       bloom_embed_pallas)
 from repro.kernels.bloom_decode import bloom_decode_pallas
 from repro.kernels.bloom_decode_topk import bloom_decode_topk_pallas
 from repro.kernels.bloom_ce import bloom_ce_pallas
 
 
 def bloom_embed(table: jnp.ndarray, tokens: jnp.ndarray,
-                spec: BloomSpec, bwd_impl: str = "csr") -> jnp.ndarray:
+                spec: BloomSpec, bwd_impl: str = "csr",
+                table_dtype: str | None = None,
+                out_dtype=None) -> jnp.ndarray:
     """table (m, D); tokens (B, S) -> (B, S, D).
 
     ``bwd_impl`` selects the scatter-add backward under jax.grad: "csr"
     (CSR-binned, reads the cotangent ~k times total) or "dense" (m-tile
     sweep fallback) — threaded from ModelConfig.bwd_impl by models/io.py.
+
+    ``table_dtype`` (DESIGN.md §13) sets the table's storage dtype on the
+    HBM side of the kernel's row DMAs, threaded from
+    ModelConfig.table_dtype.  Traced tables (training/serving steps)
+    quantize in-graph — the straight-through path, so jax.grad flows f32
+    into the master table; a CONCRETE table (eager eval sweeps, benches)
+    is quantized once through core.bloom.cached_quantized_table and the
+    forward-only kernel entry runs on the cached arrays.
     """
     B, S = tokens.shape
     idx = spec.indices_for(tokens.reshape(-1))        # (T, k)
-    out = bloom_embed_pallas(table, idx, bwd_impl=bwd_impl)
+    td = quant.resolve_table_dtype(table_dtype)
+    if td is not None and not isinstance(table, jax.core.Tracer):
+        qtable, scales = cached_quantized_table(spec, table, td)
+        out = bloom_embed_fwd_quantized(
+            qtable, scales, idx,
+            out_dtype=out_dtype if out_dtype is not None else jnp.float32)
+    else:
+        out = bloom_embed_pallas(table, idx, bwd_impl=bwd_impl,
+                                 table_dtype=td, out_dtype=out_dtype)
     return out.reshape(B, S, -1)
 
 
@@ -63,14 +83,16 @@ def _decode_bins_thunk(spec: BloomSpec, m_tile: int, e_tile: int):
 
 def bloom_decode(logp: jnp.ndarray, spec: BloomSpec,
                  hash_matrix: jnp.ndarray | None = None,
-                 bwd_impl: str = "csr") -> jnp.ndarray:
+                 bwd_impl: str = "csr",
+                 table_dtype: str | None = None) -> jnp.ndarray:
     """logp (..., m) -> Eq. 3 scores (..., d) over the original vocab.
 
     With bwd_impl="csr" and the spec-cached hash matrix, the per-spec CSR
     bins thunk (core.bloom.cached_decode_bins) rides into the custom VJP
     so the binned backward never re-sorts H — and forward-only callers
     never build the bins at all; a caller-supplied hash_matrix falls back
-    to in-graph binning inside the backward.
+    to in-graph binning inside the backward.  ``table_dtype`` stores the
+    resident logp block narrow (DESIGN.md §13; gradients straight-through).
     """
     lead = logp.shape[:-1]
     flat = logp.reshape(-1, logp.shape[-1])
@@ -82,23 +104,43 @@ def bloom_decode(logp: jnp.ndarray, spec: BloomSpec,
     else:
         H = hash_matrix
     scores = bloom_decode_pallas(flat, H, bwd_impl=bwd_impl,
-                                 bins_fn=bins_fn)
+                                 bins_fn=bins_fn,
+                                 table_dtype=quant.resolve_table_dtype(
+                                     table_dtype))
     return scores.reshape(*lead, spec.d)
 
 
 def bloom_decode_topk(logp: jnp.ndarray, spec: BloomSpec, topk: int,
                       hash_matrix: jnp.ndarray | None = None,
-                      active: jnp.ndarray | None = None):
+                      active: jnp.ndarray | None = None,
+                      table_dtype: str | None = None):
     """logp (..., m) -> fused Eq. 3 + top-k: (values, ids), each (..., topk).
 
     Never materializes the (..., d) recovered-score matrix — the serving
     fast path (see kernels.bloom_decode_topk for the bytes model).
     ``active`` (...,) bool enables the row-skipping occupancy grid for
     slot pools at partial occupancy (skipped rows return (-inf, 0)).
+
+    ``table_dtype`` (DESIGN.md §13) narrows the resident logp block AND —
+    for on-the-fly non-identity specs with no caller H — drops the (d, k)
+    hash stream entirely: the kernel re-derives the indices in-graph
+    (hash_spec), bit-identical to the cached matrix.  The legacy
+    table_dtype=None path is untouched, so existing bytes-model rows and
+    serving schedules cannot drift.
     """
     lead = logp.shape[:-1]
     flat = logp.reshape(-1, logp.shape[-1])
-    H = hash_matrix if hash_matrix is not None else cached_hash_matrix(spec)
     act = None if active is None else active.reshape(-1)
-    vals, ids = bloom_decode_topk_pallas(flat, H, topk, active=act)
+    td = quant.resolve_table_dtype(table_dtype)
+    inkernel = (td is not None and hash_matrix is None and spec.on_the_fly
+                and not (spec.m == spec.d and spec.k == 1))
+    if inkernel:
+        vals, ids = bloom_decode_topk_pallas(
+            flat, None, topk, active=act, table_dtype=td,
+            hash_spec=(spec.d, spec.k, spec.seed))
+    else:
+        H = (hash_matrix if hash_matrix is not None
+             else cached_hash_matrix(spec))
+        vals, ids = bloom_decode_topk_pallas(flat, H, topk, active=act,
+                                             table_dtype=td)
     return vals.reshape(*lead, topk), ids.reshape(*lead, topk)

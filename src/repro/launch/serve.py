@@ -47,12 +47,14 @@ def pad_caches_to(caches_small, caches_template):
     return steps_lib.insert_cache_slot(caches_template, caches_small, 0)
 
 
-def _config(arch: str, full: bool, io_impl):
+def _config(arch: str, full: bool, io_impl, table_dtype=None):
     cfg = (configs.get_config(arch) if full
            else configs.get_smoke_config(arch))
+    import dataclasses
     if io_impl is not None:
-        import dataclasses
         cfg = dataclasses.replace(cfg, io_impl=io_impl)
+    if table_dtype is not None:
+        cfg = dataclasses.replace(cfg, table_dtype=table_dtype)
     return cfg
 
 
@@ -68,9 +70,9 @@ def _setup(cfg, seed: int):
 
 def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
         topk: int = 8, seed: int = 0, full: bool = False,
-        io_impl: str | None = None):
+        io_impl: str | None = None, table_dtype: str | None = None):
     """Static whole-batch serving (the --static / A-B baseline path)."""
-    cfg = _config(arch, full, io_impl)
+    cfg = _config(arch, full, io_impl, table_dtype)
     params, dist = _setup(cfg, seed)
     max_len = prompt_len + gen
 
@@ -124,9 +126,10 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
                    topk: int = 8, seed: int = 0, full: bool = False,
                    io_impl: str | None = None, eos_id: int | None = None,
                    prefill_workers: int = 1,
+                   table_dtype: str | None = None,
                    failpoints: str | None = None):
     """Continuous batching over a seeded Poisson workload."""
-    cfg = _config(arch, full, io_impl)
+    cfg = _config(arch, full, io_impl, table_dtype)
     if not Engine.supports(cfg):       # before paying for param init
         raise SystemExit(
             f"{arch}: enc-dec / frontend-stub archs serve via --static")
@@ -168,6 +171,7 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
                 gossip_delay: int = 1, transport: str = "sim",
                 prefill_workers: int = 1,
                 compact_threshold: float | None = None,
+                table_dtype: str | None = None,
                 failpoints: str | None = None):
     """Data-axis-sharded serving over per-host arrival streams.
 
@@ -180,7 +184,7 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
     e.g. ``kill_host:1@3`` — survivors reclaim the dead host's slots and
     finish every request.
     """
-    cfg = _config(arch, full, io_impl)
+    cfg = _config(arch, full, io_impl, table_dtype)
     if not Engine.supports(cfg):       # before paying for param init
         raise SystemExit(
             f"{arch}: enc-dec / frontend-stub archs serve via --static")
@@ -271,6 +275,13 @@ def main():
     ap.add_argument("--io-impl", choices=("xla", "pallas"), default=None,
                     help="override cfg.io_impl (pallas = fused Bloom "
                          "kernels incl. streaming decode-topk)")
+    ap.add_argument("--table-dtype", default=None,
+                    choices=("auto", "float32", "bfloat16", "int8",
+                             "fp8_e4m3"),
+                    help="Bloom table/logp storage dtype (DESIGN.md §13); "
+                         "auto = legacy cast-to-activation-dtype; the "
+                         "serve path quantizes the embedding table once "
+                         "and decodes through narrow logp rows")
     ap.add_argument("--failpoints", default=None,
                     help="deterministic fault schedule "
                          "(serving/failpoints.py grammar), e.g. "
@@ -280,7 +291,7 @@ def main():
     if args.static:
         run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
             gen=args.gen, topk=args.topk, seed=args.seed, full=args.full,
-            io_impl=args.io_impl)
+            io_impl=args.io_impl, table_dtype=args.table_dtype)
     elif args.sharded:
         run_sharded(args.arch, slots_per_host=args.slots_per_host,
                     requests=args.requests, rate=args.rate,
@@ -291,6 +302,7 @@ def main():
                     transport=args.transport,
                     prefill_workers=args.prefill_workers,
                     compact_threshold=args.compact_threshold,
+                    table_dtype=args.table_dtype,
                     failpoints=args.failpoints)
     else:
         run_continuous(args.arch, slots=args.slots, requests=args.requests,
@@ -299,6 +311,7 @@ def main():
                        full=args.full, io_impl=args.io_impl,
                        eos_id=args.eos_id,
                        prefill_workers=args.prefill_workers,
+                       table_dtype=args.table_dtype,
                        failpoints=args.failpoints)
 
 

@@ -319,16 +319,23 @@ def make_retrieval_decode_step(rcfg):
     (io.recover_topk_spec) — never materializing (n_slots, d) scores.
     ``active`` masks retired slots to scores=-inf / ids=0 and, on the
     pallas path, drives the kernel's row-skipping occupancy grid.
+    ``rcfg.table_dtype`` rides through to recover_topk_spec: narrow
+    pool-logit storage on the pallas path (with in-kernel rehashing — no
+    (d, k) stream), fake-quantized ranking on the xla path (DESIGN.md
+    §13).
     """
     spec = rcfg.spec()
     impl = rcfg.resolved_impl
-    if impl == "pallas":
+    td = rcfg.table_dtype
+    td = None if td == "auto" else td
+    if impl == "pallas" and td is None:
+        # quantized decode rehashes in-kernel; only legacy streams H
         bloom_lib.cached_hash_matrix(spec)
 
     def step(pool, active):
         return io_lib.recover_topk_spec(spec, pool, topk=rcfg.topk,
                                         impl=impl, chunk=rcfg.chunk,
-                                        active=active)
+                                        active=active, table_dtype=td)
 
     return step
 

@@ -52,6 +52,7 @@ def run(arch: str, steps: int = 100, batch: int = 8, seq: int = 64,
         grad_compression: str = "none", seed: int = 0,
         fault_at: int = -1, learning_rate: float = 3e-3,
         io_impl: str | None = None, bwd_impl: str | None = None,
+        table_dtype: str | None = None,
         failpoints: str | None = None):
     cfg = (configs.get_config(arch, bloom=bloom) if full
            else configs.get_smoke_config(arch))
@@ -60,6 +61,8 @@ def run(arch: str, steps: int = 100, batch: int = 8, seq: int = 64,
         cfg = dataclasses.replace(cfg, io_impl=io_impl)
     if bwd_impl is not None:
         cfg = dataclasses.replace(cfg, bwd_impl=bwd_impl)
+    if table_dtype is not None:
+        cfg = dataclasses.replace(cfg, table_dtype=table_dtype)
     mesh = make_local_mesh()
     dist = DistContext(mesh) if mesh.size > 1 else None
     tc = TrainConfig(optimizer="adamw", learning_rate=learning_rate,
@@ -166,12 +169,20 @@ def main():
                     help="pallas-path Bloom backward: csr (CSR-binned "
                          "scatter-add, stream-once) or dense (m-tile "
                          "sweep fallback)")
+    ap.add_argument("--table-dtype", default=None,
+                    choices=["auto", "float32", "bfloat16", "int8",
+                             "fp8_e4m3"],
+                    help="Bloom table storage dtype (DESIGN.md §13); "
+                         "auto = legacy cast-to-activation-dtype; int8 "
+                         "uses per-row scales with straight-through "
+                         "gradients (quantization-aware training)")
     args = ap.parse_args()
     run(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
         ckpt_dir=args.ckpt, full=args.full, bloom=not args.no_bloom,
         microbatch=args.microbatch, grad_compression=args.grad_compression,
         fault_at=args.fault_at, io_impl=args.io_impl,
-        bwd_impl=args.bwd_impl, failpoints=args.failpoints)
+        bwd_impl=args.bwd_impl, table_dtype=args.table_dtype,
+        failpoints=args.failpoints)
 
 
 if __name__ == "__main__":

@@ -62,6 +62,14 @@ def main():
                          "--failpoints train_fault@S)")
     ap.add_argument("--failpoints", default=None,
                     help="failpoint spec (serving/failpoints.py grammar)")
+    ap.add_argument("--table-dtype", default=None,
+                    choices=["auto", "float32", "bfloat16", "int8",
+                             "fp8_e4m3"],
+                    help="pool-logits storage dtype for the recover "
+                         "decode (DESIGN.md §13; auto = legacy f32). "
+                         "The eval decodes through this knob; the sweep "
+                         "additionally reports int8 dual-eval retention "
+                         "regardless")
     ap.add_argument("--sweep", action="store_true",
                     help="run the m/d in {1/1, 1/2, 1/5, 1/10} "
                          "compression sweep instead of a single point")
@@ -72,6 +80,8 @@ def main():
     args = ap.parse_args()
 
     over = {"m": args.m} if args.m else {}
+    if args.table_dtype is not None:
+        over["table_dtype"] = args.table_dtype
     base = get_retrieval_config(args.config, **over)
     tc = rt.default_train_config(
         steps=args.steps, microbatch=args.microbatch,

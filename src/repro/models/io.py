@@ -23,9 +23,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import losses
+from repro.core import losses, quant
 from repro.core.bloom import BloomSpec, decode_topk
 from repro.models import layers
+
+
+def resolved_table_dtype(cfg: ModelConfig) -> Optional[str]:
+    """ModelConfig.table_dtype -> kernel-layer knob (DESIGN.md §13).
+
+    The config default "auto" maps to ``None`` (legacy behavior: cast the
+    table to the activation dtype, no quantization) so pre-quant configs
+    stay bit-identical; anything else is canonicalized by core.quant.
+    """
+    td = quant.resolve_table_dtype(cfg.table_dtype, allow_auto=True)
+    return None if td == "auto" else td
+
+
+def _fake_quant_rows(x: jnp.ndarray, table_dtype: str) -> jnp.ndarray:
+    """Quantize+dequantize (..., m) rows — the XLA oracle's storage model.
+
+    The xla io_impl has no narrow HBM tables, but it must RANK through the
+    same dequantized values the Pallas kernels see, or accuracy sweeps
+    (bench_retrieval.py int8 retention) would silently compare a quantized
+    kernel against an unquantized oracle.  Row axis = last axis, matching
+    the per-row scales of core.quant.
+    """
+    flat = x.reshape(-1, x.shape[-1])
+    q, s = quant.quantize_table(flat, table_dtype)
+    return quant.dequantize_table(q, s).reshape(x.shape)
 
 
 def vocab_spec(cfg: ModelConfig) -> Optional[BloomSpec]:
@@ -56,10 +81,18 @@ def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray,
     spec = vocab_spec(cfg)
     if spec is None:
         return jnp.take(table, tokens, axis=0).astype(dt)
+    td = resolved_table_dtype(cfg)
     if cfg.io_impl == "pallas":
         from repro.kernels import ops
-        return ops.bloom_embed(table.astype(dt), tokens, spec,
-                               bwd_impl=cfg.bwd_impl)
+        if td is None:
+            return ops.bloom_embed(table.astype(dt), tokens, spec,
+                                   bwd_impl=cfg.bwd_impl)
+        # master-precision table in; the kernel stores/DMAs it narrow and
+        # dequantizes on the VMEM tile (grads straight-through to master)
+        return ops.bloom_embed(table, tokens, spec, bwd_impl=cfg.bwd_impl,
+                               table_dtype=td, out_dtype=dt)
+    if td is not None:
+        table = _fake_quant_rows(table, td)
     idx = spec.indices_for(tokens)                     # (B, S, k)
     rows = jnp.take(table, idx, axis=0).astype(dt)     # (B, S, k, D)
     return rows.sum(axis=2)
@@ -108,14 +141,16 @@ def recover_topk(cfg: ModelConfig, logits: jnp.ndarray, topk: int = 16,
     spec = vocab_spec(cfg)
     return recover_topk_spec(spec, logits, topk, impl=cfg.io_impl,
                              chunk=chunk, active=active,
-                             unroll=cfg.unroll_for_analysis)
+                             unroll=cfg.unroll_for_analysis,
+                             table_dtype=resolved_table_dtype(cfg))
 
 
 def recover_topk_spec(spec: Optional[BloomSpec], logits: jnp.ndarray,
                       topk: int = 16, *, impl: str = "xla",
                       chunk: int = 8192,
                       active: Optional[jnp.ndarray] = None,
-                      unroll: bool = False):
+                      unroll: bool = False,
+                      table_dtype: Optional[str] = None):
     """``recover_topk`` keyed by a BloomSpec instead of a ModelConfig —
     the shared recovery core for the LM head AND the retrieval scenario
     (serving/retrieval.py), which has no ModelConfig to hand.
@@ -126,16 +161,28 @@ def recover_topk_spec(spec: Optional[BloomSpec], logits: jnp.ndarray,
     oracle seeds each chunk merge with the running best (earlier = lower
     ids first in the concat), and the Pallas kernel folds tiles in
     ascending vocab order with strictly-greater replacement.
+
+    ``table_dtype`` (DESIGN.md §13, None = legacy f32) narrows the
+    resident logp rows: the Pallas kernel stores them narrow in HBM and
+    dequantizes on the VMEM tile; the streaming oracle fake-quantizes the
+    SAME per-row storage model before ranking, so a MAP measured on the
+    xla path is an honest proxy for the quantized kernel.  (int8 ids may
+    still differ by quantization-induced score ties — the scores agree
+    to float rounding; see tests/test_kernels.py.)
     """
     if spec is None:
         scores, ids = jax.lax.top_k(logits, topk)
     else:
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        td = quant.resolve_table_dtype(table_dtype)
         if impl == "pallas":
             from repro.kernels import ops
             scores, ids = ops.bloom_decode_topk(logp, spec, topk,
-                                                active=active)
+                                                active=active,
+                                                table_dtype=td)
         else:
+            if td is not None:
+                logp = _fake_quant_rows(logp, td)
             scores, ids = decode_topk(spec, logp, topk, chunk=chunk,
                                       unroll=unroll)
     if active is not None:

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.configs.retrieval import RetrievalConfig, get_retrieval_config
 from repro.core import bloom as bloom_lib
+from repro.core import quant
 from repro.kernels.bloom_decode_topk import modeled_hbm_bytes
 from repro.launch import steps as steps_lib
 from repro.models import recommender as rec_lib
@@ -141,9 +142,18 @@ class RetrievalProgram(SlotProgram):
     def step(self, params, state: _RetrievalState):
         active = jnp.asarray(state.live)
         scores, ids = self._decode(state.pool, active)
+        # bytes model follows the table_dtype knob (DESIGN.md §13): a
+        # quantized decode stores the logp rows narrow, rehashes
+        # in-kernel (no (d, k) stream) and — int8 only — reads one f32
+        # scale per live row; "auto" keeps the legacy exact model
+        td = self.rcfg.table_dtype
+        td = None if td == "auto" else td
         state.streaming_bytes += modeled_hbm_bytes(
             state.live, self.rcfg.b_tile, m=self.rcfg.m, d=self.rcfg.d,
-            k=self.rcfg.k, topk=self.rcfg.topk)
+            k=self.rcfg.k, topk=self.rcfg.topk,
+            logp_itemsize=quant.table_itemsize(td),
+            inkernel_hash=td is not None,
+            row_scales=td == "int8")
         return np.asarray(ids), np.asarray(scores)
 
     def emit(self, state: _RetrievalState, req: Request, slot: int, out,
@@ -221,7 +231,9 @@ class RetrievalEngine:
 
 
 def evaluate_retrieval(rcfg: RetrievalConfig, params,
-                       requests: List[Request]) -> Dict[str, float]:
+                       requests: List[Request],
+                       table_dtype: Optional[str] = None
+                       ) -> Dict[str, float]:
     """Offline ranking eval of served requests against their held-out
     targets, with the user's input items excluded from the ranking.
 
@@ -231,6 +243,11 @@ def evaluate_retrieval(rcfg: RetrievalConfig, params,
     Metrics are the tie-aware train/metrics.py: mid-rank RR and
     stable-sort MAP, so an untrained tower scores << 1 instead of the
     optimistic-tie 1.0 the old rank computation produced.
+
+    ``table_dtype`` (DESIGN.md §13) fake-quantizes the (B, m) pool
+    logits per row before Eq. 3 — the exact values a quantized Pallas
+    decode ranks through — so the metrics measure what a quantized
+    store would actually serve (the sweep's int8 dual-eval retention).
     """
     assert rcfg.d <= EVAL_MAX_CATALOG, (
         f"full-score eval at d={rcfg.d} would materialize a "
@@ -250,6 +267,10 @@ def evaluate_retrieval(rcfg: RetrievalConfig, params,
     logits = jax.jit(steps_lib.make_retrieval_prefill_step(rcfg))(
         params, jnp.asarray(prompts))
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    td = quant.resolve_table_dtype(table_dtype)
+    if td is not None:
+        q, s = quant.quantize_table(logp, td)
+        logp = quant.dequantize_table(q, s)
     scores = np.asarray(bloom_lib.decode_scores(rcfg.spec(), logp,
                                                 chunk=rcfg.chunk))
     # RR / accuracy score the FIRST held-out target (the single-correct-

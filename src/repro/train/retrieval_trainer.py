@@ -154,7 +154,14 @@ def serve_and_eval(rcfg: RetrievalConfig, params, *,
     wl = [r.fresh_copy() for r in retrieval_workload(load)]
     engine = RetrievalEngine(rcfg, params, n_slots=n_slots)
     results, stats = engine.run(wl)
-    ev = evaluate_retrieval(rcfg, params, list(results.values()))
+    served = list(results.values())
+    ev = evaluate_retrieval(rcfg, params, served)
+    # int8 dual-eval (DESIGN.md §13): re-rank the SAME served requests
+    # through per-row fake-quantized pool logits — the values a
+    # quantized Pallas decode would rank through — so the sweep can
+    # gate quantized MAP retention without retraining the tower
+    ev["map_int8"] = evaluate_retrieval(rcfg, params, served,
+                                        table_dtype="int8")["map"]
     ev["decode_steps"] = stats.decode_steps
     return ev
 
@@ -188,6 +195,12 @@ def train_and_eval_point(rcfg: RetrievalConfig, tc: TrainConfig, *,
         "map": trained["map"], "rr": trained["rr"],
         "accuracy": trained["accuracy"],
         "untrained_map": untrained["map"], "untrained_rr": untrained["rr"],
+        # quantized-store retention: MAP of the trained tower ranked
+        # through int8 fake-quantized logits, relative to the fp32 MAP
+        # (gated fresh-value in benchmarks/bench_retrieval.py)
+        "map_int8": trained["map_int8"],
+        "int8_retention": round(
+            trained["map_int8"] / max(trained["map"], 1e-12), 6),
     }
 
 

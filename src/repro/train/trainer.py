@@ -27,7 +27,8 @@ class TrainState:
     step: int
 
 
-def warm_bloom_caches(cfg, decode_grad: bool = False) -> None:
+def warm_bloom_caches(cfg, decode_grad: bool = False,
+                      params: Optional[Any] = None) -> None:
     """Pre-build the per-spec Bloom device caches the hot path reads
     (ModelConfig-aware entry; no-op off the pallas path).
 
@@ -41,13 +42,22 @@ def warm_bloom_caches(cfg, decode_grad: bool = False) -> None:
     the first csr decode backward.  Warming before the first jitted step
     keeps the one-time work out of the first step's wall time and out of
     any traced scope.
+
+    With a quantized ``cfg.table_dtype`` (DESIGN.md §13) AND concrete
+    ``params`` in hand (serve-time; training steps quantize in-graph),
+    the quantized embedding table is also pre-built through
+    core.bloom.cached_quantized_table, so the first forward never pays
+    the eager quantize.
     """
     from repro.core import bloom as bloom_lib
     from repro.models import io as io_lib
     spec = io_lib.vocab_spec(cfg)
+    td = io_lib.resolved_table_dtype(cfg)  # validates the knob eagerly
     if spec is None or cfg.io_impl != "pallas":
         return
     bloom_lib.cached_hash_matrix(spec)
+    if td is not None and params is not None:
+        bloom_lib.cached_quantized_table(spec, params["embed"], td)
     if decode_grad and cfg.bwd_impl == "csr":
         from repro.kernels.bloom_csr import CSR_E_TILE
         from repro.kernels.common import BWD_M_TILE

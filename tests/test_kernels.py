@@ -545,3 +545,237 @@ def test_pallas_io_impl_in_model():
     lx, _ = tf.lm_loss_fn(params, cfg_x, {"tokens": toks})
     lp, _ = tf.lm_loss_fn(params, cfg_p, {"tokens": toks})
     assert float(lx) == pytest.approx(float(lp), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantized tables (table_dtype, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+from repro.core import quant  # noqa: E402  (quant tests below)
+
+
+@pytest.mark.parametrize("table_dtype", list(quant.TABLE_DTYPES))
+@pytest.mark.parametrize("T,k,m,D", [(7, 3, 64, 48), (32, 4, 128, 256)])
+def test_bloom_embed_quantized_sweep(table_dtype, T, k, m, D):
+    """Quantized forward == gather-sum over the DEQUANTIZED table (the
+    XLA storage-model oracle): the kernel's in-VMEM dequant must match
+    quantize+dequantize outside the kernel bit-for-bit in math."""
+    table = jax.random.normal(KEY, (m, D), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 1), (T, k), 0, m)
+    got = bloom_embed_pallas(table, idx, d_tile=64, interpret=True,
+                             table_dtype=table_dtype,
+                             out_dtype=jnp.float32)
+    q, s = quant.quantize_table(table, table_dtype)
+    want = ref.bloom_embed_ref(quant.dequantize_table(q, s), idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bloom_embed_int8_close_to_fp32_oracle():
+    """int8 storage stays within the ANALYTIC quantization bound of the
+    float32 oracle: per-element error <= sum_j scales[idx[t, j]] / 2
+    (per-row symmetric rounding contributes at most scale/2 per fetched
+    row) — the module-doc bound of core.quant, end to end through the
+    kernel."""
+    T, k, m, D = 32, 4, 128, 256
+    table = jax.random.normal(KEY, (m, D), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 1), (T, k), 0, m)
+    got = bloom_embed_pallas(table, idx, d_tile=64, interpret=True,
+                             table_dtype="int8", out_dtype=jnp.float32)
+    want = ref.bloom_embed_ref(table, idx)
+    _, scales = quant.quantize_table(table, "int8")
+    bound = jnp.take(scales, idx, axis=0).sum(-1, keepdims=True) / 2
+    err = jnp.abs(got - want)
+    assert float(jnp.max(err - bound)) <= 1e-5, (
+        f"int8 embed error {float(err.max()):.4g} exceeds the analytic "
+        f"scale/2-per-row bound ({float(bound.max()):.4g})")
+    # and the bound itself is small on a unit-normal table (scales ~
+    # amax/127 ~ 0.03): the storage knob costs < 1e-1 absolute here
+    assert float(err.max()) < 0.1
+
+
+@pytest.mark.parametrize("bwd_impl", ["dense", "csr"])
+@pytest.mark.parametrize("table_dtype", ["int8", "fp8_e4m3"])
+def test_bloom_embed_quantized_grad_straight_through(bwd_impl, table_dtype):
+    """Gradients flow straight-through to the MASTER table: grad with a
+    quantized forward == grad of the unquantized kernel (the fp32
+    scatter-add backward is shared; only the forward's fetched rows
+    change)."""
+    T, k, m, D = 13, 3, 64, 32
+    table = jax.random.normal(KEY, (m, D), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 1), (T, k), 0, m)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 2), (T, D))
+
+    def f(tbl, td):
+        out = bloom_embed_pallas(tbl, idx, d_tile=32, interpret=True,
+                                 bwd_impl=bwd_impl, table_dtype=td,
+                                 out_dtype=jnp.float32)
+        return jnp.vdot(out, cot)
+
+    g_q = jax.grad(f)(table, table_dtype)
+    g_f = jax.grad(f)(table, None)
+    assert g_q.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(g_q), np.asarray(g_f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bloom_embed_fwd_quantized_matches_inline():
+    """The frozen-params serve path (cached_quantized_table +
+    bloom_embed_fwd_quantized) == the in-graph quantizing entry point."""
+    from repro.core.bloom import cached_quantized_table
+    from repro.kernels.bloom_embed import bloom_embed_fwd_quantized
+    T, k, m, D = 9, 2, 64, 48
+    spec = BloomSpec(d=300, m=m, k=k, seed=5)
+    table = jax.random.normal(KEY, (m, D), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 1), (T, k), 0, m)
+    q, s = cached_quantized_table(spec, table, "int8")
+    # identity-keyed cache: same table object must hit
+    assert cached_quantized_table(spec, table, "int8")[0] is q
+    got = bloom_embed_fwd_quantized(q, s, idx, d_tile=32, interpret=True)
+    want = bloom_embed_pallas(table, idx, d_tile=32, interpret=True,
+                              table_dtype="int8", out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("table_dtype", ["bfloat16", "int8", "fp8_e4m3"])
+def test_bloom_decode_topk_quantized(table_dtype):
+    """Fused decode-topk over quantized resident logp == decode-then-topk
+    over the fake-quantized (dequantized) logp.  Quantization may permute
+    ids on induced ties, so ids are scored through the oracle's matrix
+    (the `picked` contract of the unquantized sweep)."""
+    B, m, d, k, topk = 5, 64, 333, 3, 8
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 2), (d, k), 0, m)
+    vals, ids = bloom_decode_topk_pallas(logp, H, topk, b_tile=4,
+                                         v_tile=64, interpret=True,
+                                         table_dtype=table_dtype)
+    q, s = quant.quantize_table(logp, table_dtype)
+    scores = ref.bloom_decode_ref(quant.dequantize_table(q, s), H)
+    want_v, _ = jax.lax.top_k(scores, topk)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(want_v),
+                               rtol=1e-5, atol=1e-5)
+    picked = jnp.take_along_axis(scores, ids, axis=-1)
+    np.testing.assert_allclose(np.asarray(picked), np.asarray(want_v),
+                               rtol=1e-5, atol=1e-5)
+    assert int(ids.min()) >= 0 and int(ids.max()) < d
+
+
+def test_bloom_decode_topk_int8_close_to_fp32_oracle():
+    """int8 resident logp stays within the analytic k * scale/2 bound of
+    the fp32 decode-topk values (each Eq. 3 score sums k row reads, each
+    off by at most scale/2 after per-row symmetric rounding)."""
+    B, m, d, k, topk = 8, 128, 1024, 4, 16
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 2), (d, k), 0, m)
+    vals, _ = bloom_decode_topk_pallas(logp, H, topk, b_tile=4, v_tile=128,
+                                       interpret=True, table_dtype="int8")
+    want_v, _ = jax.lax.top_k(ref.bloom_decode_ref(logp, H), topk)
+    _, scales = quant.quantize_table(logp, "int8")
+    bound = k * scales[:, None] / 2
+    err = jnp.abs(vals - want_v)
+    assert float(jnp.max(err - bound)) <= 1e-5, (
+        f"int8 decode-topk error {float(err.max()):.4g} exceeds the "
+        f"analytic k*scale/2 bound ({float(bound.max()):.4g})")
+    assert float(err.max()) < 0.25
+
+
+def test_bloom_decode_topk_inkernel_hash_matches_H():
+    """hash_spec=(d, k, seed) drops the H operand and re-derives indices
+    in-kernel, bit-identical to core.hashing.double_hash — so both paths
+    gather the same rows.  The summed SCORES may differ by float fusion
+    (XLA fuses the two paths differently, ~1 ulp; ids then permute only
+    on near-exact ties), so values are compared to tight float tolerance
+    and ids through the score matrix (the `picked` contract)."""
+    from repro.core.bloom import cached_hash_matrix
+    B, m, d, k, topk = 5, 64, 333, 3, 8
+    spec = BloomSpec(d=d, m=m, k=k, seed=7)
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = cached_hash_matrix(spec)
+    for td in (None, "int8"):
+        v_h, _ = bloom_decode_topk_pallas(logp, H, topk, b_tile=4,
+                                          v_tile=64, interpret=True,
+                                          table_dtype=td)
+        v_k, i_k = bloom_decode_topk_pallas(logp, None, topk, b_tile=4,
+                                            v_tile=64, interpret=True,
+                                            table_dtype=td,
+                                            hash_spec=(d, k, spec.seed))
+        np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_h),
+                                   rtol=1e-6, atol=1e-6)
+        if td is None:
+            scores = ref.bloom_decode_ref(logp, H)
+        else:
+            q, s = quant.quantize_table(logp, "int8")
+            scores = ref.bloom_decode_ref(quant.dequantize_table(q, s), H)
+        picked = jnp.take_along_axis(scores, i_k, axis=-1)
+        np.testing.assert_allclose(np.asarray(picked), np.asarray(v_k),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_bloom_decode_topk_quantized_row_skipping():
+    """table_dtype composes with the occupancy grid: live rows match the
+    dense quantized grid, fully-dead blocks return (-inf, 0)."""
+    B, m, d, k, topk, b_tile = 8, 64, 333, 3, 5, 2
+    logp = jax.nn.log_softmax(jax.random.normal(KEY, (B, m)))
+    H = jax.random.randint(jax.random.fold_in(KEY, 2), (d, k), 0, m)
+    active = jnp.asarray([True, False, False, False, True, True,
+                          False, False])
+    v_d, i_d = bloom_decode_topk_pallas(logp, H, topk, b_tile=b_tile,
+                                        v_tile=64, interpret=True,
+                                        table_dtype="int8")
+    v_s, i_s = bloom_decode_topk_pallas(logp, H, topk, b_tile=b_tile,
+                                        v_tile=64, interpret=True,
+                                        table_dtype="int8", active=active)
+    blk_live = np.asarray(active).reshape(-1, b_tile).any(axis=1)
+    row_live = np.repeat(blk_live, b_tile)
+    np.testing.assert_array_equal(np.asarray(v_s)[row_live],
+                                  np.asarray(v_d)[row_live])
+    np.testing.assert_array_equal(np.asarray(i_s)[row_live],
+                                  np.asarray(i_d)[row_live])
+    assert np.all(np.asarray(v_s)[~row_live] == -np.inf)
+    assert np.all(np.asarray(i_s)[~row_live] == 0)
+
+
+def test_table_dtype_validation():
+    """Typos fail fast with the full menu, at every layer that accepts
+    the knob (quant core, kernel entry, config __post_init__)."""
+    import dataclasses
+    from repro import configs
+    from repro.configs.retrieval import get_retrieval_config
+    with pytest.raises(ValueError, match="table_dtype must be one of"):
+        quant.resolve_table_dtype("int4")
+    # aliases canonicalize; "auto" only with allow_auto
+    assert quant.resolve_table_dtype("fp32") == "float32"
+    assert quant.resolve_table_dtype("auto", allow_auto=True) == "auto"
+    with pytest.raises(ValueError, match="table_dtype"):
+        quant.resolve_table_dtype("auto")
+    table = jax.random.normal(KEY, (32, 16))
+    idx = jax.random.randint(KEY, (4, 2), 0, 32)
+    with pytest.raises(ValueError, match="table_dtype"):
+        bloom_embed_pallas(table, idx, interpret=True, table_dtype="int4")
+    with pytest.raises(ValueError, match="table_dtype"):
+        get_retrieval_config("smoke", table_dtype="f16")
+    cfg = configs.get_smoke_config("qwen3-4b")
+    cfg_bad = dataclasses.replace(cfg, table_dtype="f16")
+    from repro.models import io as io_lib
+    with pytest.raises(ValueError, match="table_dtype"):
+        io_lib.resolved_table_dtype(cfg_bad)
+
+
+@pytest.mark.parametrize("table_dtype", ["bfloat16", "int8"])
+def test_model_quantized_pallas_matches_xla_fake_quant(table_dtype):
+    """Model layer: io_impl='pallas' with a table_dtype == io_impl='xla'
+    fake-quantizing the same rows — the two storage models must rank and
+    activate through identical dequantized values."""
+    import dataclasses
+    from repro import configs
+    from repro.models import io as io_lib, transformer as tf
+    cfg_x = configs.get_smoke_config("qwen3-4b", dtype="float32")
+    cfg_x = dataclasses.replace(cfg_x, table_dtype=table_dtype)
+    cfg_p = dataclasses.replace(cfg_x, io_impl="pallas")
+    params = tf.lm_init(KEY, cfg_x)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg_x.vocab)
+    ex = io_lib.embed_tokens(params["io"], cfg_x, toks)
+    ep = io_lib.embed_tokens(params["io"], cfg_p, toks)
+    np.testing.assert_allclose(np.asarray(ex), np.asarray(ep),
+                               rtol=1e-5, atol=1e-5)

@@ -611,3 +611,63 @@ def test_csr_backward_matches_oracle_under_random_shapes(
         ref.bloom_embed_ref(t, idx) * cot))(table)
     np.testing.assert_allclose(np.asarray(g_csr), np.asarray(g_ref),
                                atol=1e-4, rtol=1e-4)
+
+
+@given(
+    m=st.integers(1, 48),
+    D=st.integers(1, 64),
+    seed=st.integers(0, 10_000),
+    scale=st.sampled_from([1e-14, 1e-6, 1.0, 1e3]),
+)
+@settings(max_examples=40, deadline=None)
+def test_int8_quantizer_round_trip_bound(m, D, seed, scale):
+    """core.quant int8 invariants (DESIGN.md §13), across magnitudes from
+    the 1e-12-floor regime to large tables:
+
+      * scales are strictly positive (all-zero rows stay finite);
+      * the round trip is bounded ELEMENTWISE by scale/2 per row — the
+        bound the kernel-level oracle tests build on;
+      * each row's max-magnitude element survives the round trip to
+        within the same bound (symmetric quantization never saturates
+        the row max: amax/scale <= 127 by construction).
+    """
+    from repro.core import quant
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(scale * rng.normal(size=(m, D)), jnp.float32)
+    if seed % 3 == 0 and m > 1:
+        x = x.at[0].set(0.0)          # exercise the all-zero-row floor
+    q, s = quant.quantize_table(x, "int8")
+    assert q.dtype == jnp.int8 and s.shape == (m,)
+    s_np = np.asarray(s, np.float64)
+    assert np.all(s_np > 0)
+    dq = np.asarray(quant.dequantize_table(q, s), np.float64)
+    err = np.abs(np.asarray(x, np.float64) - dq)
+    # float32 round-off on scale * round(x/scale) adds a few ulp on top
+    # of the exact-arithmetic scale/2 bound
+    bound = s_np[:, None] / 2 + 1e-6 * s_np[:, None] + 1e-30
+    assert np.all(err <= bound), (
+        f"round-trip error {err.max():.3g} exceeds scale/2 "
+        f"({(s_np / 2).max():.3g})")
+    # per-row max preserved within the bound
+    amax = np.abs(np.asarray(x, np.float64)).max(axis=-1)
+    dq_amax = np.abs(dq).max(axis=-1)
+    assert np.all(np.abs(amax - dq_amax) <= bound[:, 0])
+
+
+@given(td=st.sampled_from(["float32", "bfloat16", "fp8_e4m3"]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_scale_free_dtypes_round_trip_is_cast(td, seed):
+    """The non-int8 dtypes return scales=None and round-trip exactly as
+    their plain jnp cast — no hidden rescaling."""
+    from repro.core import quant
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(5, 16)), jnp.float32)
+    q, s = quant.quantize_table(x, td)
+    assert s is None
+    assert q.dtype == quant.storage_dtype(td)
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize_table(q, s)),
+        np.asarray(q.astype(jnp.float32)))
