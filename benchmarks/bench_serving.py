@@ -4,7 +4,11 @@ model-free replays of the gossiped multi-host schedule
 (``sched.sharded_*`` rows — scheduler.simulate_sharded_schedule over
 per-host loadgen streams, DESIGN.md §8).  The ``sched.sharded_kill1``
 row replays the h4x2_d1 workload under a committed mid-traffic host
-kill (DESIGN.md §10) and pins the recovery overhead in decode steps.
+kill (DESIGN.md §10) and pins the recovery overhead in decode steps;
+the ``sched.sharded_surge`` row replays the same topology under the
+DESIGN.md §14 overload drill (surge + slow_decode + admission policy)
+and pins shed count, SLO attainment, degrade transitions and the
+overhead vs an in-bench unloaded twin.
 
 Every row is a *deterministic simulation*: decode-step counts, slot
 utilization and mean latency are pure functions of (workload seed,
@@ -41,11 +45,13 @@ import numpy as np
 from repro import configs
 from repro.kernels.bloom_decode_topk import modeled_hbm_bytes
 from repro.launch import steps as steps_lib
-from repro.serving import (Engine, FailPlan, LoadSpec, RetrievalEngine,
-                           RetrievalLoadSpec, assert_fresh_instances,
-                           init_retrieval_params, mean_latency,
-                           mixed_length_workload, retrieval_workload,
-                           sharded_workload, simulate_sharded_schedule)
+from repro.serving import (AdmissionPolicy, Engine, FailPlan, LoadSpec,
+                           RetrievalEngine, RetrievalLoadSpec,
+                           assert_fresh_instances, init_retrieval_params,
+                           mean_latency, mixed_length_workload,
+                           overload_workload, retrieval_workload,
+                           sharded_workload, simulate_sharded_schedule,
+                           slo_attainment)
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_serving.json"
@@ -92,6 +98,27 @@ SHARDED_CASES = [
 SHARDED_KILL_CASES = [
     (4, 2, 4, 1, 0, None, "kill_host:1@3"),
 ]
+
+# The surge row (overload satellite, DESIGN.md §14): the h4x2_d1
+# topology under open-loop overload — ``overload_workload`` bakes a 2x
+# arrival ramp with per-request SLO deadlines, then the failpoint surge
+# re-compresses the tail and ``slow_decode`` triples the decode cost —
+# with the admission policy shedding and walking the degrade ladder.
+# The unloaded twin (the SAME compressed workload, no failpoints, no
+# policy) is ephemeral: its workload differs from every committed row,
+# so it is recomputed in-bench and only its decode steps are pinned
+# inside the surge row, making the overload overhead a pure schedule
+# diff.  The policy thresholds are sized to the bounded queue exactly
+# like the CI chaos drill (sim_multihost.OVERLOAD_POLICY): pending
+# tops out near max_queue_depth * n_hosts / n_slots, so the ladder
+# must trip well below 1.0.
+SHARDED_SURGE_CASES = [
+    # (n_hosts, slots_per_host, n_requests PER HOST, gossip_delay, seed,
+    #  failpoints, surge_start, surge_factor, deadline_slack)
+    (4, 2, 4, 1, 0, "surge:3@1,slow_decode:3@2", 1, 2, 8),
+]
+SURGE_POLICY = dict(max_queue_depth=2, pressure_window=2,
+                    degrade_lo=0.25, degrade_hi=0.5, restore_below=0.1)
 
 # (retrieval config, n_slots, n_requests, seed): the web-scale one-shot
 # retrieval scenario (DESIGN.md §11) — Zipf item lookups through the
@@ -211,6 +238,83 @@ def _run_sharded_case(n_hosts: int, slots_per_host: int, n_requests: int,
     return row
 
 
+def _run_surge_case(n_hosts: int, slots_per_host: int, n_requests: int,
+                    gossip_delay: int, seed: int, failpoints: str,
+                    surge_start: int, surge_factor: int,
+                    deadline_slack: int):
+    spec = _sharded_spec(n_requests, seed)
+
+    def wl():
+        # fresh Request instances per replay (same no-sharing rule as
+        # the A/B engine cases — loadgen rebuilds from the seed)
+        return overload_workload(spec, n_hosts, surge_start=surge_start,
+                                 surge_factor=surge_factor,
+                                 deadline_slack=deadline_slack)
+
+    per_host = wl()
+    sched, st = simulate_sharded_schedule(
+        per_host, slots_per_host, gossip_delay,
+        failpoints=FailPlan.parse(failpoints),
+        admission_policy=AdmissionPolicy(**SURGE_POLICY))
+    results = {r.rid: r for reqs in per_host for r in reqs}
+    shed = sorted(r.rid for r in results.values() if r.shed)
+    served = [r for r in results.values()
+              if r.done and not r.shed and not r.rejected]
+    assert all(r.done for r in results.values()), (
+        "sched.sharded_surge: a request is neither served nor shed — "
+        "the overload run left non-terminal state")
+    assert st.sheds == len(shed) and st.sheds > 0, (
+        f"sched.sharded_surge: expected sheds under overload, got "
+        f"{st.sheds} — the row would silently pin an unloaded schedule; "
+        "tighten the policy or the surge")
+    assert st.degrades > 0, (
+        "sched.sharded_surge: the degrade ladder never moved — pressure "
+        "never crossed degrade_lo; tighten the thresholds")
+    assert st.rejects == 0, (
+        f"sched.sharded_surge: overload must shed, never reject "
+        f"(got {st.rejects} rejects)")
+
+    # the unloaded twin: same compressed arrivals, no failpoints, no
+    # policy — every request completes, and the decode-step delta is
+    # what the slowdown cost net of the shed requests' freed capacity
+    twin_wl = wl()
+    _, twin_st = simulate_sharded_schedule(twin_wl, slots_per_host,
+                                           gossip_delay)
+    assert all(r.done and not r.shed and not r.rejected
+               for reqs in twin_wl for r in reqs), (
+        "sched.sharded_surge: the unloaded twin shed or dropped work — "
+        "the overhead baseline is contaminated")
+
+    return {
+        "bench": "serving", "name": "sched.sharded_surge",
+        "n_hosts": n_hosts, "slots_per_host": slots_per_host,
+        "n_requests": n_requests * n_hosts, "seed": seed,
+        "gossip_delay": gossip_delay,
+        "failpoints": failpoints,
+        "surge_start": surge_start, "surge_factor": surge_factor,
+        "deadline_slack": deadline_slack,
+        "decode_steps": st.decode_steps,
+        "slot_steps_total": st.slot_steps_total,
+        "slot_steps_active": st.slot_steps_active,
+        "utilization": round(st.utilization, 4),
+        "tokens_out": st.tokens_out,
+        # arrival-relative; can dip under surge (the serving clock is
+        # compressed past the original arrival steps) — deterministic
+        # either way, so it stays checked
+        "mean_latency_steps": round(mean_latency(results), 4),
+        "sheds": st.sheds,
+        "rejects": st.rejects,
+        "degrade_transitions": st.degrades,
+        "slo_attainment": round(slo_attainment(len(served),
+                                               len(results)), 4),
+        "unloaded_twin_decode_steps": twin_st.decode_steps,
+        # negative is expected here (unlike the kill row's
+        # recovery_overhead_steps): shedding 6 of 16 requests frees more
+        # decode work than the slow_decode slowdown adds back
+        "overhead_steps_vs_twin": st.decode_steps - twin_st.decode_steps,
+    }
+
+
 def _measure_us(fn, repeats: int = 3) -> float:
     """Best-of-N wall-clock of ``fn()`` in microseconds (one untimed
     warmup call first — jit compile + Bloom cache build)."""
@@ -293,6 +397,8 @@ def run(measure: bool = False):
         rows.append(_run_sharded_case(*case))
     for case in SHARDED_KILL_CASES:
         rows.append(_run_sharded_case(*case))
+    for case in SHARDED_SURGE_CASES:
+        rows.append(_run_surge_case(*case))
     # compaction schedule-invariance: every _c row must replay the exact
     # step counts of its no-compaction twin (slot ids move, steps don't)
     by_name = {r["name"]: r for r in rows}
@@ -333,7 +439,9 @@ CHECKED_FIELDS = ("decode_steps", "slot_steps_total", "slot_steps_active",
                   "utilization", "tokens_out", "mean_latency_steps",
                   "decode_step_speedup", "utilization_gain", "compactions",
                   "host_downs", "requeued", "rejects",
-                  "recovery_overhead_steps",
+                  "recovery_overhead_steps", "sheds",
+                  "degrade_transitions", "slo_attainment",
+                  "unloaded_twin_decode_steps", "overhead_steps_vs_twin",
                   "streaming_bytes", "dense_oracle_bytes", "bytes_ratio")
 
 

@@ -14,11 +14,20 @@ request drains.  That path (run()) also remains the only one serving
 enc-dec / frontend-stub archs (whisper, pixtral), whose prefill carries
 non-token inputs the engine does not schedule.
 
+``--mode retrieval`` serves one-shot Bloom top-k retrieval requests
+(Zipf item lookups over a configs/retrieval.py catalog preset) through
+RetrievalEngine — the identical slot loop, so ``--failpoints`` and the
+overload flags (``--deadline-slack`` / ``--max-queue-depth``,
+DESIGN.md §14) apply there too.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
       --slots 4 --requests 16 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --static \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --mode retrieval \
+      --retrieval-config smoke --slots 4 --requests 16 \
+      --failpoints 'surge:3@1' --deadline-slack 8
 """
 from __future__ import annotations
 
@@ -36,8 +45,13 @@ from repro.launch.sharding import DistContext
 from repro.models import encdec as encdec_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
-from repro.serving import (Engine, FailPlan, LoadSpec, ShardedEngine,
-                           make_workload, mean_latency, sharded_workload)
+from repro.serving import retrieval as retrieval_lib
+from repro.serving import (AdmissionPolicy, Engine, FailPlan, LoadSpec,
+                           RetrievalEngine, RetrievalLoadSpec,
+                           ShardedEngine, evaluate_retrieval,
+                           init_retrieval_params, make_workload,
+                           mean_latency, retrieval_workload,
+                           sharded_workload)
 
 
 def pad_caches_to(caches_small, caches_template):
@@ -66,6 +80,22 @@ def _setup(cfg, seed: int):
     # one-time cast to the serving dtype (bf16 serving checkpoint)
     params = steps_lib.cast_params_for_compute(params, cfg)
     return params, dist
+
+
+def _overload_policy(deadline_slack, max_queue_depth):
+    """CLI knobs -> optional AdmissionPolicy (DESIGN.md §14): either
+    flag alone activates the policy (deadline shedding needs workload
+    deadlines; the ladder runs with its default thresholds)."""
+    if deadline_slack is None and max_queue_depth is None:
+        return None
+    return AdmissionPolicy(max_queue_depth=max_queue_depth)
+
+
+def _tag_deadlines(requests, deadline_slack):
+    if deadline_slack is not None:
+        for r in requests:
+            r.deadline_step = r.arrival_step + deadline_slack
+    return requests
 
 
 def run(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
@@ -127,7 +157,9 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
                    io_impl: str | None = None, eos_id: int | None = None,
                    prefill_workers: int = 1,
                    table_dtype: str | None = None,
-                   failpoints: str | None = None):
+                   failpoints: str | None = None,
+                   deadline_slack: int | None = None,
+                   max_queue_depth: int | None = None):
     """Continuous batching over a seeded Poisson workload."""
     cfg = _config(arch, full, io_impl, table_dtype)
     if not Engine.supports(cfg):       # before paying for param init
@@ -138,17 +170,22 @@ def run_continuous(arch: str, slots: int = 4, requests: int = 16,
         n_requests=requests, vocab=cfg.vocab, rate=rate,
         prompt_lens=(max(prompt_len // 2, 2), prompt_len),
         gen_lens=(max(gen // 4, 1), gen // 2 or 1, gen), seed=seed)
-    workload = make_workload(spec)
+    workload = _tag_deadlines(make_workload(spec), deadline_slack)
     max_len = max(r.prompt_len + r.max_gen for r in workload)
 
     engine = Engine(cfg, params, n_slots=slots, max_len=max_len,
                     topk=topk, eos_id=eos_id, dist=dist,
                     prefill_workers=prefill_workers,
-                    failpoints=FailPlan.parse(failpoints))
+                    failpoints=FailPlan.parse(failpoints),
+                    admission_policy=_overload_policy(deadline_slack,
+                                                      max_queue_depth))
     results, stats = engine.run(workload)
     if stats.rejects:
         print(f"rejected {stats.rejects} requests "
               f"(prefill attempts exhausted)")
+    if stats.sheds or stats.degrades:
+        print(f"overload policy: {stats.sheds} shed, "
+              f"{stats.degrades} degrade transitions")
 
     row = stats.as_row()
     print(f"served {len(results)} requests on {slots} slots: "
@@ -172,7 +209,9 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
                 prefill_workers: int = 1,
                 compact_threshold: float | None = None,
                 table_dtype: str | None = None,
-                failpoints: str | None = None):
+                failpoints: str | None = None,
+                deadline_slack: int | None = None,
+                max_queue_depth: int | None = None):
     """Data-axis-sharded serving over per-host arrival streams.
 
     One simulated host per `data` shard — run under
@@ -198,6 +237,8 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
         prompt_lens=(max(prompt_len // 2, 2), prompt_len),
         gen_lens=(max(gen // 4, 1), gen // 2 or 1, gen), seed=seed)
     per_host = sharded_workload(spec, n_hosts)
+    for reqs in per_host:
+        _tag_deadlines(reqs, deadline_slack)
     max_len = max(r.prompt_len + r.max_gen
                   for reqs in per_host for r in reqs)
 
@@ -207,7 +248,9 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
                            gossip_delay=gossip_delay, transport=transport,
                            prefill_workers=prefill_workers,
                            compact_threshold=compact_threshold,
-                           failpoints=FailPlan.parse(failpoints))
+                           failpoints=FailPlan.parse(failpoints),
+                           admission_policy=_overload_policy(
+                               deadline_slack, max_queue_depth))
     results, stats = engine.run(per_host)
 
     row = stats.as_row()
@@ -222,14 +265,84 @@ def run_sharded(arch: str, slots_per_host: int = 1, requests: int = 8,
     if failpoints:
         print(f"failpoints {failpoints!r}: {stats.host_downs} host_downs, "
               f"{stats.requeued} requeued, {stats.rejects} rejects")
+    if stats.sheds or stats.degrades:
+        print(f"overload policy: {stats.sheds} shed, "
+              f"{stats.degrades} degrade transitions")
     print(f"wall {stats.wall_s*1e3:.0f} ms "
           f"({stats.tokens_out/max(stats.wall_s, 1e-9):.0f} tok/s)")
     return results, stats
 
 
+
+
+def run_retrieval(preset: str = "smoke", slots: int = 4,
+                  requests: int = 16, rate: float = 2.0, seed: int = 0,
+                  prefill_workers: int = 1,
+                  failpoints: str | None = None,
+                  deadline_slack: int | None = None,
+                  max_queue_depth: int | None = None):
+    """One-shot Bloom retrieval serving (--mode retrieval): Zipf item
+    lookups from ``loadgen.retrieval_workload`` through RetrievalEngine
+    — the same ``run_slot_loop`` the LM engine drives, so
+    ``--failpoints`` (prefill faults, surge, slow_decode) and the
+    overload policy flags work unchanged.  The pool is single-host
+    (sharding it is the remaining ROADMAP item), so there is no
+    ``--transport`` here."""
+    rcfg = configs.get_retrieval_config(preset)
+    spec = RetrievalLoadSpec(n_requests=requests, catalog=rcfg.d,
+                             c_max=rcfg.c_max, rate=rate, seed=seed)
+    workload = _tag_deadlines(retrieval_workload(spec), deadline_slack)
+    params = init_retrieval_params(rcfg)
+    engine = RetrievalEngine(rcfg, params, n_slots=slots,
+                             prefill_workers=prefill_workers,
+                             failpoints=FailPlan.parse(failpoints),
+                             admission_policy=_overload_policy(
+                                 deadline_slack, max_queue_depth))
+    results, stats = engine.run(workload)
+
+    row = stats.as_row()
+    served = [r for r in results.values() if r.done and not r.shed]
+    print(f"served {len(served)}/{len(results)} retrieval requests on "
+          f"{slots} slots over a d={rcfg.d:,} catalog ({preset}): "
+          f"{row['decode_steps']} decode steps, "
+          f"utilization {row['utilization']:.2f}, "
+          f"mean latency {mean_latency(results):.1f} steps")
+    mb = engine.modeled_bytes
+    if mb["streaming_bytes"]:
+        print(f"modeled decode HBM bytes: streaming "
+              f"{mb['streaming_bytes']:,} vs dense-table oracle "
+              f"{mb['dense_oracle_bytes']:,} "
+              f"({mb['dense_oracle_bytes']/mb['streaming_bytes']:.1f}x)")
+    if stats.rejects:
+        print(f"rejected {stats.rejects} requests "
+              f"(prefill attempts exhausted)")
+    if stats.sheds or stats.degrades:
+        print(f"overload policy: {stats.sheds} shed, "
+              f"{stats.degrades} degrade transitions")
+    if rcfg.d <= retrieval_lib.EVAL_MAX_CATALOG and served:
+        metrics = evaluate_retrieval(rcfg, params, served)
+        print(f"offline ranking vs held-out targets: "
+              f"map {metrics['map']:.4f}, rr {metrics['rr']:.4f} "
+              f"over {metrics['n_evaluated']} requests")
+    else:
+        print("offline ranking eval skipped "
+              f"(d={rcfg.d:,} > {retrieval_lib.EVAL_MAX_CATALOG:,}"
+              f"{'' if served else ' or nothing served'})")
+    return results, stats
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True,
+    ap.add_argument("--mode", choices=("lm", "retrieval"), default="lm",
+                    help="'lm' = token generation (default); 'retrieval' "
+                         "= one-shot Bloom top-k over an item catalog "
+                         "(DESIGN.md §11; --retrieval-config picks the "
+                         "catalog preset, --arch is ignored)")
+    ap.add_argument("--retrieval-config",
+                    choices=sorted(configs.RETRIEVAL_CONFIGS),
+                    default="smoke",
+                    help="configs/retrieval.py preset (--mode retrieval)")
+    ap.add_argument("--arch", default=None,
                     choices=list(configs.ARCH_NAMES))
     ap.add_argument("--static", action="store_true",
                     help="old whole-batch path (A/B baseline; required "
@@ -285,9 +398,37 @@ def main():
     ap.add_argument("--failpoints", default=None,
                     help="deterministic fault schedule "
                          "(serving/failpoints.py grammar), e.g. "
-                         "'kill_host:1@3,fail_prefill:2:3'; host kills "
-                         "need --sharded")
+                         "'kill_host:1@3,fail_prefill:2:3,surge:3@1'; "
+                         "host kills need --sharded")
+    ap.add_argument("--deadline-slack", type=int, default=None,
+                    help="tag every request with deadline = arrival + "
+                         "SLACK and enable the admission policy: queued "
+                         "requests past their deadline are SHED "
+                         "deterministically (DESIGN.md §14)")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="bound the visible queue per home host; excess "
+                         "arrivals are shed FIFO-last (enables the "
+                         "admission policy, DESIGN.md §14)")
     args = ap.parse_args()
+    if args.mode == "retrieval":
+        if args.static or args.sharded:
+            raise SystemExit("--mode retrieval is its own serve path: "
+                             "drop --static/--sharded (sharding the "
+                             "retrieval pool is a ROADMAP item)")
+        if args.transport != "sim":
+            raise SystemExit("--mode retrieval has no control-plane "
+                             "transport: the pool is single-host "
+                             "(DESIGN.md §11)")
+        run_retrieval(args.retrieval_config, slots=args.slots,
+                      requests=args.requests, rate=args.rate,
+                      seed=args.seed,
+                      prefill_workers=args.prefill_workers,
+                      failpoints=args.failpoints,
+                      deadline_slack=args.deadline_slack,
+                      max_queue_depth=args.max_queue_depth)
+        return
+    if args.arch is None:
+        ap.error("--arch is required with --mode lm")
     if args.static:
         run(args.arch, batch=args.batch, prompt_len=args.prompt_len,
             gen=args.gen, topk=args.topk, seed=args.seed, full=args.full,
@@ -303,7 +444,9 @@ def main():
                     prefill_workers=args.prefill_workers,
                     compact_threshold=args.compact_threshold,
                     table_dtype=args.table_dtype,
-                    failpoints=args.failpoints)
+                    failpoints=args.failpoints,
+                    deadline_slack=args.deadline_slack,
+                    max_queue_depth=args.max_queue_depth)
     else:
         run_continuous(args.arch, slots=args.slots, requests=args.requests,
                        rate=args.rate, prompt_len=args.prompt_len,
@@ -312,7 +455,9 @@ def main():
                        eos_id=args.eos_id,
                        prefill_workers=args.prefill_workers,
                        table_dtype=args.table_dtype,
-                       failpoints=args.failpoints)
+                       failpoints=args.failpoints,
+                       deadline_slack=args.deadline_slack,
+                       max_queue_depth=args.max_queue_depth)
 
 
 if __name__ == "__main__":

@@ -10,6 +10,11 @@ failpoints.py   — seeded deterministic fault injection (FailPlan): one
                   spec string replays the identical failure schedule in
                   the engine, the model-free sim, the bench and CI
 collective.py   — the device all_gather behind CollectiveTransport
+admission.py    — overload policy (DESIGN.md §14): AdmissionPolicy,
+                  deadline/bounded-queue shedding (compute_sheds), the
+                  windowed pressure signal and the degrade ladder
+                  (plan_stage/stage_topk) — pure functions of replicated
+                  state, JAX-free like control.py
 scheduler.py    — JAX-free RequestQueue/Scheduler (slot admission policy),
                   ShardedScheduler (transported multi-host admission),
                   and run_schedule — the ONE serve loop shared by the
@@ -27,6 +32,12 @@ retrieval.py    — web-scale one-shot Bloom retrieval over the same slot
                   10M+-item catalog, modeled-bytes audit vs the
                   dense-table oracle (DESIGN.md §11)
 """
+from repro.serving.admission import (MAX_STAGE, SHED_DEADLINE,
+                                     SHED_QUEUE_FULL, STAGE_MIN,
+                                     STAGE_NARROW, STAGE_NORMAL,
+                                     AdmissionPolicy, compute_sheds,
+                                     plan_stage, pressure, slo_attainment,
+                                     stage_topk)
 from repro.serving.control import (CollectiveTransport, ControlState,
                                    Delta, EventLog, SimTransport,
                                    Transport, apply_deltas,
@@ -42,7 +53,8 @@ from repro.serving.loadgen import (LoadSpec, RetrievalLoadSpec,
                                    assert_fresh_instances, burst_workload,
                                    host_stream, make_workload,
                                    merge_workloads, mixed_length_workload,
-                                   retrieval_workload, sharded_workload)
+                                   overload_workload, retrieval_workload,
+                                   sharded_workload)
 from repro.serving.retrieval import (RetrievalEngine, RetrievalProgram,
                                      evaluate_retrieval,
                                      init_retrieval_params)
@@ -65,4 +77,8 @@ __all__ = ["Engine", "PrefillPool", "PrefillWorker", "ServeStats",
            "compute_admissions", "plan_compaction", "replay_slot_log",
            "FailPlan", "Failpoint", "PREFILL_MAX_ATTEMPTS",
            "PrefillFault", "HOST_DOWN", "ReplicaDivergence",
-           "TransportTimeout", "control_digest"]
+           "TransportTimeout", "control_digest",
+           "AdmissionPolicy", "compute_sheds", "plan_stage", "pressure",
+           "slo_attainment", "stage_topk", "overload_workload",
+           "MAX_STAGE", "SHED_DEADLINE", "SHED_QUEUE_FULL",
+           "STAGE_NORMAL", "STAGE_NARROW", "STAGE_MIN"]

@@ -100,7 +100,8 @@ class Delta:
     step: int
     home: int        # producing host (the slot's owner for RELEASE)
     rid: int
-    slot: int = -1   # global slot id at production time (RELEASE only)
+    slot: int = -1   # RELEASE: global slot id at production time;
+                     # ARRIVE: the request's deadline_step (-1 = none)
 
     def encode(self) -> Tuple[int, int, int, int, int]:
         return (self.kind, self.step, self.home, self.rid, self.slot)
@@ -151,6 +152,8 @@ class ControlState:
     epoch: int = 0                           # bumps on every HOST_DOWN
     admitted: Dict[int, Tuple[int, int]] = dataclasses.field(
         default_factory=dict)                # rid -> its admission key
+    deadlines: Dict[int, int] = dataclasses.field(
+        default_factory=dict)                # rid -> deadline_step (if any)
 
     def __post_init__(self):
         if self.live is None:
@@ -172,7 +175,8 @@ class ControlState:
     def copy(self) -> "ControlState":
         return ControlState(self.slots_per_host, dict(self.pending),
                             list(self.occupant), list(self.live),
-                            self.epoch, dict(self.admitted))
+                            self.epoch, dict(self.admitted),
+                            dict(self.deadlines))
 
 
 def control_digest(state: ControlState) -> int:
@@ -185,7 +189,8 @@ def control_digest(state: ControlState) -> int:
              tuple(state.occupant),
              tuple(state.live),
              state.epoch,
-             tuple(sorted(state.admitted.items())))
+             tuple(sorted(state.admitted.items())),
+             tuple(sorted(state.deadlines.items())))
     return zlib.crc32(repr(canon).encode()) & 0x7FFFFFFF
 
 
@@ -204,6 +209,12 @@ def apply_deltas(state: ControlState,
             if d.rid in out.pending or d.rid in out.admitted:
                 raise RuntimeError(f"request {d.rid} arrived twice")
             out.pending[d.rid] = (d.step, d.home)
+            # ARRIVE reuses the otherwise-unused slot lane to replicate
+            # the request's deadline_step (-1 = none): the shed decision
+            # is a pure function of replicated state, so the deadline
+            # must BE replicated state (DESIGN.md §14)
+            if d.slot >= 0:
+                out.deadlines[d.rid] = d.slot
         elif d.kind == RELEASE:
             # resolve by rid, NOT by the delta's slot field: a COMPACT
             # between production and visibility remaps slots, but the rid
@@ -215,6 +226,7 @@ def apply_deltas(state: ControlState,
                     f"release of rid {d.rid} which occupies no slot")
             out.occupant[slot] = -1
             out.admitted.pop(d.rid, None)
+            out.deadlines.pop(d.rid, None)
         elif d.kind == HOST_DOWN:
             dead = d.rid
             if not (0 <= dead < out.n_hosts):
@@ -261,7 +273,24 @@ def commit_admission(state: ControlState, slot: int, rid: int) -> None:
     if state.occupant[slot] != -1:  # pragma: no cover
         raise RuntimeError(f"slot {slot} double-assigned")
     state.occupant[slot] = rid
+    # the deadline entry (if any) survives admission on purpose: a later
+    # HOST_DOWN re-queues the rid, and its deadline did not die with the
+    # host — the next shed pass judges it again (DESIGN.md §14)
     state.admitted[rid] = state.pending.pop(rid)
+
+
+def commit_sheds(state: ControlState, rids: Sequence[int]) -> None:
+    """Synchronous transition twin of ``commit_admission``: sheds are
+    computed identically by every replica (admission.compute_sheds over
+    replicated state), so they need no delta — each host just drops the
+    rids from its queue mirror.  Raises (never asserts — queue integrity
+    must survive ``python -O``) if a shed rid is not actually queued."""
+    for rid in rids:
+        if rid not in state.pending:
+            raise RuntimeError(
+                f"shed of rid {rid} which is not queued")
+        state.pending.pop(rid)
+        state.deadlines.pop(rid, None)
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +378,10 @@ class HostShard:
         # free a dead host's slot when its HOST_DOWN applies
         self.rejects: List[Tuple[int, int, int, int]] = []
         self.reclaims: List[Tuple[int, int, int, int]] = []
+        # (step, rid, reason, seq) — sheds vacate no slot (the rid was
+        # still queued), so they are attributed to the request's HOME
+        # host rather than a slot owner
+        self.sheds: List[Tuple[int, int, int, int]] = []
 
     def owns(self, gslot: int) -> bool:
         return self.lo <= gslot < self.hi
@@ -367,8 +400,14 @@ class EventLog:
         self.compactions: List[Tuple[int, Tuple[int, ...], int]] = []
         self.rejects: List[Tuple[int, int, int, int]] = []
         self.reclaims: List[Tuple[int, int, int, int]] = []
+        # (step, rid, reason, seq) — overload sheds, merged + per-home
+        self.sheds: List[Tuple[int, int, int, int]] = []
         # (step, dead host, epoch, seq) — merged only (not slot-owned)
         self.host_downs: List[Tuple[int, int, int, int]] = []
+        # (step, from_stage, to_stage, seq) — degrade-ladder moves,
+        # merged only: the stage is global replicated state, every host
+        # executes the identical transition (DESIGN.md §14)
+        self.degrades: List[Tuple[int, int, int, int]] = []
         self.hosts = [HostShard(h, slots_per_host)
                       for h in range(n_hosts)] if slots_per_host else []
         self._seq = 0
@@ -412,6 +451,20 @@ class EventLog:
         shard = self._host(slot)
         if shard is not None:
             shard.reclaims.append(ev)
+        return ev
+
+    def shed(self, step: int, rid: int, reason: int, home: int = 0):
+        ev = (step, rid, reason, self._seq)
+        self._seq += 1
+        self.sheds.append(ev)
+        if self.hosts:
+            self.hosts[home].sheds.append(ev)
+        return ev
+
+    def degrade(self, step: int, old: int, new: int):
+        ev = (step, old, new, self._seq)
+        self._seq += 1
+        self.degrades.append(ev)
         return ev
 
     def host_down(self, step: int, host: int, epoch: int):

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -48,6 +49,8 @@ from repro.configs.base import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.models import io as io_lib
 from repro.models import transformer as tf
+from repro.serving import admission as admission_lib
+from repro.serving.admission import AdmissionPolicy
 from repro.serving.failpoints import FailPlan, PREFILL_MAX_ATTEMPTS
 from repro.serving.scheduler import (Request, RequestQueue, Scheduler,
                                      ServeStats)
@@ -147,6 +150,42 @@ class SlotProgram:
         Returns True if the slot retires (the loop releases it)."""
         raise NotImplementedError
 
+    def set_stage(self, stage: int) -> None:
+        """Degrade-ladder hook (DESIGN.md §14): swap to ``stage``'s
+        PRE-BUILT decode callable — a jit swap, never a compile.
+        Programs built without an ``admission_policy`` serve stage 0
+        only; asking them to degrade is a wiring bug, not a fallback."""
+        if stage != admission_lib.STAGE_NORMAL:
+            raise RuntimeError(
+                f"{self.engine_label} was built without an "
+                f"admission_policy — degrade stage {stage} has no "
+                "pre-built decode callable (DESIGN.md §14: stage jits "
+                "are constructed up front so a transition never "
+                "compiles)")
+
+
+def build_stage_decodes(stage0, topk: int,
+                        policy: Optional[AdmissionPolicy], make):
+    """stage -> PRE-BUILT jitted decode callable, shared by the LM,
+    sharded and retrieval programs (DESIGN.md §14).
+
+    ``stage0`` is the already-built full-width jit; ``make(k)`` builds
+    (but does not compile — jax.jit is lazy) the width-``k`` variant.
+    Stages whose ``admission.stage_topk`` width equals an already-built
+    stage share its jit object, so cache-size accounting stays exact:
+    every distinct executable in the ladder compiles at most once, and a
+    DEGRADE/RESTORE transition is a dict lookup."""
+    stages = {admission_lib.STAGE_NORMAL: stage0}
+    if policy is None:
+        return stages
+    by_width = {topk: stage0}
+    for st in range(1, policy.max_stage + 1):
+        k = admission_lib.stage_topk(topk, st, policy)
+        if k not in by_width:
+            by_width[k] = make(k)
+        stages[st] = by_width[k]
+    return stages
+
 
 @dataclasses.dataclass
 class _LMState:
@@ -177,7 +216,8 @@ class LMSlotProgram(SlotProgram):
     def __init__(self, cfg: ModelConfig, *, topk: int, dist=None,
                  n_slots: Optional[int] = None,
                  max_len: Optional[int] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 admission_policy: Optional[AdmissionPolicy] = None):
         self.cfg = cfg
         self.topk = topk
         self.n_slots = n_slots
@@ -195,6 +235,15 @@ class LMSlotProgram(SlotProgram):
         # second pool and copying per step
         self._decode = jax.jit(steps_lib.make_slot_decode_step(
             cfg, topk=topk, dist=dist), donate_argnums=(2,))
+        # degrade ladder (DESIGN.md §14): one pre-built decode jit per
+        # stage width; a DEGRADE/RESTORE swaps the dict entry in use.
+        # Narrowing the served top-k never changes the emitted token —
+        # the next token is the top-1 id, invariant under k.
+        self._stage = admission_lib.STAGE_NORMAL
+        self._stage_decodes = build_stage_decodes(
+            self._decode, topk, admission_policy,
+            lambda k: jax.jit(steps_lib.make_slot_decode_step(
+                cfg, topk=k, dist=dist), donate_argnums=(2,)))
         self._insert = jax.jit(steps_lib.insert_cache_slot,
                                donate_argnums=(0,))
         self._pool_template = tf.init_lm_cache(
@@ -270,16 +319,26 @@ class LMSlotProgram(SlotProgram):
             jnp.int32(first), jnp.int32(req.prompt_len))
         return True
 
+    def set_stage(self, stage: int) -> None:
+        if stage not in self._stage_decodes:
+            raise RuntimeError(
+                f"{self.engine_label}: degrade stage {stage} was not "
+                "pre-built — construct the program with the run's "
+                "admission_policy (DESIGN.md §14)")
+        self._stage = stage
+
     def step(self, params, state: _LMState):
-        out = self._decode(params, state.tokens, state.caches,
-                           state.pos, state.active)
+        out = self._stage_decodes[self._stage](
+            params, state.tokens, state.caches, state.pos, state.active)
         state.caches = out["caches"]
         # steady-state decode: tokens/pos advance on device from the
         # step's own outputs — no host round-trip re-upload.  The d2h
         # token download below is irreducible (the scheduler decides
-        # retirement host-side).
+        # retirement host-side).  The [:, :1] slice happens OUTSIDE
+        # _advance so a degraded stage's narrower top-k never re-traces
+        # it (the jit always sees a (B, 1) operand).
         state.tokens, state.pos = self._advance(
-            out["topk_ids"], state.tokens, state.pos, state.active)
+            out["topk_ids"][:, :1], state.tokens, state.pos, state.active)
         return np.asarray(out["topk_ids"][:, 0])
 
     def emit(self, state: _LMState, req: Request, slot: int, out,
@@ -442,8 +501,10 @@ class PrefillPool:
 
 def run_slot_loop(program: SlotProgram, params, prefill_pool: PrefillPool,
                   requests: List[Request], n_slots: int,
-                  state=None) -> Tuple[Dict[int, Request], ServeStats,
-                                       Scheduler, object]:
+                  state=None, failpoints: Optional[FailPlan] = None,
+                  admission_policy: Optional[AdmissionPolicy] = None,
+                  ) -> Tuple[Dict[int, Request], ServeStats,
+                             Scheduler, object]:
     """THE continuous-batching serve loop, generic over a SlotProgram.
 
     Admission, prefill dispatch, rejection, per-step stats, clock
@@ -456,20 +517,63 @@ def run_slot_loop(program: SlotProgram, params, prefill_pool: PrefillPool,
     tests/test_serving.py + tests/test_retrieval.py and the
     BENCH_serving.json --check gate).
 
+    ``failpoints`` injects overload (DESIGN.md §14) exactly as the
+    sharded path does: ``surge:R@S`` compresses the queue's arrival
+    clock, ``slow_decode:N@S`` makes each decode step cost N clock
+    ticks.  ``admission_policy`` enables the overload pass — shed
+    expired / over-bound queued requests, then step the degrade ladder
+    — evaluated once per clock tick BEFORE admission, identical in shape
+    to ``ShardedScheduler._apply_policy``.  Because this loop serves any
+    SlotProgram, the policy lands on the LM and retrieval engines at
+    once.
+
     Mutates and returns the requests; also returns the Scheduler (slot
     event log) and the program state (e.g. the retrieval program's
     accumulated modeled bytes).
     """
     assert_kind(requests, program.kind, program.engine_label)
-    queue = RequestQueue(requests)
+    fp = failpoints if failpoints else None
+    queue = RequestQueue(
+        requests,
+        arrival_key=(None if fp is None else
+                     (lambda r: fp.effective_arrival(r.arrival_step))))
     sched = Scheduler(n_slots)
     stats = ServeStats()
+    policy = admission_policy
+    window = (deque(maxlen=policy.pressure_window)
+              if policy is not None else None)
+    stage = admission_lib.STAGE_NORMAL
+    policy_stepped = -1
     if state is None:
         state = program.init_state(n_slots)
     now = 0
     t0 = time.perf_counter()
 
     while len(queue) or sched.n_active:
+        if policy is not None and policy_stepped != now:
+            # the overload pass, once per clock tick: sheds first, so
+            # the pressure sample reflects the bounded queue
+            policy_stepped = now
+            visible = queue.visible(now)
+            sheds = admission_lib.compute_sheds(
+                {r.rid: (queue.arrival_of(r), r.home) for r in visible},
+                {r.rid: r.deadline_step for r in visible}, now, policy)
+            if sheds:
+                reasons = dict(sheds)
+                for req in queue.remove([rid for rid, _ in sheds]):
+                    req.shed = True
+                    req.finish_step = now
+                    sched.log.shed(now, req.rid, reasons[req.rid],
+                                   req.home)
+                    stats.sheds += 1
+            window.append(admission_lib.pressure(
+                len(queue.visible(now)), n_slots))
+            new = admission_lib.plan_stage(window, policy, stage)
+            if new != stage:
+                sched.log.degrade(now, stage, new)
+                stats.degrades += 1
+                program.set_stage(new)
+                stage = new
         admitted = sched.admit(queue, now)
         for req in admitted:
             program.check_admit(req)
@@ -509,11 +613,17 @@ def run_slot_loop(program: SlotProgram, params, prefill_pool: PrefillPool,
         stats.decode_steps += 1
         stats.slot_steps_total += n_slots
         stats.slot_steps_active += sched.n_active
-        now += 1
+        # an injected slow_decode makes each decode step cost N clock
+        # ticks — arrivals pile up, driving the pressure signal
+        now += fp.decode_cost(now) if fp is not None else 1
         for slot, req in list(sched.active.items()):
             if program.emit(state, req, slot, out, stats):
                 sched.release(slot, now)
 
+    if stage != admission_lib.STAGE_NORMAL:
+        # post-run data-plane reset (like reset_slots): the program is
+        # reused across runs and must start the next one undegraded
+        program.set_stage(admission_lib.STAGE_NORMAL)
     stats.wall_s = time.perf_counter() - t0
     return {r.rid: r for r in requests}, stats, sched, state
 
@@ -542,7 +652,8 @@ class Engine:
                  max_len: int, topk: int = 8,
                  eos_id: Optional[int] = None, dist=None,
                  prefill_workers: int = 1,
-                 failpoints: Optional[FailPlan] = None):
+                 failpoints: Optional[FailPlan] = None,
+                 admission_policy: Optional[AdmissionPolicy] = None):
         if not Engine.supports(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: continuous batching serves decoder-only "
@@ -556,9 +667,11 @@ class Engine:
         self.topk = topk
         self.eos_id = eos_id
         self.failpoints = failpoints if failpoints else None
+        self.policy = admission_policy
         self.program = LMSlotProgram(cfg, topk=topk, dist=dist,
                                      n_slots=n_slots, max_len=max_len,
-                                     eos_id=eos_id)
+                                     eos_id=eos_id,
+                                     admission_policy=admission_policy)
         # the pool shares the engine's program: one set of jitted
         # prefill callables for prefill AND admission (jit
         # re-specializes per device placement on its own)
@@ -577,7 +690,8 @@ class Engine:
         on per-slot stop conditions.  Mutates and returns the requests."""
         results, stats, sched, _ = run_slot_loop(
             self.program, self.params, self.prefill_pool, requests,
-            self.n_slots)
+            self.n_slots, failpoints=self.failpoints,
+            admission_policy=self.policy)
         self._sched = sched          # exposed for the simulation tests
         return results, stats
 
@@ -644,8 +758,9 @@ class Engine:
 
 
 def mean_latency(results: Dict[int, Request]) -> float:
-    """Mean (finish - arrival) in decode steps across completed requests."""
-    done = [r for r in results.values() if r.done]
+    """Mean (finish - arrival) in decode steps across completed requests.
+    Shed requests are terminal but never served — no latency to count."""
+    done = [r for r in results.values() if r.done and not r.shed]
     if not done:
         return 0.0
     return float(np.mean([r.finish_step - r.arrival_step for r in done]))

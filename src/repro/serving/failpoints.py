@@ -31,6 +31,14 @@ Spec grammar — comma-separated failpoints, order irrelevant:
                          both transports must raise ReplicaDivergence)
     train_fault@S        the training loop raises at step S (the crash
                          the checkpoint/resume path must survive)
+    surge:R@S            arrival-rate multiplier: arrivals scheduled at or
+                         after step S are compressed toward S by factor R
+                         (eff = S + (a - S) // R) — the open-loop traffic
+                         spike that overwhelms the pool (DESIGN.md §14)
+    slow_decode:N@S      from step S onward each decode step costs N clock
+                         ticks instead of 1 (models a degraded accelerator
+                         or noisy neighbour; arrivals pile up during the
+                         slow steps, driving the pressure signal)
 
 Delays apply to ARRIVE deltas only: a RELEASE or HOST_DOWN delta always
 travels at the transport's base delay.  This is load-bearing — see
@@ -52,9 +60,11 @@ HANG_ROUND = "hang_round"
 FAIL_PREFILL = "fail_prefill"
 CORRUPT_DIGEST = "corrupt_digest"
 TRAIN_FAULT = "train_fault"
+SURGE = "surge"
+SLOW_DECODE = "slow_decode"
 
 _KINDS = (KILL_HOST, DELAY_ARRIVALS, HANG_ROUND, FAIL_PREFILL,
-          CORRUPT_DIGEST, TRAIN_FAULT)
+          CORRUPT_DIGEST, TRAIN_FAULT, SURGE, SLOW_DECODE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +77,8 @@ class Failpoint:
     fail_prefill:    rid=victim,    count=number of failing attempts
     corrupt_digest:  host=replica,  step=the corrupted round
     train_fault:     step=train step at which the driver raises
+    surge:           count=rate multiplier, step=first compressed step
+    slow_decode:     delay=ticks per decode step, step=first slow step
     """
     kind: str
     step: int = -1
@@ -88,6 +100,10 @@ class Failpoint:
             return f"{CORRUPT_DIGEST}:{self.host}@{self.step}"
         if self.kind == TRAIN_FAULT:
             return f"{TRAIN_FAULT}@{self.step}"
+        if self.kind == SURGE:
+            return f"{SURGE}:{self.count}@{self.step}"
+        if self.kind == SLOW_DECODE:
+            return f"{SLOW_DECODE}:{self.delay}@{self.step}"
         raise ValueError(f"unknown failpoint kind {self.kind!r}")
 
 
@@ -118,6 +134,16 @@ def _parse_one(tok: str) -> Failpoint:
         return Failpoint(DELAY_ARRIVALS, step=step, delay=val)
     if head == HANG_ROUND:
         return Failpoint(HANG_ROUND, step=step, delay=val)
+    if head == SURGE:
+        if val < 2:
+            raise ValueError(
+                f"surge factor must be >= 2, got {val} in {tok!r}")
+        return Failpoint(SURGE, step=step, count=val)
+    if head == SLOW_DECODE:
+        if val < 2:
+            raise ValueError(
+                f"slow_decode ticks must be >= 2, got {val} in {tok!r}")
+        return Failpoint(SLOW_DECODE, step=step, delay=val)
     return Failpoint(CORRUPT_DIGEST, step=step, host=val)
 
 
@@ -194,6 +220,40 @@ class FailPlan:
         hit = any(p.kind == CORRUPT_DIGEST and p.host == host
                   and p.step == step for p in self.points)
         return 0x5A5A5A5A if hit else 0
+
+    def effective_arrival(self, step: int) -> int:
+        """Arrival step after every surge compression has been applied.
+
+        Each ``surge:R@S`` pulls arrivals scheduled at or after S toward
+        S: ``a -> S + (a - S) // R``.  Surges apply in ascending-S order
+        so stacked surges compose deterministically; steps before every
+        surge are untouched.  Pure in (plan, step) — the scheduler AND
+        the model-free sim both route arrivals through this, so the
+        compressed traffic is identical everywhere."""
+        for p in sorted(((p.step, p.count) for p in self.points
+                         if p.kind == SURGE)):
+            s, factor = p
+            if step >= s:
+                step = s + (step - s) // factor
+        return step
+
+    def surge_steps(self) -> List[int]:
+        return sorted(p.step for p in self.points if p.kind == SURGE)
+
+    def decode_cost(self, step: int) -> int:
+        """Clock ticks one decode step costs at `step` (1 = healthy).
+        The largest active ``slow_decode`` wins; slowdowns are permanent
+        from their onset step, like kills."""
+        costs = [p.delay for p in self.points
+                 if p.kind == SLOW_DECODE and step >= p.step]
+        return max(costs, default=1)
+
+    def overload_steps(self) -> List[int]:
+        """Onset steps of every overload failpoint (surge + slow_decode);
+        empty means the plan injects no overload — drills gate their
+        verified markers on this, like kill_steps()."""
+        return sorted(p.step for p in self.points
+                      if p.kind in (SURGE, SLOW_DECODE))
 
     def train_hook(self) -> Optional[Callable[[int], None]]:
         """A Trainer/driver `fault_hook` raising at the planned step, or

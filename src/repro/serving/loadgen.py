@@ -152,6 +152,50 @@ def assert_fresh_instances(*workloads) -> None:
                     "previous run's objects")
 
 
+def overload_workload(spec: LoadSpec, n_hosts: int, *, surge_start: int,
+                      surge_factor: int,
+                      deadline_slack: int | None = None
+                      ) -> list[list[Request]]:
+    """Open-loop overload traffic (DESIGN.md §14): each host's seeded
+    Poisson stream (``host_stream`` — still pure in (seed, host)), with
+    arrivals at or after ``surge_start`` compressed toward it by
+    ``surge_factor`` (``a -> start + (a - start) // factor`` — the SAME
+    transform ``FailPlan`` ``surge:R@S`` applies at injection time, here
+    baked into ``arrival_step`` itself) and, with ``deadline_slack``
+    set, an SLO deadline of ``arrival_step + deadline_slack`` per
+    request.  Benches and drills use this instead of hand-rolling surge
+    schedules; a failpoint surge composes on top (it re-compresses the
+    already-compressed steps).
+
+    Validated like ``LoadSpec``: a bad knob fails loudly at the call,
+    not as a silent never-shedding or always-shedding run."""
+    if surge_start < 0:
+        raise ValueError(
+            f"surge_start must be >= 0 (got {surge_start}); it is the "
+            "first compressed arrival step")
+    if surge_factor < 2:
+        raise ValueError(
+            f"surge_factor must be >= 2 (got {surge_factor}); factor 1 "
+            "would be a no-op surge — drop the parameter instead")
+    if deadline_slack is not None and deadline_slack < 1:
+        raise ValueError(
+            f"deadline_slack must be >= 1 step (got {deadline_slack}); "
+            "a zero slack sheds every request that misses same-step "
+            "admission")
+    out = []
+    for h in range(n_hosts):
+        reqs = host_stream(spec, h, n_hosts)
+        for r in reqs:
+            if r.arrival_step >= surge_start:
+                r.arrival_step = (surge_start
+                                  + (r.arrival_step - surge_start)
+                                  // surge_factor)
+            if deadline_slack is not None:
+                r.deadline_step = r.arrival_step + deadline_slack
+        out.append(reqs)
+    return out
+
+
 def mixed_length_workload(vocab: int, n_requests: int = 12,
                           seed: int = 0) -> list[Request]:
     """The canonical bench/test workload: bursty arrivals, bimodal

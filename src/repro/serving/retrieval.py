@@ -53,6 +53,9 @@ from repro.core import quant
 from repro.kernels.bloom_decode_topk import modeled_hbm_bytes
 from repro.launch import steps as steps_lib
 from repro.models import recommender as rec_lib
+from repro.serving import admission as admission_lib
+from repro.serving import engine as engine_lib
+from repro.serving.admission import AdmissionPolicy
 from repro.serving.engine import PrefillPool, SlotProgram, run_slot_loop
 from repro.serving.failpoints import FailPlan
 from repro.serving.loadgen import (RetrievalLoadSpec, assert_fresh_instances,
@@ -96,7 +99,8 @@ class RetrievalProgram(SlotProgram):
     engine_label = "the retrieval engine"
 
     def __init__(self, rcfg: RetrievalConfig,
-                 n_slots: Optional[int] = None):
+                 n_slots: Optional[int] = None,
+                 admission_policy=None):
         self.rcfg = rcfg
         self.n_slots = n_slots
         self._prefill = jax.jit(steps_lib.make_retrieval_prefill_step(rcfg))
@@ -106,6 +110,20 @@ class RetrievalProgram(SlotProgram):
         self._insert = jax.jit(
             lambda pool, row, slot: pool.at[slot].set(row),
             donate_argnums=(0,))
+        # degrade ladder (DESIGN.md §14): "stage 2 shrinks retrieval
+        # top-k" — each stage's narrower streaming decode is pre-built;
+        # under the pinned lowest-id tie-break a degraded request's ids
+        # are a bit-identical PREFIX of the full-width result
+        self._stage = admission_lib.STAGE_NORMAL
+        self._stage_topk = {
+            st: admission_lib.stage_topk(rcfg.topk, st, admission_policy)
+            for st in range(1, admission_policy.max_stage + 1)
+        } if admission_policy is not None else {}
+        self._stage_topk[admission_lib.STAGE_NORMAL] = rcfg.topk
+        self._stage_decodes = engine_lib.build_stage_decodes(
+            self._decode, rcfg.topk, admission_policy,
+            lambda k: jax.jit(steps_lib.make_retrieval_decode_step(
+                dataclasses.replace(rcfg, topk=k))))
 
     # -- prefill half --------------------------------------------------
     def prefill(self, params, req: Request, device=None):
@@ -139,18 +157,27 @@ class RetrievalProgram(SlotProgram):
         state.live[req.slot] = True
         return True
 
+    def set_stage(self, stage: int) -> None:
+        if stage not in self._stage_decodes:
+            raise RuntimeError(
+                f"{self.engine_label}: degrade stage {stage} was not "
+                "pre-built — construct the program with the run's "
+                "admission_policy (DESIGN.md §14)")
+        self._stage = stage
+
     def step(self, params, state: _RetrievalState):
         active = jnp.asarray(state.live)
-        scores, ids = self._decode(state.pool, active)
+        scores, ids = self._stage_decodes[self._stage](state.pool, active)
         # bytes model follows the table_dtype knob (DESIGN.md §13): a
         # quantized decode stores the logp rows narrow, rehashes
         # in-kernel (no (d, k) stream) and — int8 only — reads one f32
-        # scale per live row; "auto" keeps the legacy exact model
+        # scale per live row; "auto" keeps the legacy exact model.
+        # The top-k term follows the degrade stage's served width.
         td = self.rcfg.table_dtype
         td = None if td == "auto" else td
         state.streaming_bytes += modeled_hbm_bytes(
             state.live, self.rcfg.b_tile, m=self.rcfg.m, d=self.rcfg.d,
-            k=self.rcfg.k, topk=self.rcfg.topk,
+            k=self.rcfg.k, topk=self._stage_topk[self._stage],
             logp_itemsize=quant.table_itemsize(td),
             inkernel_hash=td is not None,
             row_scales=td == "int8")
@@ -187,16 +214,19 @@ class RetrievalEngine:
 
     def __init__(self, rcfg: RetrievalConfig, params, *, n_slots: int,
                  prefill_workers: int = 1,
-                 failpoints: Optional[FailPlan] = None):
+                 failpoints: Optional[FailPlan] = None,
+                 admission_policy: Optional[AdmissionPolicy] = None):
         assert n_slots >= 1
         self.rcfg = rcfg
         self.params = params
         self.n_slots = n_slots
-        self.program = RetrievalProgram(rcfg, n_slots=n_slots)
+        self.failpoints = failpoints if failpoints else None
+        self.policy = admission_policy
+        self.program = RetrievalProgram(rcfg, n_slots=n_slots,
+                                        admission_policy=admission_policy)
         self.prefill_pool = PrefillPool(
             None, params, topk=rcfg.topk, n_workers=prefill_workers,
-            failpoints=failpoints if failpoints else None,
-            program=self.program)
+            failpoints=self.failpoints, program=self.program)
         self.modeled_bytes: Dict[str, int] = {}
 
     def _dense_oracle_step_bytes(self) -> int:
@@ -219,7 +249,8 @@ class RetrievalEngine:
         latency/throughput accounting works unchanged)."""
         results, stats, sched, state = run_slot_loop(
             self.program, self.params, self.prefill_pool, requests,
-            self.n_slots)
+            self.n_slots, failpoints=self.failpoints,
+            admission_policy=self.policy)
         self._sched = sched          # exposed for the simulation tests
         self.modeled_bytes = {
             "streaming_bytes": int(state.streaming_bytes),
@@ -253,8 +284,8 @@ def evaluate_retrieval(rcfg: RetrievalConfig, params,
         f"full-score eval at d={rcfg.d} would materialize a "
         f"(B, {rcfg.d}) matrix; eval on the smoke/web1m specs")
     served = [r for r in requests
-              if r.done and not r.rejected and r.targets is not None
-              and len(r.targets)]
+              if r.done and not r.rejected and not r.shed
+              and r.targets is not None and len(r.targets)]
     if not served:
         return {"map": 0.0, "rr": 0.0, "accuracy": 0.0, "n_evaluated": 0}
     B = len(served)

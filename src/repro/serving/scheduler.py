@@ -41,7 +41,9 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving import admission as admission_lib
 from repro.serving import control as control_lib
+from repro.serving.admission import AdmissionPolicy
 from repro.serving.control import (ARRIVE, HOST_DOWN, RELEASE,
                                    ControlState, Delta, EventLog,
                                    HostShard, SimTransport, Transport)
@@ -65,6 +67,12 @@ class Request:
     # never read by the engines — carried so the eval path needs no side
     # table keyed by rid
     targets: Optional[np.ndarray] = None
+    # SLO deadline (DESIGN.md §14): the last decode-step clock tick at
+    # which admission still meets the request's latency budget; -1 means
+    # no deadline (the pre-PR-10 behaviour — never shed on time).  A
+    # queued request with ``now > deadline_step`` is shed by the
+    # admission policy instead of admitted late.
+    deadline_step: int = -1
 
     # engine-filled results
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -75,6 +83,7 @@ class Request:
     slot: int = -1
     rejected: bool = False             # prefill permanently failed
     requeues: int = 0                  # times reclaimed by a HOST_DOWN
+    shed: bool = False                 # dropped by the admission policy
 
     @property
     def prompt_len(self) -> int:
@@ -100,7 +109,8 @@ class Request:
                           else arrival_step),
             home=self.home, kind=self.kind,
             targets=(None if self.targets is None
-                     else np.array(self.targets, copy=True)))
+                     else np.array(self.targets, copy=True)),
+            deadline_step=self.deadline_step)
 
 
 @dataclasses.dataclass
@@ -122,6 +132,10 @@ class ServeStats:
     host_downs: int = 0              # HOST_DOWN deltas applied
     requeued: int = 0                # in-flight requests reclaimed
     rejects: int = 0                 # prefill-exhausted REJECTs
+    # overload path (DESIGN.md §14; zero on an unloaded run, omitted
+    # from as_row() like the failure counters)
+    sheds: int = 0                   # requests dropped by the policy
+    degrades: int = 0                # degrade-ladder transitions executed
     wall_s: float = 0.0
 
     @property
@@ -143,11 +157,18 @@ class ServeStats:
 
 class RequestQueue:
     """Arrival-ordered queue; FIFO among requests whose arrival_step has
-    passed.  push() order breaks arrival-step ties (stable)."""
+    passed.  push() order breaks arrival-step ties (stable).
 
-    def __init__(self, requests=()):
+    ``arrival_key`` customizes the arrival clock per request (default:
+    ``r.arrival_step``) — the single-host engine passes the failpoint
+    surge compression here so injected overload reshapes the FIFO key
+    itself, exactly as the sharded ARRIVE deltas do."""
+
+    def __init__(self, requests=(), *, arrival_key=None):
+        self._key = (arrival_key if arrival_key is not None
+                     else (lambda r: r.arrival_step))
         self._pending: Deque[Request] = deque(
-            sorted(requests, key=lambda r: r.arrival_step))
+            sorted(requests, key=self._key))
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -155,13 +176,13 @@ class RequestQueue:
     def push(self, req: Request) -> None:
         # maintain arrival order under online pushes
         self._pending.append(req)
-        if (len(self._pending) > 1 and self._pending[-2].arrival_step
-                > req.arrival_step):
+        if (len(self._pending) > 1 and self._key(self._pending[-2])
+                > self._key(req)):
             self._pending = deque(
-                sorted(self._pending, key=lambda r: r.arrival_step))
+                sorted(self._pending, key=self._key))
 
     def peek_ready(self, now: int) -> Optional[Request]:
-        if self._pending and self._pending[0].arrival_step <= now:
+        if self._pending and self._key(self._pending[0]) <= now:
             return self._pending[0]
         return None
 
@@ -171,7 +192,32 @@ class RequestQueue:
         return self._pending.popleft()
 
     def next_arrival(self) -> Optional[int]:
-        return self._pending[0].arrival_step if self._pending else None
+        return self._key(self._pending[0]) if self._pending else None
+
+    def arrival_of(self, req: Request) -> int:
+        """The queue's (possibly surge-compressed) arrival clock for
+        ``req`` — what the admission policy sheds against."""
+        return self._key(req)
+
+    def visible(self, now: int) -> List[Request]:
+        """Requests that have arrived (arrival_step <= now) but are
+        still queued — the single-host analogue of the replicated
+        visible-pending set the admission policy sheds from."""
+        return [r for r in self._pending if self._key(r) <= now]
+
+    def remove(self, rids) -> List[Request]:
+        """Drop (and return) the given rids from the queue — the shed
+        path.  Raises (never asserts) if any rid is not queued: queue
+        integrity must survive ``python -O``."""
+        rids = set(rids)
+        out = [r for r in self._pending if r.rid in rids]
+        if len(out) != len(rids):
+            missing = rids - {r.rid for r in out}
+            raise RuntimeError(
+                f"shed of rids {sorted(missing)} which are not queued")
+        self._pending = deque(r for r in self._pending
+                              if r.rid not in rids)
+        return out
 
 
 class Scheduler:
@@ -205,6 +251,14 @@ class Scheduler:
     @property
     def rejects(self):
         return self.log.rejects
+
+    @property
+    def sheds(self):
+        return self.log.sheds
+
+    @property
+    def degrades(self):
+        return self.log.degrades
 
     # ------------------------------------------------------------------
     @property
@@ -289,7 +343,8 @@ class ShardedScheduler:
                  gossip_delay: int = 1, *,
                  transport: Optional[Transport] = None,
                  compact_threshold: Optional[float] = None,
-                 failpoints: Optional[FailPlan] = None):
+                 failpoints: Optional[FailPlan] = None,
+                 admission_policy: Optional[AdmissionPolicy] = None):
         assert n_hosts >= 1 and slots_per_host >= 1 and gossip_delay >= 0
         self.n_hosts = n_hosts
         self.slots_per_host = slots_per_host
@@ -315,6 +370,17 @@ class ShardedScheduler:
         self._requests: Dict[int, Request] = {}   # pushed, not admitted
         self._unsent: Dict[int, Request] = {}     # ARRIVE delta not sent
         self._stepped_at = -1
+        # overload policy (DESIGN.md §14): sheds + the degrade ladder are
+        # synchronous pure functions of replicated state, evaluated in
+        # begin_step exactly once per clock tick
+        self.policy = admission_policy
+        self.degrade_stage = admission_lib.STAGE_NORMAL
+        self._pressure: Deque[float] = deque(
+            maxlen=(admission_policy.pressure_window
+                    if admission_policy is not None else 1))
+        self._policy_stepped = -1
+        self._new_sheds: List[Request] = []
+        self._new_stages: List[Tuple[int, int]] = []
         # membership: physically-dead hosts (local knowledge, applied the
         # instant the kill lands) vs the replicated live view mirrored at
         # the last apply (reclaims run when the two diverge)
@@ -345,6 +411,14 @@ class ShardedScheduler:
         return self.log.reclaims
 
     @property
+    def sheds(self):
+        return self.log.sheds
+
+    @property
+    def degrades(self):
+        return self.log.degrades
+
+    @property
     def host_downs(self):
         return self.log.host_downs
 
@@ -356,11 +430,24 @@ class ShardedScheduler:
     def push(self, req: Request, host: Optional[int] = None) -> None:
         """Local arrival at its home host (its ARRIVE delta enters the
         transport once the clock reaches arrival_step; visible
-        cluster-wide at arrival_step + gossip_delay)."""
+        cluster-wide at arrival_step + gossip_delay).
+
+        Queue-integrity violations raise real exceptions (never bare
+        asserts, which ``python -O`` strips): a duplicate rid would
+        corrupt the replicated pending map and every downstream FIFO
+        property."""
         if host is not None:
             req.home = host
-        assert 0 <= req.home < self.n_hosts
-        assert req.rid not in self._requests, f"rid {req.rid} pushed twice"
+        if not 0 <= req.home < self.n_hosts:
+            raise ValueError(
+                f"rid {req.rid}: home {req.home} outside "
+                f"[0, {self.n_hosts})")
+        if req.rid in self._requests:
+            raise ValueError(f"rid {req.rid} pushed twice")
+        if any(r is not None and r.rid == req.rid
+               for r in self._occupant):
+            raise ValueError(
+                f"rid {req.rid} pushed while already admitted")
         self._requests[req.rid] = req
         self._unsent[req.rid] = req
 
@@ -408,17 +495,28 @@ class ShardedScheduler:
                 if h not in self._dead_local]
 
     # ------------------------------------------------------------------
+    def _eff_arrival(self, req: Request) -> int:
+        """Arrival step after any injected surge compression — the step
+        the ARRIVE delta carries, so the compressed traffic is the FIFO
+        key everywhere (engine, sim, both transports)."""
+        if self.failpoints is None:
+            return req.arrival_step
+        return self.failpoints.effective_arrival(req.arrival_step)
+
     def _flush_arrivals(self, now: int) -> None:
-        due = [r for r in self._unsent.values() if r.arrival_step <= now]
+        due = [r for r in self._unsent.values()
+               if self._eff_arrival(r) <= now]
         for r in due:
             if r.home in self._dead_local:
                 # the front door never routes new arrivals to a dead
                 # host: reroute deterministically to the lowest survivor
                 r.home = self.live_hosts[0]
-        for r in sorted(due, key=lambda r: (r.arrival_step, r.home,
+        for r in sorted(due, key=lambda r: (self._eff_arrival(r), r.home,
                                             r.rid)):
-            self.transport.send(Delta(ARRIVE, r.arrival_step, r.home,
-                                      r.rid))
+            # the slot lane of an ARRIVE delta replicates the deadline
+            # (-1 = none) — see control.apply_deltas
+            self.transport.send(Delta(ARRIVE, self._eff_arrival(r),
+                                      r.home, r.rid, r.deadline_step))
             del self._unsent[r.rid]
 
     def kill_host(self, host: int, now: int) -> None:
@@ -458,6 +556,11 @@ class ShardedScheduler:
         if delivered:
             self.state = control_lib.apply_deltas(self.state, delivered)
             self._reconcile_membership(now)
+        if self.policy is not None and self._policy_stepped != now:
+            # once per clock tick (begin_step is re-entrant): sheds
+            # first, then the pressure sample reflects the bounded queue
+            self._policy_stepped = now
+            self._apply_policy(now)
         self._stepped_at = now
         if self.compact_threshold is None:
             return None
@@ -500,6 +603,47 @@ class ShardedScheduler:
             self.log.host_down(now, h, self.state.epoch)
             self._new_host_downs.append((h, reclaimed))
 
+    def _apply_policy(self, now: int) -> None:
+        """The overload pass (DESIGN.md §14): shed expired / over-bound
+        queued requests, then step the degrade ladder on the windowed
+        pressure signal.  Every decision is a pure function of
+        (replicated state, now, policy) — replicas compute identical
+        sheds and identical stage moves with nothing transported, the
+        same argument as plan_compaction."""
+        sheds = admission_lib.compute_sheds(
+            self.state.pending, self.state.deadlines, now, self.policy)
+        if sheds:
+            homes = {rid: self.state.pending[rid][1]
+                     for rid, _ in sheds}
+            control_lib.commit_sheds(self.state,
+                                     [rid for rid, _ in sheds])
+            for rid, reason in sheds:
+                req = self._requests.pop(rid, None)
+                if req is None:
+                    raise RuntimeError(
+                        f"shed rid {rid} unknown to the orchestrator")
+                req.shed = True
+                req.finish_step = now
+                self.log.shed(now, rid, reason, homes[rid])
+                self._new_sheds.append(req)
+        live_slots = self.slots_per_host * sum(self.state.live)
+        self._pressure.append(admission_lib.pressure(
+            len(self.state.pending), live_slots))
+        new = admission_lib.plan_stage(self._pressure, self.policy,
+                                       self.degrade_stage)
+        if new != self.degrade_stage:
+            self.log.degrade(now, self.degrade_stage, new)
+            self._new_stages.append((self.degrade_stage, new))
+            self.degrade_stage = new
+
+    def drain_sheds(self) -> List[Request]:
+        out, self._new_sheds = self._new_sheds, []
+        return out
+
+    def drain_stage_changes(self) -> List[Tuple[int, int]]:
+        out, self._new_stages = self._new_stages, []
+        return out
+
     def drain_kills(self) -> List[int]:
         out, self._new_kills = self._new_kills, []
         return out
@@ -525,11 +669,15 @@ class ShardedScheduler:
         the owning HostShard records the event."""
         if self._stepped_at != now:
             # direct callers (no data plane) may skip begin_step; with
-            # compaction enabled the caller MUST begin_step first, or the
-            # data plane would miss the remap
-            assert self.compact_threshold is None, (
-                "begin_step(now) must run before admit(now) when "
-                "compaction is enabled")
+            # compaction or an admission policy enabled the caller MUST
+            # begin_step first, or the data plane would miss the remap /
+            # the shed+degrade pass (a real exception — queue integrity
+            # must survive ``python -O``)
+            if (self.compact_threshold is not None
+                    or self.policy is not None):
+                raise RuntimeError(
+                    "begin_step(now) must run before admit(now) when "
+                    "compaction or an admission policy is enabled")
             self.begin_step(now)
         admitted = []
         for gslot, rid in control_lib.compute_admissions(self.state):
@@ -589,8 +737,8 @@ class ShardedScheduler:
             # its victims at visibility — the clock must reach it
             cands = [c for c in evs if c > now]
             return min(cands) if cands else None
-        ready_at = min(self.transport.arrive_visibility(r.arrival_step)
-                       for r in self._requests.values())
+        ready_at = min(self.transport.arrive_visibility(
+            self._eff_arrival(r)) for r in self._requests.values())
         if ready_at <= now and any(v <= now for v in evs):
             return now
         cands = [c for c in [ready_at] + evs if c > now]
@@ -642,6 +790,12 @@ class ScheduleClient:
         """``host``'s death became visible; ``reqs`` were reclaimed and
         re-queued.  The data plane may scrub the dead range."""
 
+    def set_stage(self, stage: int) -> None:
+        """The degrade ladder moved to ``stage`` (DESIGN.md §14): the
+        data plane swaps to that stage's PRE-BUILT decode callable —
+        a jit swap, never a compile (the model-free sim ignores it;
+        degradation is schedule-invariant by design)."""
+
 
 def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
                  stats: Optional[ServeStats] = None) -> ServeStats:
@@ -660,6 +814,10 @@ def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
             stats.host_downs += 1
             stats.requeued += len(reqs)
             client.host_down(host, reqs)
+        stats.sheds += len(sched.drain_sheds())
+        for _, stage in sched.drain_stage_changes():
+            stats.degrades += 1
+            client.set_stage(stage)
         if perm is not None:
             stats.compactions += 1
             client.compact(perm)
@@ -706,7 +864,11 @@ def run_schedule(sched: ShardedScheduler, client: ScheduleClient,
         stats.decode_steps += 1
         stats.slot_steps_total += sched.n_slots
         stats.slot_steps_active += sched.n_active
-        now += 1
+        # an injected slow_decode makes each decode step cost N clock
+        # ticks: arrivals pile up during the slow steps, which is what
+        # drives the pressure signal in the overload drills
+        now += (sched.failpoints.decode_cost(now)
+                if sched.failpoints is not None else 1)
         for gslot, req in list(sched.active.items()):
             tok = toks[gslot]
             req.tokens.append(tok)
@@ -758,6 +920,8 @@ def simulate_sharded_schedule(per_host: List[List[Request]],
                               *, transport: Optional[Transport] = None,
                               compact_threshold: Optional[float] = None,
                               failpoints: Optional[FailPlan] = None,
+                              admission_policy: Optional[AdmissionPolicy]
+                              = None,
                               ) -> Tuple[ShardedScheduler, ServeStats]:
     """Model-free replay of the sharded engine's schedule — the SAME
     ``run_schedule`` loop over placeholder tokens, so the engine's event
@@ -770,7 +934,8 @@ def simulate_sharded_schedule(per_host: List[List[Request]],
     sched = ShardedScheduler(len(per_host), slots_per_host, gossip_delay,
                              transport=transport,
                              compact_threshold=compact_threshold,
-                             failpoints=failpoints)
+                             failpoints=failpoints,
+                             admission_policy=admission_policy)
     sched.push_workloads(per_host)
     stats = run_schedule(sched, _SimClient(failpoints))
     return sched, stats

@@ -60,6 +60,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import sharding as sharding_lib
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tf
+from repro.serving.admission import AdmissionPolicy
 from repro.serving.control import (CollectiveTransport, SimTransport,
                                    Transport)
 from repro.serving import engine as engine_lib
@@ -77,6 +78,7 @@ class _PoolClient(ScheduleClient):
 
     def __init__(self, engine: "ShardedEngine"):
         self.e = engine
+        self.stage = 0        # current degrade stage (DESIGN.md §14)
         self.tokens = np.zeros((engine.n_slots, 1), np.int32)
         self.pos = np.zeros((engine.n_slots,), np.int32)
         self.active = np.zeros((engine.n_slots,), bool)
@@ -109,7 +111,7 @@ class _PoolClient(ScheduleClient):
 
     def decode(self, active_map: Dict[int, Request]) -> Dict[int, int]:
         e = self.e
-        out = e._decode(
+        out = e._stage_decodes[self.stage](
             e.params,
             jax.device_put(jnp.asarray(self.tokens), e._tok_sharding),
             self.caches,
@@ -118,6 +120,14 @@ class _PoolClient(ScheduleClient):
         self.caches = out["caches"]
         ids = np.asarray(out["topk_ids"][:, 0])
         return {gslot: int(ids[gslot]) for gslot in active_map}
+
+    def set_stage(self, stage: int) -> None:
+        if stage not in self.e._stage_decodes:
+            raise RuntimeError(
+                f"sharded pool: degrade stage {stage} was not pre-built "
+                "— construct the ShardedEngine with the run's "
+                "admission_policy (DESIGN.md §14)")
+        self.stage = stage
 
     def advance_slot(self, gslot: int, req: Request, tok: int) -> None:
         self.tokens[gslot, 0] = tok
@@ -182,7 +192,8 @@ class ShardedEngine:
                  transport: Union[str, Transport] = "sim",
                  compact_threshold: Optional[float] = None,
                  collective_capacity: int = 8,
-                 failpoints=None):
+                 failpoints=None,
+                 admission_policy: Optional[AdmissionPolicy] = None):
         if not Engine.supports(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: sharded serving covers the same decoder-only "
@@ -202,6 +213,7 @@ class ShardedEngine:
         self.compact_threshold = compact_threshold
         self.collective_capacity = collective_capacity
         self.failpoints = failpoints if failpoints else None
+        self.admission_policy = admission_policy
 
         # decode-pool weights: explicitly replicated across the mesh so
         # every per-step input is committed and the step compiles once
@@ -248,6 +260,19 @@ class ShardedEngine:
             out_shardings={"caches": self._pool_shardings,
                            "topk_scores": self._tok_sharding,
                            "topk_ids": self._tok_sharding})
+        # degrade ladder (DESIGN.md §14): pre-built narrower-top-k decode
+        # jits, same donation and sharding pins as the stage-0 step so a
+        # DEGRADE/RESTORE is a dict lookup — never a compile, never a
+        # layout change
+        self._stage_decodes = engine_lib.build_stage_decodes(
+            self._decode, topk, admission_policy,
+            lambda k: jax.jit(
+                steps_lib.make_slot_decode_step(cfg, topk=k,
+                                                dist=self.dist),
+                donate_argnums=(2,),
+                out_shardings={"caches": self._pool_shardings,
+                               "topk_scores": self._tok_sharding,
+                               "topk_ids": self._tok_sharding}))
         self._insert = steps_lib.make_sharded_insert(
             self._pool_specs, self.dist, slots_per_host)
         self._compact = steps_lib.make_compact_pool(
@@ -281,6 +306,7 @@ class ShardedEngine:
             transport: Union[str, Transport, None] = None,
             compact_threshold: Union[float, None, str] = "default",
             failpoints="default",
+            admission_policy="default",
             ) -> Tuple[Dict[int, Request], ServeStats]:
         """Serve per-host arrival streams through the transported pool.
 
@@ -293,6 +319,15 @@ class ShardedEngine:
         """
         fp = self.failpoints if failpoints == "default" else (
             failpoints if failpoints else None)
+        pol = (self.admission_policy if admission_policy == "default"
+               else admission_policy)
+        if pol is not None and pol.max_stage > 0 \
+                and self.admission_policy is None:
+            raise RuntimeError(
+                "run() got an admission_policy with degrade stages but "
+                "the engine was built without one — stage decode jits "
+                "are PRE-BUILT at construction (DESIGN.md §14); pass "
+                "admission_policy to ShardedEngine(...)")
         # the prefill pool consults the run's plan (it is engine-owned,
         # so re-point it per run; None restores fault-free behavior)
         self.prefill_pool.failpoints = fp
@@ -303,7 +338,8 @@ class ShardedEngine:
             compact_threshold=(self.compact_threshold
                                if compact_threshold == "default"
                                else compact_threshold),
-            failpoints=fp)
+            failpoints=fp,
+            admission_policy=pol)
         sched.push_workloads(per_host_requests)
         client = _PoolClient(self)
         t0 = time.perf_counter()

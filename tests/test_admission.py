@@ -1,0 +1,238 @@
+"""Unit tests for the overload policy layer (DESIGN.md §14).
+
+All JAX-free: admission.py is pure python by design (like control.py),
+so the policy math — shed decisions, the pressure ladder, the stage
+width contract — and the promoted queue-integrity exceptions are pinned
+here without touching a device.  The engine-level behaviour (stage jit
+swaps, bit-identical served tokens, the chaos drill) lives in
+test_serving.py / test_retrieval.py / test_serving_multihost.py.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import control as control_lib
+from repro.serving.admission import (MAX_STAGE, SHED_DEADLINE,
+                                     SHED_QUEUE_FULL, STAGE_MIN,
+                                     STAGE_NARROW, STAGE_NORMAL,
+                                     AdmissionPolicy, compute_sheds,
+                                     plan_stage, pressure, slo_attainment,
+                                     stage_topk)
+from repro.serving.loadgen import LoadSpec, host_stream, overload_workload
+from repro.serving.scheduler import (Request, RequestQueue,
+                                     ShardedScheduler)
+
+
+def _req(rid, arrival=0, home=0, max_gen=2, deadline=-1):
+    return Request(rid=rid, prompt=np.zeros((2,), np.int32),
+                   max_gen=max_gen, arrival_step=arrival, home=home,
+                   deadline_step=deadline)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionPolicy validation (LoadSpec-style: fail at construction)
+# ---------------------------------------------------------------------------
+
+def test_policy_validates_at_construction():
+    AdmissionPolicy()                       # defaults are valid
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        AdmissionPolicy(max_queue_depth=0)
+    with pytest.raises(ValueError, match="pressure_window"):
+        AdmissionPolicy(pressure_window=0)
+    with pytest.raises(ValueError, match="degrade_lo"):
+        AdmissionPolicy(degrade_lo=2.0, degrade_hi=1.0)
+    with pytest.raises(ValueError, match="degrade_lo"):
+        AdmissionPolicy(degrade_lo=0.0)
+    with pytest.raises(ValueError, match="restore_below"):
+        AdmissionPolicy(degrade_lo=0.5, restore_below=0.6)
+    with pytest.raises(ValueError, match="max_stage"):
+        AdmissionPolicy(max_stage=MAX_STAGE + 1)
+    with pytest.raises(ValueError, match="degraded_topk"):
+        AdmissionPolicy(degraded_topk=0)
+
+
+# ---------------------------------------------------------------------------
+# compute_sheds: the deterministic shed function
+# ---------------------------------------------------------------------------
+
+def test_deadline_sheds_only_past_deadline():
+    pending = {1: (0, 0), 2: (1, 0), 3: (2, 1)}
+    deadlines = {1: 4, 2: 9}                # rid 3 has no deadline
+    pol = AdmissionPolicy()
+    assert compute_sheds(pending, deadlines, now=4, policy=pol) == []
+    assert compute_sheds(pending, deadlines, now=5, policy=pol) == \
+        [(1, SHED_DEADLINE)]
+    assert compute_sheds(pending, deadlines, now=50, policy=pol) == \
+        [(1, SHED_DEADLINE), (2, SHED_DEADLINE)]
+
+
+def test_queue_bound_keeps_fifo_first_per_home():
+    # home 0 queues rids 1,2,5 (arrivals 0,1,2); home 1 queues 3,4
+    pending = {1: (0, 0), 2: (1, 0), 5: (2, 0), 3: (0, 1), 4: (3, 1)}
+    pol = AdmissionPolicy(max_queue_depth=2)
+    sheds = compute_sheds(pending, {}, now=10, policy=pol)
+    # the latest arrival of the over-bound home is shed; home 1 is at
+    # its bound and keeps both
+    assert sheds == [(5, SHED_QUEUE_FULL)]
+    # a deadline shed frees a queue position BEFORE the bound applies
+    sheds = compute_sheds(pending, {1: 3}, now=10, policy=pol)
+    assert sheds == [(1, SHED_DEADLINE)]
+
+
+def test_sheds_are_rid_sorted_and_pure():
+    pending = {9: (5, 0), 4: (0, 0), 7: (1, 0)}
+    pol = AdmissionPolicy(max_queue_depth=1)
+    a = compute_sheds(pending, {9: 2}, now=6, policy=pol)
+    b = compute_sheds(dict(reversed(pending.items())), {9: 2}, now=6,
+                      policy=pol)
+    assert a == b == [(7, SHED_QUEUE_FULL), (9, SHED_DEADLINE)]
+    assert [rid for rid, _ in a] == sorted(rid for rid, _ in a)
+
+
+# ---------------------------------------------------------------------------
+# the degrade ladder
+# ---------------------------------------------------------------------------
+
+def test_stage_topk_width_contract():
+    pol = AdmissionPolicy(degraded_topk=2)
+    assert stage_topk(8, STAGE_NORMAL, pol) == 8
+    assert stage_topk(8, STAGE_NARROW, pol) == 4
+    assert stage_topk(8, STAGE_MIN, pol) == 2
+    assert stage_topk(1, STAGE_NARROW, pol) == 1     # never below 1
+    assert stage_topk(1, STAGE_MIN, pol) == 1        # capped at topk
+    with pytest.raises(ValueError, match="unknown degrade stage"):
+        stage_topk(8, MAX_STAGE + 1, pol)
+
+
+def test_ladder_escalates_one_stage_per_tick_with_hysteresis():
+    pol = AdmissionPolicy(pressure_window=2, degrade_lo=1.0,
+                          degrade_hi=2.0, restore_below=0.5)
+    # window not yet full: never move
+    assert plan_stage([9.0], pol, STAGE_NORMAL) == STAGE_NORMAL
+    # above hi the target is stage 2, but moves are one step per tick
+    assert plan_stage([2.5, 2.5], pol, STAGE_NORMAL) == STAGE_NARROW
+    assert plan_stage([2.5, 2.5], pol, STAGE_NARROW) == STAGE_MIN
+    assert plan_stage([2.5, 2.5], pol, STAGE_MIN) == STAGE_MIN
+    # between restore_below and lo: hold (hysteresis, no flap)
+    assert plan_stage([0.8, 0.8], pol, STAGE_NARROW) == STAGE_NARROW
+    # at/below restore_below: restore one stage per tick
+    assert plan_stage([0.4, 0.4], pol, STAGE_MIN) == STAGE_NARROW
+    assert plan_stage([0.4, 0.4], pol, STAGE_NARROW) == STAGE_NORMAL
+    # max_stage=0 disables the ladder outright
+    off = AdmissionPolicy(max_stage=0)
+    assert plan_stage([99.0] * 4, off, STAGE_NORMAL) == STAGE_NORMAL
+
+
+def test_pressure_and_slo_arithmetic():
+    assert pressure(0, 8) == 0.0
+    assert pressure(8, 8) == 1.0
+    assert pressure(3, 0) == 3.0             # all hosts dead: max live=1
+    assert slo_attainment(9, 12) == 0.75
+    assert slo_attainment(0, 0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# overload_workload: validated, pure in (seed, host), ramp baked in
+# ---------------------------------------------------------------------------
+
+def test_overload_workload_validates_and_compresses():
+    spec = LoadSpec(n_requests=6, vocab=64, rate=0.7, seed=3)
+    with pytest.raises(ValueError, match="surge_start"):
+        overload_workload(spec, 2, surge_start=-1, surge_factor=2)
+    with pytest.raises(ValueError, match="surge_factor"):
+        overload_workload(spec, 2, surge_start=0, surge_factor=1)
+    with pytest.raises(ValueError, match="deadline_slack"):
+        overload_workload(spec, 2, surge_start=0, surge_factor=2,
+                          deadline_slack=0)
+
+    s0 = 4
+    wl = overload_workload(spec, 2, surge_start=s0, surge_factor=3,
+                           deadline_slack=5)
+    plain = [host_stream(spec, h, 2) for h in range(2)]
+    for hosts, base in zip(wl, plain):
+        for r, b in zip(hosts, base):
+            # pre-surge arrivals untouched; later ones 3x-compressed
+            want = (b.arrival_step if b.arrival_step < s0
+                    else s0 + (b.arrival_step - s0) // 3)
+            assert r.arrival_step == want
+            assert r.deadline_step == r.arrival_step + 5
+            assert r.rid == b.rid and r.home == b.home
+    # pure in (seed, host): a replay is identical
+    again = overload_workload(spec, 2, surge_start=s0, surge_factor=3,
+                              deadline_slack=5)
+    assert [(r.rid, r.arrival_step, r.deadline_step)
+            for hs in wl for r in hs] == \
+        [(r.rid, r.arrival_step, r.deadline_step)
+         for hs in again for r in hs]
+    # no deadline_slack -> no deadlines
+    free = overload_workload(spec, 2, surge_start=0, surge_factor=2)
+    assert all(r.deadline_step < 0 for hs in free for r in hs)
+
+
+# ---------------------------------------------------------------------------
+# promoted exceptions on the admission path (the PR 10 bugfix satellite:
+# bare asserts vanish under ``python -O`` — queue integrity must not)
+# ---------------------------------------------------------------------------
+
+def test_push_rejects_bad_home_duplicate_and_readmission():
+    sched = ShardedScheduler(n_hosts=2, slots_per_host=1, gossip_delay=0)
+    sched.push(_req(0, home=0))
+    with pytest.raises(ValueError, match="outside"):
+        sched.push(_req(1, home=5))
+    with pytest.raises(ValueError, match="pushed twice"):
+        sched.push(_req(0, home=0))
+    sched.begin_step(0)
+    admitted = sched.admit(0)
+    assert [r.rid for r in admitted] == [0]
+    with pytest.raises(ValueError, match="already admitted"):
+        sched.push(_req(0, home=0))
+
+
+def test_admit_requires_begin_step_when_policy_enabled():
+    sched = ShardedScheduler(n_hosts=1, slots_per_host=1, gossip_delay=0,
+                             admission_policy=AdmissionPolicy())
+    sched.push(_req(0))
+    with pytest.raises(RuntimeError, match="begin_step"):
+        sched.admit(0)
+    # without policy or compaction the old implicit begin_step stands
+    plain = ShardedScheduler(n_hosts=1, slots_per_host=1, gossip_delay=0)
+    plain.push(_req(0))
+    assert [r.rid for r in plain.admit(0)] == [0]
+
+
+def test_request_queue_remove_raises_on_unknown_rid():
+    q = RequestQueue([_req(0), _req(1)])
+    assert [r.rid for r in q.remove([1])] == [1]
+    with pytest.raises(RuntimeError, match=r"\[1, 7\]"):
+        q.remove([0, 1, 7])
+    assert len(q) == 1                      # failed remove mutated nothing
+
+
+def test_commit_sheds_raises_on_not_queued_rid():
+    state = control_lib.ControlState.fresh(n_hosts=1, slots_per_host=2)
+    state.pending[3] = (0, 0)
+    state.deadlines[3] = 9
+    control_lib.commit_sheds(state, [3])
+    assert 3 not in state.pending and 3 not in state.deadlines
+    with pytest.raises(RuntimeError, match="not queued"):
+        control_lib.commit_sheds(state, [3])
+
+
+def test_arrive_twice_raises_in_apply_deltas():
+    state = control_lib.ControlState.fresh(n_hosts=1, slots_per_host=1)
+    d = control_lib.Delta(control_lib.ARRIVE, 0, 0, 7, slot=-1)
+    state = control_lib.apply_deltas(state, [d])
+    with pytest.raises(RuntimeError, match="arrived twice"):
+        control_lib.apply_deltas(state, [d])
+
+
+def test_arrive_delta_replicates_deadline_into_digest():
+    """The ARRIVE slot lane carries deadline_step: two states differing
+    only in a deadline must produce different control digests (the
+    divergence check covers the shed inputs)."""
+    mk = lambda dl: control_lib.apply_deltas(
+        control_lib.ControlState.fresh(n_hosts=1, slots_per_host=1),
+        [control_lib.Delta(control_lib.ARRIVE, 0, 0, 7, slot=dl)])
+    a, b, c = mk(5), mk(6), mk(5)
+    assert control_lib.control_digest(a) == control_lib.control_digest(c)
+    assert control_lib.control_digest(a) != control_lib.control_digest(b)
+    assert a.deadlines == {7: 5}

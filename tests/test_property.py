@@ -507,6 +507,109 @@ def test_chaos_recovery_under_random_kills(
 
 
 @given(
+    n_hosts=st.integers(2, 4),
+    slots_per_host=st.integers(1, 3),
+    gossip_delay=st.integers(0, 2),
+    surge_factor=st.integers(2, 4),
+    surge_step=st.integers(0, 6),
+    slow=st.integers(0, 3),              # <2 = no slow_decode injected
+    deadline_slack=st.integers(1, 6),
+    max_depth=st.one_of(st.none(), st.integers(1, 3)),
+    arrivals=st.lists(
+        st.tuples(st.integers(0, 15),    # arrival step
+                  st.integers(0, 3),     # home host (mod n_hosts)
+                  st.integers(1, 6)),    # lifetime (max_gen)
+        min_size=1, max_size=16),
+)
+@settings(max_examples=50, deadline=None)
+def test_overload_shed_determinism_sim_vs_collective(
+        n_hosts, slots_per_host, gossip_delay, surge_factor, surge_step,
+        slow, deadline_slack, max_depth, arrivals):
+    """ISSUE 10 overload sweep — for ANY topology, gossip delay, surge /
+    slow_decode injection, deadline slack and queue bound:
+
+    * every request reaches exactly one terminal state: completed
+      (admitted, served to max_gen) or SHED (never admitted, zero
+      tokens) — never both, never neither;
+    * the shed decision is a pure function of replicated state: the
+      collective transport sheds the IDENTICAL rid set at the identical
+      steps as the simulated gossip (merged log, per-host logs, stats);
+    * FIFO holds among the non-shed requests: admissions follow the
+      replicated (effective_arrival, home, rid) queue key — shedding
+      removes entries but never reorders the survivors;
+    * the slot log replays soundly (sheds vacate no slot).
+    """
+    from repro.serving.admission import AdmissionPolicy
+    from repro.serving.control import CollectiveTransport
+    from repro.serving.failpoints import FailPlan
+    from repro.serving.scheduler import Request, simulate_sharded_schedule
+
+    def workload():
+        per_host = [[] for _ in range(n_hosts)]
+        for i, (a, h, life) in enumerate(arrivals):
+            per_host[h % n_hosts].append(
+                Request(rid=i, prompt=np.zeros((2,), np.int32),
+                        max_gen=life, arrival_step=a, home=h % n_hosts,
+                        deadline_step=a + deadline_slack))
+        return per_host
+
+    spec = f"surge:{surge_factor}@{surge_step}"
+    if slow >= 2:
+        spec += f",slow_decode:{slow}@{surge_step + 1}"
+    plan = FailPlan.parse(spec)
+    policy = AdmissionPolicy(max_queue_depth=max_depth, pressure_window=2,
+                             degrade_lo=0.25, degrade_hi=0.5,
+                             restore_below=0.1)
+
+    wl = workload()
+    sk, stk = simulate_sharded_schedule(wl, slots_per_host, gossip_delay,
+                                        failpoints=plan,
+                                        admission_policy=policy)
+    reqs = [r for reqs in wl for r in reqs]
+    assert all(r.done for r in reqs), "request left non-terminal"
+    shed = {r.rid for r in reqs if r.shed}
+    completed = {r.rid for r in reqs
+                 if r.done and not r.shed and not r.rejected}
+    assert not (shed & completed)
+    assert shed | completed == {r.rid for r in reqs}, "request lost"
+    # a shed request was NEVER served: not admitted, zero tokens
+    for r in reqs:
+        if r.shed:
+            assert r.admitted_step < 0 and not r.tokens, r.rid
+        else:
+            assert r.admitted_step >= 0 and len(r.tokens) == r.max_gen
+    assert stk.rejects == 0            # no prefill faults in the plan
+    assert stk.sheds == len(shed) == len(sk.sheds)
+    assert shed == {rid for _, rid, _, _ in sk.sheds}
+
+    # FIFO among the non-shed: admission seq order follows the
+    # replicated queue key (surge compression IS the key — DESIGN.md §14)
+    eff = {r.rid: (plan.effective_arrival(r.arrival_step), r.home, r.rid)
+           for r in reqs}
+    admitted = sorted(((seq, rid) for _, _, rid, seq in sk.admissions))
+    keys = [eff[rid] for _, rid in admitted]
+    assert keys == sorted(keys), "shedding reordered survivors"
+    assert {rid for _, rid in admitted} == completed
+
+    from conftest import assert_slot_log_sound
+    assert_slot_log_sound(sk, sk.n_slots)
+
+    # the collective transport replays the identical overload schedule
+    sc, stc = simulate_sharded_schedule(
+        workload(), slots_per_host, gossip_delay,
+        transport=CollectiveTransport(n_hosts, gossip_delay, capacity=16),
+        failpoints=plan, admission_policy=policy)
+    assert sk.sheds == sc.sheds
+    assert sk.degrades == sc.degrades
+    assert (sk.admissions, sk.releases, sk.rejects) == \
+        (sc.admissions, sc.releases, sc.rejects)
+    assert stk == stc
+    for ha, hb in zip(sk.hosts, sc.hosts):
+        assert (ha.admissions, ha.releases, ha.sheds) == \
+            (hb.admissions, hb.releases, hb.sheds)
+
+
+@given(
     occupied=st.lists(st.booleans(), min_size=1, max_size=24),
     slots_per_host=st.integers(1, 6),
     threshold=st.floats(0.0, 1.0),

@@ -167,6 +167,54 @@ def test_kind_guards():
         engine.run([lm])
 
 
+def test_retrieval_degradation_serves_bit_identical_prefixes(served):
+    """ISSUE 10 on the retrieval engine: under overload the degrade
+    ladder narrows the served top-k width — every degraded request's
+    ``topk_ids`` must be a BIT-identical prefix of the undegraded run's
+    (the pinned lowest-id tie-break contract), sheds never serve, and no
+    stage transition compiles a new recover executable."""
+    from repro.serving import AdmissionPolicy, FailPlan
+    from repro.serving.admission import STAGE_NORMAL, stage_topk
+
+    rcfg, params, _, res_a, _, _, _ = served
+    load = RetrievalLoadSpec(n_requests=10, catalog=rcfg.d,
+                             c_max=rcfg.c_max, rate=2.0, seed=0)
+    wl = [r.fresh_copy() for r in retrieval_workload(load)]
+    for r in wl:
+        r.deadline_step = r.arrival_step + 6
+    policy = AdmissionPolicy(max_queue_depth=2, pressure_window=2,
+                             degrade_lo=0.25, degrade_hi=0.5,
+                             restore_below=0.1)
+    engine = RetrievalEngine(
+        rcfg, params, n_slots=2,
+        failpoints=FailPlan.parse("surge:3@1,slow_decode:3@2"),
+        admission_policy=policy)
+    res, st = engine.run(wl)
+
+    assert st.sheds > 0, "surge shed nothing — vacuous"
+    assert st.degrades >= 1, "pressure never degraded the pool"
+    widths = set()
+    for rid, r in res.items():
+        assert r.done, rid
+        if r.shed:
+            assert r.admitted_step < 0 and not r.topk_ids, rid
+            continue
+        k = len(r.topk_ids)
+        widths.add(k)
+        assert r.topk_ids == res_a[rid].topk_ids[:k], (
+            f"req {rid}: degraded top-{k} is not a prefix of the "
+            f"undegraded top-{rcfg.topk}")
+    assert len(widths) > 1, "no request served at a narrowed width"
+    assert widths <= {stage_topk(rcfg.topk, s, policy)
+                      for s in range(policy.max_stage + 1)}
+    # zero recompiles across the whole ladder; program ends restored
+    for stage, fn in engine.program._stage_decodes.items():
+        assert fn._cache_size() <= 1, f"stage {stage} recompiled"
+    assert engine.program._stage_decodes[STAGE_NORMAL]._cache_size() == 1
+    assert engine.program._stage == STAGE_NORMAL
+    assert_slot_log_sound(engine._sched, engine.n_slots)
+
+
 def test_retrieval_rejects_oversized_item_sets():
     rcfg = get_retrieval_config("smoke")
     engine = RetrievalEngine(rcfg, init_retrieval_params(rcfg), n_slots=2)

@@ -196,6 +196,72 @@ def test_engine_prefill_retry_and_reject_via_failpoints(served):
     assert_slot_log_sound(engine._sched, N_SLOTS)
 
 
+def test_overload_sheds_and_degrades_without_recompiling(served):
+    """ISSUE 10 on the single-host engine: a surge + slow_decode plan
+    overloads the pool under an AdmissionPolicy; expired/over-bound
+    requests are SHED (never admitted, zero tokens), every SERVED
+    request's tokens stay bit-identical to the unloaded solo baseline
+    (degradation narrows the served top-k; the next token is the top-1
+    id, invariant under the width), the ladder escalates AND restores,
+    and no DEGRADE/RESTORE ever compiles a new decode executable."""
+    from repro.serving import AdmissionPolicy, FailPlan
+    from repro.serving.admission import STAGE_NORMAL
+
+    cfg = served["cfg"]
+    baseline = served["solo_tokens"]
+    policy = AdmissionPolicy(max_queue_depth=2, pressure_window=2,
+                             degrade_lo=0.25, degrade_hi=0.5,
+                             restore_below=0.1)
+    engine = Engine(cfg, served["engine"].params, n_slots=N_SLOTS,
+                    max_len=MAX_LEN, topk=4,
+                    failpoints=FailPlan.parse("surge:3@1,slow_decode:3@2"),
+                    admission_policy=policy)
+    workload = mixed_length_workload(cfg.vocab, 10, seed=0)
+    for r in workload:
+        r.deadline_step = r.arrival_step + 6
+    results, st = engine.run(workload)
+
+    shed = {rid for rid, r in results.items() if r.shed}
+    assert st.sheds == len(shed) > 0, "surge shed nothing — vacuous"
+    assert st.degrades >= 2, "ladder never escalated AND restored"
+    degr = engine._sched.degrades
+    assert any(new > old for _, old, new, _ in degr)
+    assert any(new < old for _, old, new, _ in degr)
+    assert len(engine._sched.sheds) == st.sheds
+    for rid, r in results.items():
+        assert r.done, rid
+        if r.shed:
+            assert r.admitted_step < 0 and r.tokens == [], rid
+        else:
+            assert r.tokens == baseline[rid], (
+                f"req {rid} token drift under degradation")
+    # zero recompiles: each pre-built stage executable compiled at most
+    # once; stage 0 exactly once; and the program ends restored
+    for stage, fn in engine.program._stage_decodes.items():
+        assert fn._cache_size() <= 1, f"stage {stage} recompiled"
+    assert engine.program._stage_decodes[STAGE_NORMAL]._cache_size() == 1
+    assert engine.program._stage == STAGE_NORMAL
+    from conftest import assert_slot_log_sound
+    assert_slot_log_sound(engine._sched, N_SLOTS)
+
+    # the identical (workload, plan, policy) replays the identical shed
+    # set and log — shed decisions are deterministic
+    twin_engine = Engine(cfg, served["engine"].params, n_slots=N_SLOTS,
+                         max_len=MAX_LEN, topk=4,
+                         failpoints=FailPlan.parse(
+                             "surge:3@1,slow_decode:3@2"),
+                         admission_policy=policy)
+    twin_wl = mixed_length_workload(cfg.vocab, 10, seed=0)
+    for r in twin_wl:
+        r.deadline_step = r.arrival_step + 6
+    twin_results, twin_st = twin_engine.run(twin_wl)
+    assert {rid for rid, r in twin_results.items() if r.shed} == shed
+    assert twin_engine._sched.sheds == engine._sched.sheds
+    assert twin_engine._sched.degrades == engine._sched.degrades
+    assert (twin_st.as_row(), twin_st.sheds, twin_st.degrades) == \
+        (st.as_row(), st.sheds, st.degrades)   # wall_s alone may differ
+
+
 def test_loadgen_is_deterministic():
     spec = LoadSpec(n_requests=20, vocab=128, rate=0.7, seed=123)
     a, b = make_workload(spec), make_workload(spec)
